@@ -1,0 +1,65 @@
+"""Shared helpers for the LP benchmarks (paper §7 experimental setup).
+
+Benchmark instances follow Appendix B; sizes are CPU-scaled versions of the
+paper's (25M-100M sources × 10k destinations, sparsity 1e-3) grid — the
+paper's own numbers are produced on 4×GPU; this container gets the same
+*shape* of experiment at sources ∈ {20k, 50k, 100k} × 1k destinations so a
+single CPU core finishes in minutes.  All solver settings are the paper's
+(γ=0.01, max-step 1e-3, init-step 1e-5) unless a figure says otherwise.
+"""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (InstanceSpec, SolveConfig, generate,
+                        MatchingObjective, Maximizer, precondition)
+from repro.core import baseline_numpy as bn
+
+
+@lru_cache(maxsize=8)
+def bench_instance(sources: int, destinations: int = 1000,
+                   nnz_per_row: float = 0.001, seed: int = 42):
+    """sparsity 0.001 of I per row (paper Table 2: ν = sparsity · I)."""
+    spec = InstanceSpec(
+        num_sources=sources, num_destinations=destinations,
+        avg_nnz_per_row=max(nnz_per_row * sources, 4.0), seed=seed)
+    lp_host = generate(spec)
+    return spec, lp_host
+
+
+def paper_config(iterations: int = 100, **kw) -> SolveConfig:
+    base = dict(iterations=iterations, gamma=0.01, max_step=1e-3,
+                initial_step=1e-5)
+    base.update(kw)
+    return SolveConfig(**base)
+
+
+def time_jax_iteration(lp, config, repeats: int = 3, use_pallas=False):
+    """Per-iteration wall time of the jitted solve (compile excluded)."""
+    lp = jax.tree.map(jnp.asarray, lp)
+    obj = MatchingObjective(lp, use_pallas=use_pallas)
+    mx = Maximizer(config)
+    res = mx.maximize(obj)                      # compile + run
+    jax.block_until_ready(res.lam)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = mx.maximize(obj)
+        jax.block_until_ready(res.lam)
+        times.append((time.perf_counter() - t0) / config.iterations)
+    return min(times), res
+
+
+def time_numpy_iteration(lp_host, config, max_iters: int = 2):
+    import dataclasses
+    csc = bn.from_slabs(lp_host)
+    cfg = dataclasses.replace(config, iterations=max_iters)
+    t0 = time.perf_counter()
+    _, hist = bn.solve(csc, cfg)
+    dt = time.perf_counter() - t0
+    return dt / len(hist["dual_obj"]), hist

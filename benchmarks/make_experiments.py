@@ -1,0 +1,80 @@
+"""Render the data-driven sections of EXPERIMENTS.md from dry-run JSONs +
+bench results.  Usage:
+    PYTHONPATH=src python -m benchmarks.make_experiments > /tmp/sections.md
+The hand-written narrative (§Perf iteration log etc.) lives in
+EXPERIMENTS.md directly; this tool regenerates the tables between the
+AUTOGEN markers.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from . import roofline_report
+
+RESULTS = roofline_report.RESULTS
+
+
+def dryrun_section() -> str:
+    out = ["## §Dry-run", ""]
+    for mesh, label in (("single", "single-pod 16x16 (256 chips)"),
+                        ("multipod", "multi-pod 2x16x16 (512 chips)")):
+        d = os.path.join(RESULTS, mesh)
+        if not os.path.isdir(d):
+            continue
+        cells = roofline_report.load_cells(mesh)
+        n_ok = sum(1 for c in cells if c["status"] == "OK")
+        n_skip = sum(1 for c in cells if c["status"] == "SKIP")
+        n_fail = sum(1 for c in cells if c["status"] == "FAIL")
+        out.append(f"### {label}: {n_ok} OK, {n_skip} SKIP (documented), "
+                   f"{n_fail} FAIL")
+        out.append("")
+        out.append("| cell | kind | compile (s) | HBM/dev (GB) | "
+                   "HLO GFLOPs/dev | HLO GB/dev | coll MB/dev | #coll |")
+        out.append("|---|---|---|---|---|---|---|---|")
+        for c in cells:
+            name = f"{c.get('arch')}/{c.get('shape')}"
+            if c["status"] == "SKIP":
+                out.append(f"| {name} | — | — | — | — | — | — | SKIP |")
+                continue
+            if c["status"] == "FAIL":
+                out.append(f"| {name} | — | — | — | — | — | — | **FAIL** |")
+                continue
+            coll_dev = (c["roofline"]["collective_bytes_global"]
+                        / c["n_devices"] / 1e6)
+            out.append(
+                f"| {name} | {c.get('kind','')} | {c['compile_s']:.0f} | "
+                f"{c['hbm_per_device_gb']:.2f} | "
+                f"{c['cost']['flops_per_device']/1e9:.1f} | "
+                f"{c['cost']['bytes_per_device']/1e9:.2f} | "
+                f"{coll_dev:.1f} | {c['collectives'].get('count', 0)} |")
+        out.append("")
+    return "\n".join(out)
+
+
+def roofline_section() -> str:
+    out = ["## §Roofline", ""]
+    out.append("Terms per assignment (TPU v5e: 197 TF/s bf16, 819 GB/s HBM, "
+               "50 GB/s/link ICI); HLO flops/bytes from the trip-count-aware "
+               "walker (launch/hlo_cost.py), MODEL_FLOPS = 6·N_active·D "
+               "(2·N_active·D for inference).")
+    out.append("")
+    for mesh in ("single", "multipod"):
+        if not os.path.isdir(os.path.join(RESULTS, mesh)):
+            continue
+        out.append(f"### mesh: {mesh}")
+        out.append("")
+        out.append(roofline_report.markdown_table(mesh))
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    print(dryrun_section())
+    print()
+    print(roofline_section())
+
+
+if __name__ == "__main__":
+    main()

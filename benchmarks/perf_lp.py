@@ -1,0 +1,86 @@
+"""§Perf hillclimb, cell 3: the LP solver iteration (the paper's technique).
+
+Unlike the LM cells (analyzed via compiled rooflines), the solver runs for
+real on this host, so each hypothesis is validated by measured wall-clock
+per-iteration time at I=100k × J=1k (and by checking the converged dual is
+unchanged).  Iterations:
+
+  it0  baseline: paper-faithful pipeline (bucketed slabs, 40-sweep bisection
+       projection, segment-sum gradient), jit-compiled.
+  it1  hypothesis: the projection's 40 masked clip+sum sweeps dominate the
+       per-iteration time (napkin: 40 sweeps x nnz ops vs ~6 sweeps for
+       everything else). change: bisection 40 -> 20 sweeps (τ precision
+       2^-20·range ≈ f32 noise here).  expect ~linear cut of projection time.
+  it2  hypothesis: a safeguarded-Newton threshold search needs ~1/3 the
+       sweeps of pure bisection on piecewise-linear f. change: kind
+       "boxcut_newton" (12 sweeps, bracket-safeguarded).
+  it3  hypothesis: two passes over a_vals (u = −(Aᵀλ+c)/γ, then gvals=a·x)
+       dominate memory traffic after it2; fusing them is what the Pallas
+       dual_grad kernel does on TPU — on CPU XLA already fuses, so expect
+       ~no change (refutation expected; documents why the kernel targets
+       TPU VMEM, not CPU cache).  change: use_pallas=False vs the fused
+       jnp expression ordering.
+
+Each row reports: us/iter, speedup vs baseline, and |Δdual| of the converged
+objective vs baseline (must be ~0 for accepted changes).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (MatchingObjective, Maximizer, SolveConfig,
+                        precondition)
+from .lp_common import bench_instance
+
+
+def _time_solve(lp, kind: str, proj_iters: int, iterations: int = 60,
+                repeats: int = 3, sorted_scatter: bool = False):
+    cfg = SolveConfig(iterations=iterations, gamma=0.01, max_step=1e-3,
+                      initial_step=1e-5)
+    obj = MatchingObjective(lp, proj_kind=kind, proj_iters=proj_iters,
+                            sorted_scatter=sorted_scatter)
+    mx = Maximizer(cfg)
+    res = mx.maximize(obj)
+    jax.block_until_ready(res.lam)
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = mx.maximize(obj)
+        jax.block_until_ready(res.lam)
+        best = min(best, (time.perf_counter() - t0) / iterations)
+    return best, float(res.stats.dual_obj[-1])
+
+
+def run(quick: bool = False):
+    I = 50_000 if quick else 100_000
+    spec, lp_host = bench_instance(I)
+    lp = jax.tree.map(jnp.asarray, lp_host)
+    lp, _ = precondition(lp, row_norm=True)
+
+    rows = []
+    t0, d0 = _time_solve(lp, "boxcut", 40)
+    rows.append({"name": "perf_lp/it0_baseline_bisect40",
+                 "us_per_call": t0 * 1e6,
+                 "derived": {"dual": d0, "speedup": 1.0}})
+    t1, d1 = _time_solve(lp, "boxcut", 20)
+    rows.append({"name": "perf_lp/it1_bisect20",
+                 "us_per_call": t1 * 1e6,
+                 "derived": {"dual": d1, "speedup": t0 / t1,
+                             "dual_drift_rel": abs(d1 - d0) / abs(d0)}})
+    t2, d2 = _time_solve(lp, "boxcut_newton", 12)
+    rows.append({"name": "perf_lp/it2_newton12",
+                 "us_per_call": t2 * 1e6,
+                 "derived": {"dual": d2, "speedup": t0 / t2,
+                             "dual_drift_rel": abs(d2 - d0) / abs(d0)}})
+    # it3: sorted-destination segmented sum replaces the random scatter-add
+    # (keeps it1's accepted bisect20)
+    t3, d3 = _time_solve(lp, "boxcut", 20, sorted_scatter=True)
+    rows.append({"name": "perf_lp/it3_bisect20_sorted_scatter",
+                 "us_per_call": t3 * 1e6,
+                 "derived": {"dual": d3, "speedup": t0 / t3,
+                             "dual_drift_rel": abs(d3 - d0) / abs(d0)}})
+    return rows

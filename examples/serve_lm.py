@@ -1,0 +1,54 @@
+"""Batched serving demo: the Engine drives prefill + decode over a request
+queue with greedy sampling and fixed-capacity batches.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-1.7b]
+
+Uses the REDUCED config (CPU-friendly); the full-scale serve_step is what
+the decode_* dry-run cells lower for the production meshes.
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving.engine import Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params, batch=args.batch, max_seq=args.max_seq)
+
+    requests = [
+        Request(prompt=[5, 17, 42], max_new=12),
+        Request(prompt=[9, 9, 9, 9], max_new=8),
+        Request(prompt=[100, 200], max_new=10),
+        Request(prompt=[7], max_new=6),
+        Request(prompt=[1, 2, 3, 4, 5], max_new=12),  # second batch
+    ]
+    t0 = time.perf_counter()
+    done = engine.generate(requests)
+    dt = time.perf_counter() - t0
+    total_new = sum(len(r.out) for r in done)
+    print(f"[{args.arch} reduced] served {len(done)} requests, "
+          f"{total_new} tokens in {dt:.1f}s "
+          f"({total_new / dt:.1f} tok/s incl. compile)")
+    for i, r in enumerate(done):
+        print(f"  req{i}: prompt={r.prompt} -> {r.out}")
+    # determinism check: same prompt alone reproduces batched output
+    again = engine.generate([Request(prompt=[5, 17, 42], max_new=12)])
+    assert again[0].out == done[0].out, "batch-composition must not matter"
+    print("batch-composition invariance: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Checkpointing: atomic step dirs, keep-last-k, auto-resume, elastic reshard.
+
+Fault-tolerance contract (DESIGN.md §6):
+  * atomic commit — state is written to  step_<n>.tmp/  and renamed; a crash
+    mid-write never corrupts the latest checkpoint;
+  * auto-resume  — restore_latest() scans for the newest committed step;
+  * elastic      — arrays are stored UNSHARDED (logical values) plus the mesh
+    metadata they were saved under; restore() device_puts onto whatever
+    sharding the caller passes, so a 256-chip checkpoint restores onto 512
+    chips (tested 1 <-> 8 virtual devices);
+  * iterator state (data stream step) and the RNG key ride along, so a
+    restart replays the exact batch sequence.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.dir = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save -----------------------------------------------------------
+    def save(self, step: int, state: Any, extra: Optional[Dict] = None):
+        tmp = os.path.join(self.dir, f"step_{step:010d}.tmp")
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(state)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        treedef = jax.tree_util.tree_structure(state)
+        meta = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_arrays": len(flat),
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        os.rename(tmp, final)        # atomic commit
+        self._prune()
+        return final
+
+    def _prune(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any,
+                shardings: Any = None) -> Tuple[Any, Dict]:
+        """Restore into the structure of `like`; device_put with `shardings`
+        (same pytree structure or None) — this is the elastic-reshard hook."""
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        flat_like = _flatten_paths(like)
+        leaves = []
+        for key, leaf in flat_like:
+            arr = data[key]
+            leaves.append(arr)
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s, l: jax.device_put(
+                    np.asarray(a).astype(l.dtype), s),
+                tree, shardings, like)
+        else:
+            tree = jax.tree.map(
+                lambda a, l: jax.numpy.asarray(np.asarray(a), l.dtype),
+                tree, like)
+        return tree, meta["extra"]
+
+    def restore_latest(self, like: Any, shardings: Any = None):
+        step = self.latest_step()
+        if step is None:
+            return None
+        tree, extra = self.restore(step, like, shardings)
+        return step, tree, extra
+
+
+def _flatten_paths(tree):
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out

@@ -1,0 +1,192 @@
+"""Distributed dual ascent — the paper's §6 pattern, SPMD-native (DESIGN.md §2).
+
+Paper (PyTorch/NCCL):                      This repo (JAX/TPU):
+  columns of 𝒯 partitioned per GPU    →     slab rows sharded over ("pod","data")
+  λ, b replicated on every device     →     λ, b replicated (or λ sharded on "model")
+  local grad contribution per rank    →     shard-local slab_contribution
+  reduce(SUM, rank0) of ∇g            →     psum over ("pod","data")
+  rank-0 AGD update                   →     replicated AGD update (identical math)
+  2× broadcast(λ1, λ2)                →     — (replicated update ⇒ no broadcast)
+
+Per-iteration communication volume is ONE all-reduce of |λ| = m·J floats plus
+two scalars — independent of nnz and of the per-device source split, matching
+(and improving on) the paper's 1 reduce + 2 broadcasts.
+
+Beyond-paper option (`lambda_sharding="model"`): for m·J too large to
+replicate, λ lives sharded over the "model" axis; each step all-gathers λ
+before the edge pass and reduce-scatters the gradient after it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import objectives
+from .maximizer import maximize
+from .types import LPData, Slab, SolveConfig, SolveResult
+
+
+def pad_slab_rows(slab: Slab, multiple: int) -> Slab:
+    """Pad a slab's row count to a multiple (mask=False rows are inert)."""
+    n = slab.n
+    n_pad = -(-n // multiple) * multiple
+    if n_pad == n:
+        return slab
+    extra = n_pad - n
+
+    def pad(a, fill=0):
+        cfg = [(0, extra)] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, cfg, constant_values=fill)
+
+    return Slab(
+        a_vals=pad(slab.a_vals), c_vals=pad(slab.c_vals),
+        dest_idx=pad(slab.dest_idx), mask=pad(slab.mask),
+        ub=pad(slab.ub), s=pad(slab.s, 1.0), source_ids=pad(slab.source_ids, -1),
+    )
+
+
+def pad_for_sharding(lp: LPData, num_shards: int) -> LPData:
+    return LPData(
+        slabs=tuple(pad_slab_rows(s, num_shards) for s in lp.slabs),
+        b=lp.b,
+    )
+
+
+def place_lp(lp: LPData, mesh: Mesh, source_axes: Tuple[str, ...],
+             lambda_axis: Optional[str] = None) -> LPData:
+    """device_put the LP with slab rows sharded over the source axes."""
+    n_shards = int(np.prod([mesh.shape[a] for a in source_axes]))
+    lp = pad_for_sharding(lp, n_shards)
+    row = NamedSharding(mesh, P(source_axes))
+    b_sharding = (NamedSharding(mesh, P(None, lambda_axis)) if lambda_axis
+                  else NamedSharding(mesh, P()))
+    slabs = tuple(
+        Slab(*(jax.device_put(x, row) for x in s)) for s in lp.slabs)
+    return LPData(slabs=slabs, b=jax.device_put(lp.b, b_sharding))
+
+
+@dataclasses.dataclass
+class DistributedMatchingObjective:
+    """ObjectiveFunction whose calculate() runs under shard_map.
+
+    The slab pass is fully local per shard; the ONLY communication is the
+    psum of (Ax, cᵀx, ‖x‖²) over the source axes — the paper's "communicate
+    only the duals" property, stated in code.
+    """
+
+    lp: LPData                      # already placed via place_lp
+    mesh: Mesh
+    source_axes: Tuple[str, ...]
+    proj_kind: str = "boxcut"
+    proj_iters: int = 40
+    use_pallas: bool = False
+    lambda_axis: Optional[str] = None   # beyond-paper λ sharding
+
+    @property
+    def dual_shape(self):
+        return (self.lp.m, self.lp.num_destinations)
+
+    def calculate(self, lam: jax.Array, gamma: jax.Array):
+        source_axes = self.source_axes
+        lam_axis = self.lambda_axis
+        kind, iters, pallas = self.proj_kind, self.proj_iters, self.use_pallas
+        J = self.lp.num_destinations
+        # slab rows are sharded over source_axes; when λ is sharded on
+        # lam_axis, that axis must also be a source axis (every device owns a
+        # distinct row block — no replicated compute anywhere).
+        if lam_axis is not None:
+            assert lam_axis in source_axes, (
+                "λ-sharded mode requires the λ axis to also partition "
+                "sources; pass source_axes containing lambda_axis")
+        other_axes = tuple(a for a in source_axes if a != lam_axis)
+
+        row_spec = P(source_axes)
+        slab_specs = tuple(Slab(*(row_spec,) * 7) for _ in self.lp.slabs)
+        b_spec = P(None, lam_axis) if lam_axis else P()
+        lam_spec = P(None, lam_axis) if lam_axis else P()
+
+        def local(slabs, b, lam, gamma):
+            if lam_axis is not None:
+                # beyond-paper: λ lives sharded on lam_axis; gather it for
+                # the edge pass, reduce-scatter the gradient back.
+                lam_full = jax.lax.all_gather(
+                    lam, lam_axis, axis=1, tiled=True)
+            else:
+                lam_full = lam
+            ax = jnp.zeros((lam_full.shape[0], J), lam_full.dtype)
+            c_x = jnp.zeros((), lam_full.dtype)
+            x_sq = jnp.zeros((), lam_full.dtype)
+            for slab in slabs:
+                ax_s, c_s, sq_s = objectives.slab_contribution(
+                    slab, lam_full, gamma, J, kind, iters, pallas)
+                ax, c_x, x_sq = ax + ax_s, c_x + c_s, x_sq + sq_s
+            # the ONE collective round of the paper's iteration:
+            c_x = jax.lax.psum(c_x, source_axes)
+            x_sq = jax.lax.psum(x_sq, source_axes)
+            if lam_axis is not None:
+                # sum row contributions across lam_axis while scattering J
+                ax = jax.lax.psum_scatter(
+                    ax, lam_axis, scatter_dimension=1, tiled=True)
+                if other_axes:
+                    ax = jax.lax.psum(ax, other_axes)
+            else:
+                ax = jax.lax.psum(ax, source_axes)
+            grad = ax - b
+            g_local = jnp.vdot(lam, grad)
+            if lam_axis is not None:
+                g_local = jax.lax.psum(g_local, lam_axis)
+            g = c_x + 0.5 * gamma * x_sq + g_local
+            sq_pos = jnp.sum(jnp.maximum(grad, 0.0) ** 2)
+            if lam_axis is not None:
+                sq_pos = jax.lax.psum(sq_pos, lam_axis)
+            infeas = jnp.sqrt(sq_pos)
+            aux = objectives.ObjectiveAux(primal_obj=c_x, x_sq=x_sq, ax=ax,
+                                          infeas=infeas)
+            return g, grad, aux
+
+        out_aux_spec = objectives.ObjectiveAux(
+            primal_obj=P(), x_sq=P(), ax=P(None, lam_axis) if lam_axis else P(),
+            infeas=P())
+        fn = jax.shard_map(
+            local, mesh=self.mesh,
+            in_specs=(slab_specs, b_spec, lam_spec, P()),
+            out_specs=(P(), lam_spec, out_aux_spec),
+            check_vma=False,
+        )
+        return fn(self.lp.slabs, self.lp.b, lam, gamma)
+
+
+def solve_distributed(
+    lp: LPData,
+    config: SolveConfig,
+    mesh: Mesh,
+    source_axes: Optional[Tuple[str, ...]] = None,
+    lambda_axis: Optional[str] = None,
+    algorithm: str = "agd",
+    lam0: Optional[jax.Array] = None,
+) -> SolveResult:
+    """End-to-end distributed solve: place data, build objective, maximize.
+
+    `source_axes` defaults to ALL mesh axes (the paper partitions sources
+    over every GPU).  The AGD update itself runs replicated (or λ-sharded):
+    identical on every device, so no broadcast step exists at all.
+    """
+    if source_axes is None:
+        source_axes = tuple(mesh.axis_names)
+    lp = place_lp(lp, mesh, source_axes, lambda_axis)
+    obj = DistributedMatchingObjective(
+        lp=lp, mesh=mesh, source_axes=source_axes,
+        proj_kind=config.projection, use_pallas=config.use_pallas,
+        lambda_axis=lambda_axis)
+    if lam0 is None:
+        lam0 = jnp.zeros(obj.dual_shape, jnp.float32)
+    lam_sharding = (NamedSharding(mesh, P(None, lambda_axis)) if lambda_axis
+                    else NamedSharding(mesh, P()))
+    lam0 = jax.device_put(lam0, lam_sharding)
+    return maximize(obj.calculate, lam0, config, algorithm)

@@ -1,0 +1,204 @@
+"""Synthetic matching-LP generator — paper Appendix B, implemented faithfully.
+
+Construction (host-side numpy; deterministic given a seed):
+  1. lognormal "breadth" per resource j, normalized to probabilities p_j;
+  2. K_j ~ Poisson(p_j · I · ν) truncated at I  (ν = target avg nnz per row);
+  3. K_j distinct requests selected per resource -> edges (i, j);
+  4. value c_ij = min(v_j · u_i · ε_ij, c_max) with lognormal v_j (resource
+     scale), u_i (request responsiveness), ε_ij (noise);
+  5. constraint a_ij = s_j · c_ij, lognormal per-resource scale s_j;
+  6. rhs b_j = ρ_j (ℓ_j + ε), ρ_j ~ U[0.5, 1], ℓ_j the greedy load: each
+     request sends its single largest-a_ij edge to that resource;
+  7. objective sign flipped to match the minimization convention (we maximize
+     value, so c := −value).
+
+The result is packed into the bucketed-slab `LPData` layout (DESIGN.md §2).
+Shard-local generation: `generate(..., shard=(k, n))` produces the k-th of n
+source partitions *bit-identically* to slicing the full instance — each
+source's edges/coefficients depend only on (seed, i)-indexed draws.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from .types import LPData, Slab
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceSpec:
+    num_sources: int = 1000          # I (paper: "requests")
+    num_destinations: int = 50       # J (paper: "resources")
+    avg_nnz_per_row: float = 20.0    # ν
+    num_families: int = 1            # m constraint families (paper allows >1)
+    c_max: float = 10.0
+    breadth_sigma: float = 1.0       # lognormal σ for resource breadth
+    value_sigma: float = 0.5         # lognormal σ for v_j, u_i
+    noise_sigma: float = 0.25        # lognormal σ for ε_ij
+    scale_sigma: float = 1.0         # lognormal σ for s_j  (drives row-norm spread)
+    rho_low: float = 0.5
+    rho_high: float = 1.0
+    rhs_eps: float = 1e-3
+    budget_s: float = 1.0            # per-source simplex budget (Σ_j x_ij <= s)
+    box_ub: float = 1.0              # per-edge upper bound for boxcut
+    min_width: int = 4               # smallest slab width (power of two)
+    seed: int = 0
+
+
+def _edges(spec: InstanceSpec) -> Tuple[np.ndarray, np.ndarray]:
+    """Edge list (src, dst) per Appendix B steps 1-3."""
+    rng = np.random.default_rng(spec.seed)
+    I, J = spec.num_sources, spec.num_destinations
+    breadth = rng.lognormal(mean=0.0, sigma=spec.breadth_sigma, size=J)
+    p = breadth / breadth.sum()
+    # Paper: K_j ~ Poisson(p_j I ν), truncated at I.
+    K = np.minimum(rng.poisson(p * I * spec.avg_nnz_per_row), I)
+    src_list, dst_list = [], []
+    for j in range(J):
+        if K[j] == 0:
+            continue
+        # K_j distinct requests for resource j (deterministic per (seed, j))
+        sub = np.random.default_rng((spec.seed, 1, j))
+        picks = sub.choice(I, size=int(K[j]), replace=False)
+        src_list.append(picks)
+        dst_list.append(np.full(int(K[j]), j, dtype=np.int64))
+    if not src_list:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    return np.concatenate(src_list), np.concatenate(dst_list)
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 — cheap, high-quality 64-bit mixing."""
+    with np.errstate(over="ignore"):
+        x = (x + np.uint64(0x9E3779B97F4A7C15)).astype(np.uint64)
+        x = ((x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)).astype(np.uint64)
+        x = ((x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)).astype(np.uint64)
+        return x ^ (x >> np.uint64(31))
+
+
+def _hash_lognormal(seed: int, src: np.ndarray, dst: np.ndarray, sigma: float) -> np.ndarray:
+    """Per-edge lognormal(0, σ) noise from a counter-based hash (no RNG state)."""
+    if len(src) == 0:
+        return np.zeros(0)
+    with np.errstate(over="ignore"):
+        key = (src.astype(np.uint64) * np.uint64(0x100000001B3)
+               + dst.astype(np.uint64) + np.uint64(seed) * np.uint64(0x9E3779B1))
+    u1 = (_splitmix64(key).astype(np.float64) + 1.0) / 2.0**64          # (0, 1]
+    u2 = (_splitmix64(key ^ np.uint64(0xDEADBEEF)).astype(np.float64) + 1.0) / 2.0**64
+    normal = np.sqrt(-2.0 * np.log(u1)) * np.cos(2.0 * np.pi * u2)      # Box–Muller
+    return np.exp(sigma * normal)
+
+
+def _coefficients(spec: InstanceSpec, src: np.ndarray, dst: np.ndarray):
+    """Values/coefficients per Appendix B steps 4-5 (deterministic per edge)."""
+    I, J = spec.num_sources, spec.num_destinations
+    rj = np.random.default_rng((spec.seed, 2))
+    v = rj.lognormal(0.0, spec.value_sigma, size=J)       # resource value scale
+    s_scale = rj.lognormal(0.0, spec.scale_sigma, size=(spec.num_families, J))
+    ri = np.random.default_rng((spec.seed, 3))
+    u = ri.lognormal(0.0, spec.value_sigma, size=I)       # request responsiveness
+    # Edge noise keyed by a hash of (seed, src, dst) so that it is
+    # partition-independent (shard-local generation yields identical edges).
+    eps = _hash_lognormal(spec.seed, src, dst, spec.noise_sigma)
+    value = np.minimum(v[dst] * u[src] * eps, spec.c_max)
+    a = s_scale[:, dst] * value[None, :]                  # (m, nnz)
+    return value, a
+
+
+def _rhs(spec: InstanceSpec, src, dst, a) -> np.ndarray:
+    """b_j = ρ_j(ℓ_j + ε) with greedy load ℓ_j (Appendix B)."""
+    J, m = spec.num_destinations, spec.num_families
+    b = np.zeros((m, J))
+    rng = np.random.default_rng((spec.seed, 6))
+    rho = rng.uniform(spec.rho_low, spec.rho_high, size=(m, J))
+    for k in range(m):
+        load = np.zeros(J)
+        if len(src):
+            # per request, its largest-a edge goes fully to that resource
+            order = np.lexsort((a[k], src))  # sorted by src then a ascending
+            # last entry per src is the max-a edge
+            last = np.ones(len(src), dtype=bool)
+            last[:-1] = src[order][1:] != src[order][:-1]
+            idx = order[last]
+            np.add.at(load, dst[idx], a[k][idx] * spec.budget_s)
+        b[k] = rho[k] * (load + spec.rhs_eps)
+    return b
+
+
+def pack_slabs(src, dst, value, a, spec: InstanceSpec) -> LPData:
+    """Bucket sources by ⌈log2 degree⌉ and pack padded slabs (DESIGN.md §2)."""
+    I, J, m = spec.num_sources, spec.num_destinations, spec.num_families
+    order = np.argsort(src, kind="stable")
+    src, dst, value, a = src[order], dst[order], value[order], a[:, order]
+    # group edges per source (vectorized bucketed gather — no per-row loop)
+    uniq, start = np.unique(src, return_index=True)
+    degs = np.diff(np.append(start, len(src)))
+    widths = np.maximum(spec.min_width,
+                        1 << np.ceil(np.log2(np.maximum(degs, 1))).astype(np.int64))
+    slabs = []
+    for w in sorted(set(widths.tolist())):
+        rows = np.nonzero(widths == w)[0]
+        n = len(rows)
+        st, dg = start[rows], degs[rows]
+        idx = st[:, None] + np.arange(w)[None, :]            # (n, w) edge gather
+        msk = np.arange(w)[None, :] < dg[:, None]
+        idx = np.where(msk, idx, 0).astype(np.int64)
+        a_v = np.where(msk[..., None], a[:, idx].transpose(1, 2, 0), 0.0)
+        c_v = np.where(msk, -value[idx], 0.0)                # minimization convention
+        d_i = np.where(msk, dst[idx], 0)
+        slabs.append(Slab(
+            a_vals=a_v.astype(np.float32), c_vals=c_v.astype(np.float32),
+            dest_idx=d_i.astype(np.int32), mask=msk,
+            ub=np.where(msk, np.float32(spec.box_ub), 0.0).astype(np.float32),
+            s=np.full(n, spec.budget_s, np.float32),
+            source_ids=uniq[rows].astype(np.int32),
+        ))
+    b = _rhs(spec, src, dst, a)
+    return LPData(slabs=tuple(slabs), b=b.astype(np.float32))
+
+
+def generate(spec: InstanceSpec, shard: Optional[Tuple[int, int]] = None) -> LPData:
+    """Generate an instance; `shard=(k, n)` keeps only sources ≡ k (mod n).
+
+    b is NOT divided across shards — the distributed objective sums local
+    Ax contributions and subtracts b once (see core.distributed).
+    """
+    src, dst = _edges(spec)
+    value, a = _coefficients(spec, src, dst)
+    if shard is not None:
+        k, n = shard
+        keep = (src % n) == k
+        src, dst, value, a = src[keep], dst[keep], value[keep], a[:, keep]
+    return pack_slabs(src, dst, value, a, spec)
+
+
+def to_dense(lp: LPData, num_sources: int, num_destinations: int):
+    """Densify (A, c, masks) for small-instance oracle checks.
+
+    Returns A: (m, J, I*J) is too big — instead return per-(i,j) dicts:
+      A_full: (m, J, n_var) with variables enumerated as packed edge list,
+      plus the edge list itself.  Used only in tests on tiny instances.
+    """
+    import numpy as np
+    edges = []      # (src, dst, c, a[m])
+    for slab in lp.slabs:
+        n, w = slab.c_vals.shape
+        for r in range(n):
+            for q in range(w):
+                if bool(slab.mask[r, q]):
+                    edges.append((
+                        int(slab.source_ids[r]), int(slab.dest_idx[r, q]),
+                        float(slab.c_vals[r, q]),
+                        np.asarray(slab.a_vals[r, q]),
+                    ))
+    m, J = lp.b.shape
+    nv = len(edges)
+    A = np.zeros((m * J, nv))
+    c = np.zeros(nv)
+    for col, (i, j, cv, av) in enumerate(edges):
+        c[col] = cv
+        for k in range(m):
+            A[k * J + j, col] = av[k]
+    return A, c, edges

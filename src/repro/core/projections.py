@@ -1,0 +1,224 @@
+"""Blockwise projections onto the "simple constraint" polytopes (paper §3.2).
+
+Supported families (all per source block, applied row-wise on slabs):
+  box        C = { 0 <= x <= ub }
+  simplex    C = { x >= 0, sum(x) <= s }
+  simplex_eq C = { x >= 0, sum(x)  = s }
+  boxcut     C = { 0 <= x <= ub, sum(x) <= s }   (generalizes the other three)
+
+TPU adaptation (DESIGN.md §2): instead of the sort-based threshold search used
+on CPU/GPU, the batched projection solves for the threshold τ with *bisection*
+— branch-free, fully vectorized, O(w · iters) per row, exact to float
+tolerance.  The pure-jnp versions here are both the reference semantics and
+the CPU execution path; `repro.kernels.proj` provides the Pallas TPU kernel
+with identical semantics (validated against `project_boxcut` in tests).
+
+Every function takes a `mask` so padded slab entries never contribute: masked
+entries behave as if the coordinate did not exist (output 0, excluded from
+sums).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30  # effective -inf that stays finite in f32 arithmetic
+
+
+def _masked(v: jax.Array, mask: jax.Array, fill: float) -> jax.Array:
+    return jnp.where(mask, v, fill)
+
+
+def _boxcut_sum(v: jax.Array, tau: jax.Array, ub: jax.Array, mask: jax.Array) -> jax.Array:
+    """f(τ) = Σ_j clip(v_j − τ, 0, ub_j) over real entries; decreasing in τ."""
+    x = jnp.clip(v - tau[..., None], 0.0, ub)
+    return jnp.sum(jnp.where(mask, x, 0.0), axis=-1)
+
+
+def project_box(v: jax.Array, ub: jax.Array, mask: jax.Array) -> jax.Array:
+    return jnp.where(mask, jnp.clip(v, 0.0, ub), 0.0)
+
+
+@partial(jax.jit, static_argnames=("iters", "equality"))
+def project_boxcut(
+    v: jax.Array,
+    ub: jax.Array,
+    s: jax.Array,
+    mask: jax.Array,
+    iters: int = 40,
+    equality: bool = False,
+) -> jax.Array:
+    """Batched projection onto { 0 <= x <= ub, Σx <= s } (or Σx = s).
+
+    v: (..., w); ub: broadcastable to v; s: (...,); mask: (..., w).
+    Solves Σ clip(v − τ, 0, ub) = s for τ by bisection when the cut is
+    active.  With `equality=False`, τ is clamped to τ >= 0 (inactive cut →
+    plain box projection).
+    """
+    v = _masked(v, mask, _NEG)
+    ub = jnp.broadcast_to(ub, v.shape)
+    f0 = _boxcut_sum(v, jnp.zeros(v.shape[:-1], v.dtype), ub, mask)
+    need_cut = f0 > s if not equality else jnp.ones_like(f0, dtype=bool)
+
+    # Bracket τ*: f(lo) >= s >= f(hi).
+    hi = jnp.max(v, axis=-1)  # f(hi) = 0 <= s (s >= 0 assumed)
+    if equality:
+        # τ may be negative: at lo = min over real entries of (v - ub) the sum
+        # is Σub >= s for feasible s, so the root is bracketed.
+        lo = jnp.min(_masked(v - ub, mask, -_NEG), axis=-1) - 1.0
+    else:
+        lo = jnp.zeros_like(hi)
+    lo = jnp.minimum(lo, hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        f = _boxcut_sum(v, mid, ub, mask)
+        too_big = f > s  # still above the budget -> move lo up
+        lo = jnp.where(too_big, mid, lo)
+        hi = jnp.where(too_big, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    tau = jnp.where(need_cut, 0.5 * (lo + hi), 0.0 if not equality else 0.5 * (lo + hi))
+    x = jnp.clip(v - tau[..., None], 0.0, ub)
+    return jnp.where(mask, x, 0.0)
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def project_boxcut_newton(
+    v: jax.Array,
+    ub: jax.Array,
+    s: jax.Array,
+    mask: jax.Array,
+    iters: int = 12,
+) -> jax.Array:
+    """Safeguarded-Newton variant of the box-cut projection (§Perf).
+
+    f(τ) = Σ clip(v−τ, 0, ub) is piecewise linear with slope
+    f'(τ) = −|{j : 0 < v_j − τ < ub_j}|, so Newton converges in a handful of
+    sweeps versus ~40 bisections (it lands exactly once the active set
+    stabilizes).  Each step is safeguarded by the bisection bracket so the
+    worst case is still a bisection.  Same semantics as project_boxcut with
+    equality=False.
+    """
+    v = _masked(v, mask, _NEG)
+    ub = jnp.broadcast_to(ub, v.shape)
+    f0 = _boxcut_sum(v, jnp.zeros(v.shape[:-1], v.dtype), ub, mask)
+    need_cut = f0 > s
+    hi = jnp.max(v, axis=-1)
+    lo = jnp.minimum(jnp.zeros_like(hi), hi)
+
+    def body(_, carry):
+        lo, hi, tau = carry
+        x = jnp.clip(v - tau[..., None], 0.0, ub)
+        f = jnp.sum(jnp.where(mask, x, 0.0), axis=-1)
+        active = mask & (v - tau[..., None] > 0.0) & (v - tau[..., None] < ub)
+        slope = jnp.sum(active, axis=-1).astype(v.dtype)
+        too_big = f > s
+        lo = jnp.where(too_big, tau, lo)
+        hi = jnp.where(too_big, hi, tau)
+        newton = tau + (f - s) / jnp.maximum(slope, 1.0)
+        ok = (newton > lo) & (newton < hi) & (slope > 0)
+        tau_next = jnp.where(ok, newton, 0.5 * (lo + hi))
+        return lo, hi, tau_next
+
+    tau0 = 0.5 * (lo + hi)
+    lo, hi, tau = jax.lax.fori_loop(0, iters, body, (lo, hi, tau0))
+    tau = jnp.where(need_cut, tau, 0.0)
+    x = jnp.clip(v - tau[..., None], 0.0, ub)
+    return jnp.where(mask, x, 0.0)
+
+
+def project(
+    kind: str,
+    v: jax.Array,
+    ub: jax.Array,
+    s: jax.Array,
+    mask: jax.Array,
+    iters: int = 40,
+) -> jax.Array:
+    """Dispatch on the (static) projection kind."""
+    if kind == "box":
+        return project_box(v, ub, mask)
+    if kind == "simplex":
+        big = jnp.asarray(jnp.finfo(v.dtype).max / 4, v.dtype)
+        return project_boxcut(v, big, s, mask, iters=iters)
+    if kind == "simplex_eq":
+        big = jnp.asarray(jnp.finfo(v.dtype).max / 4, v.dtype)
+        return project_boxcut(v, big, s, mask, iters=iters, equality=True)
+    if kind == "boxcut":
+        return project_boxcut(v, ub, s, mask, iters=iters)
+    if kind == "boxcut_newton":
+        return project_boxcut_newton(v, ub, s, mask,
+                                     iters=min(iters, 12))
+    raise ValueError(f"unknown projection kind: {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Exact (sort-based) host reference, used only by tests as an independent
+# oracle for the bisection implementations.
+# ---------------------------------------------------------------------------
+def project_boxcut_exact_1d(v, ub, s, equality: bool = False):
+    """Exact projection of one row onto {0<=x<=ub, Σx<=s} via breakpoints.
+
+    Pure numpy, O(w log w).  f(τ) = Σ clip(v−τ, 0, ub) is piecewise linear and
+    non-increasing with breakpoints at {v_j − ub_j, v_j}.
+    """
+    import numpy as np
+
+    v = np.asarray(v, dtype=np.float64)
+    ub = np.broadcast_to(np.asarray(ub, dtype=np.float64), v.shape)
+
+    def f(tau):
+        return np.clip(v - tau, 0.0, ub).sum()
+
+    if not equality and f(0.0) <= s:
+        return np.clip(v, 0.0, ub)
+    # The cut is active below, so every x_j <= Σx <= s: clamping ub at s is
+    # exact and keeps the breakpoints at O(s) scale (a 1e30 "infinite" ub
+    # would annihilate f64 precision in the interpolation).
+    ub = np.minimum(ub, max(s, 0.0))
+    bps = np.unique(np.concatenate([v - ub, v]))
+    vals = np.array([f(t) for t in bps])
+    # find the segment [bps[k], bps[k+1]] with vals[k] >= s >= vals[k+1]
+    if s >= vals[0]:
+        tau = bps[0] - (s - vals[0])  # f slope is -len(v) below first bp? no:
+        # below the first breakpoint every coordinate is at its ub -> slope 0,
+        # f is constant = Σub; equality with s < Σub handled by segments, and
+        # s >= Σub means tau can be bps[0] (equality infeasible beyond Σub).
+        tau = bps[0]
+    elif s <= vals[-1]:
+        tau = bps[-1]
+    else:
+        k = int(np.searchsorted(-vals, -s, side="right")) - 1
+        t0, t1, f0, f1 = bps[k], bps[k + 1], vals[k], vals[k + 1]
+        tau = t0 if f0 == f1 else t0 + (f0 - s) * (t1 - t0) / (f0 - f1)
+    if not equality:
+        tau = max(tau, 0.0)
+    return np.clip(v - tau, 0.0, ub)
+
+
+class ProjectionMap:
+    """Paper §4 facade: maps block ids (bucket indices) to projection ops.
+
+    `project(block_id, v, slab)` applies the configured projection to the
+    rows of one slab.  All slabs share a kind by default, but per-bucket
+    overrides are allowed — this is the "purely local composition" hook.
+    """
+
+    def __init__(self, kind: str = "boxcut", overrides: Optional[dict] = None,
+                 iters: int = 40):
+        self.kind = kind
+        self.overrides = dict(overrides or {})
+        self.iters = iters
+
+    def kind_for(self, block_id: int) -> str:
+        return self.overrides.get(block_id, self.kind)
+
+    def project(self, block_id: int, v: jax.Array, ub: jax.Array,
+                s: jax.Array, mask: jax.Array) -> jax.Array:
+        return project(self.kind_for(block_id), v, ub, s, mask, iters=self.iters)

@@ -1,0 +1,137 @@
+"""Core data types for the DuaLip solver.
+
+The matching-LP data layout is the TPU adaptation of the paper's CSC format
+(DESIGN.md §2): edges are grouped by *source* and sources are bucketed by
+⌈log2 degree⌉ into dense padded slabs.  Every hot operation (x*(λ) compute,
+projection, per-edge gradient) is then a dense masked row-op on a slab —
+MXU/VPU friendly — while the `Ax` reduction is a segment-sum keyed by the
+destination index.
+
+All array containers are NamedTuples so they are automatically pytrees; any
+static metadata (projection kind, bucket widths) lives on plain Python
+objects outside the jitted functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Slab(NamedTuple):
+    """One degree bucket of sources, padded to a common width.
+
+    Shapes (n = #sources in bucket, w = padded width = bucket power of two,
+    m = #constraint families):
+      a_vals:   (n, w, m)  constraint coefficients a^k_ij (0 on padding)
+      c_vals:   (n, w)     objective coefficients  c_ij   (0 on padding)
+      dest_idx: (n, w)     destination id j of each edge  (0 on padding)
+      mask:     (n, w)     True for real edges
+      ub:       (n, w)     per-edge upper bound for box / box-cut (inf => none)
+      s:        (n,)       per-source budget for simplex / box-cut (inf => none)
+      source_ids: (n,)     original source index (bookkeeping / debugging)
+    """
+
+    a_vals: jax.Array
+    c_vals: jax.Array
+    dest_idx: jax.Array
+    mask: jax.Array
+    ub: jax.Array
+    s: jax.Array
+    source_ids: jax.Array
+
+    @property
+    def n(self) -> int:
+        return self.c_vals.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.c_vals.shape[1]
+
+    @property
+    def m(self) -> int:
+        return self.a_vals.shape[2]
+
+
+class LPData(NamedTuple):
+    """A matching LP in bucketed-slab layout.
+
+    slabs: tuple of Slab, one per degree bucket (widths are static shapes).
+    b:     (m, J) right-hand side of the complex constraints, one row per
+           constraint family.  λ has the same (m, J) shape.
+    """
+
+    slabs: Tuple[Slab, ...]
+    b: jax.Array
+
+    @property
+    def m(self) -> int:
+        return self.b.shape[0]
+
+    @property
+    def num_destinations(self) -> int:
+        return self.b.shape[1]
+
+    @property
+    def num_sources(self) -> int:
+        return sum(s.n for s in self.slabs)
+
+    @property
+    def num_edges(self) -> int:
+        # Static (mask-independent) upper bound; true nnz needs a device read.
+        return sum(s.n * s.width for s in self.slabs)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveConfig:
+    """Paper-faithful defaults (Appendix B): max-step 1e-3, init-step 1e-5,
+    γ = 0.01; continuation per §5.1 / Fig. 5 (0.16 → 0.01, halved every 25)."""
+
+    iterations: int = 200
+    gamma: float = 0.01
+    initial_step: float = 1e-5
+    max_step: float = 1e-3
+    # γ continuation (disabled unless gamma_init > gamma)
+    gamma_init: Optional[float] = None
+    gamma_decay_every: int = 25
+    gamma_decay_rate: float = 0.5
+    # scale the step cap proportionally with γ during continuation (§5.1)
+    scale_step_with_gamma: bool = True
+    # Jacobi row normalization (§5.1) — applied by `precondition()` before solve
+    row_normalize: bool = False
+    # primal (per-block) scaling (§5.1)
+    primal_scale: bool = False
+    projection: str = "boxcut"  # "box" | "simplex" | "boxcut" | "simplex_eq"
+    dtype: jnp.dtype = jnp.float32
+    log_every: int = 1
+    use_pallas: bool = False  # route x*(λ) through the Pallas kernels
+
+
+class SolveState(NamedTuple):
+    """AGD maximizer state (λ == paper's λ1, y == paper's λ2/momentum)."""
+
+    lam: jax.Array          # (m, J) current dual iterate, λ >= 0
+    y: jax.Array            # (m, J) extrapolated iterate
+    lam_prev: jax.Array     # (m, J)
+    grad_prev: jax.Array    # (m, J) ∇g at previous y
+    y_prev: jax.Array       # (m, J)
+    step: jax.Array         # scalar, current step size
+    l_est: jax.Array        # scalar, running local-Lipschitz estimate
+    k_mom: jax.Array        # scalar int32, momentum age (reset on restart)
+    it: jax.Array           # scalar int32
+
+
+class IterStats(NamedTuple):
+    dual_obj: jax.Array       # g(λ)
+    primal_obj: jax.Array     # cᵀx*(λ)
+    infeas: jax.Array         # ||(Ax*-b)+||₂
+    grad_norm: jax.Array
+    step: jax.Array
+    gamma: jax.Array
+
+
+class SolveResult(NamedTuple):
+    lam: jax.Array
+    stats: IterStats          # stacked over iterations

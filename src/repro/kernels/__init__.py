@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the DuaLip hot path (paper §6).
+
+  proj.py       batched box-cut projection via τ-bisection
+  dual_grad.py  fused x*(λ) + per-edge gradient values + local scalars
+  ops.py        jit'd public wrappers (interpret-mode fallback off-TPU)
+  ref.py        pure-jnp oracles (ground truth for tests)
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,56 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On a TPU backend the kernels lower through Mosaic; everywhere else (this CPU
+container, unit tests) they run in interpret mode, which executes the kernel
+body in Python with identical semantics.  `repro.core.objectives` routes
+through `dual_xstar` when SolveConfig.use_pallas is set.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import dual_grad as _dual_grad
+from . import proj as _proj
+from repro.core.types import Slab
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def proj_boxcut(v, ub, s, mask, iters: int = _proj.DEFAULT_ITERS,
+                interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _proj.proj_boxcut(v, ub, s, mask, iters=iters, interpret=interpret)
+
+
+def dual_grad_slab(slab: Slab, lam, gamma, iters: int = _proj.DEFAULT_ITERS,
+                   interpret: bool | None = None):
+    """Fused x*(λ)+gvals+scalars for one slab (kernel: dual_grad.py)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _dual_grad.dual_grad_slab(
+        slab.a_vals, slab.c_vals, slab.dest_idx, slab.mask, slab.ub, slab.s,
+        lam, gamma, iters=iters, interpret=interpret)
+
+
+def dual_xstar(slab: Slab, lam, gamma, proj_kind: str = "boxcut",
+               iters: int = _proj.DEFAULT_ITERS,
+               interpret: bool | None = None):
+    """x*(λ) for one slab via the fused kernel (boxcut/simplex kinds).
+
+    Entry point used by repro.core.objectives.slab_xstar(use_pallas=True).
+    """
+    if proj_kind == "simplex":
+        big = jnp.full_like(slab.ub, 1e30)
+        slab = slab._replace(ub=big)
+    elif proj_kind not in ("boxcut", "box"):
+        raise NotImplementedError(
+            f"pallas path supports boxcut/simplex/box, got {proj_kind}")
+    x, _, _, _ = dual_grad_slab(slab, lam, gamma, iters=iters,
+                                interpret=interpret)
+    return x

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: batched box-cut projection via τ-bisection (paper §6).
+
+GPU→TPU adaptation (DESIGN.md §2): the paper batches per-bucket projections
+into dense padded slabs to amortize kernel launches.  On TPU we keep the
+bucketed slabs but replace the sort-based threshold search with *bisection*:
+branch-free, VPU-vectorized over (rows × width) tiles, no data-dependent
+control flow, fixed iteration count — exactly what Mosaic compiles well.
+
+Tiling: grid over row-blocks; each kernel instance owns a
+(BLOCK_ROWS, width) tile of v/ub/mask and a (BLOCK_ROWS,) slice of s, all
+VMEM-resident.  The inner fori_loop does `iters` rounds of
+f(τ) = Σ clip(v−τ, 0, ub) per row (one VPU reduction per round).
+Width is the slab's power-of-two bucket width — already lane-aligned for
+buckets >= 128; small buckets underfill lanes but are cheap in absolute terms.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ITERS = 40
+# target <= ~2 MB per input tile in VMEM (3 f32 tiles + outputs live at once)
+_VMEM_TILE_BYTES = 2 * 1024 * 1024
+
+
+def _block_rows(width: int, dtype_bytes: int = 4) -> int:
+    rows = _VMEM_TILE_BYTES // max(width * dtype_bytes, 1)
+    rows = max(8, min(512, rows))
+    # power of two for clean grid math
+    return 1 << (rows.bit_length() - 1)
+
+
+def _proj_kernel(v_ref, ub_ref, s_ref, mask_ref, x_ref, *, iters: int):
+    v = v_ref[...]
+    ub = ub_ref[...]
+    s = s_ref[...]
+    mask = mask_ref[...] != 0
+    neg = jnp.asarray(-1e30, v.dtype)
+    v = jnp.where(mask, v, neg)
+
+    x0 = jnp.clip(v, 0.0, ub)
+    f0 = jnp.sum(jnp.where(mask, x0, 0.0), axis=-1)
+    need = f0 > s
+    hi = jnp.max(v, axis=-1)
+    lo = jnp.minimum(jnp.zeros_like(hi), hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        xm = jnp.clip(v - mid[:, None], 0.0, ub)
+        f = jnp.sum(jnp.where(mask, xm, 0.0), axis=-1)
+        big = f > s
+        return jnp.where(big, mid, lo), jnp.where(big, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    tau = jnp.where(need, 0.5 * (lo + hi), 0.0)
+    x = jnp.clip(v - tau[:, None], 0.0, ub)
+    x_ref[...] = jnp.where(mask, x, 0.0).astype(x_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "interpret", "block_rows"))
+def proj_boxcut(v: jax.Array, ub: jax.Array, s: jax.Array, mask: jax.Array,
+                iters: int = DEFAULT_ITERS, interpret: bool = False,
+                block_rows: int | None = None) -> jax.Array:
+    """Batched box-cut projection of an (n, w) slab. Returns x of shape (n, w).
+
+    `interpret=True` executes the kernel body in Python on CPU (used for all
+    validation in this container); on TPU the same code lowers via Mosaic.
+    """
+    n, w = v.shape
+    br = block_rows or _block_rows(w)
+    n_pad = -(-n // br) * br
+    if n_pad != n:
+        pad = lambda a, fill: jnp.pad(a, [(0, n_pad - n)] + [(0, 0)] * (a.ndim - 1),
+                                      constant_values=fill)
+        v, ub, s = pad(v, 0), pad(ub, 0), pad(s, 1.0)
+        mask = pad(mask, False)
+    grid = (n_pad // br,)
+    out = pl.pallas_call(
+        functools.partial(_proj_kernel, iters=iters),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, w), v.dtype),
+        interpret=interpret,
+    )(v, ub, s, mask.astype(jnp.int32))
+    return out[:n]

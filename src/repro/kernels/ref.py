@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret mode
+on CPU, sweeping shapes/dtypes in tests/test_kernels.py).  They re-express
+the kernel math with vanilla jnp ops only — no pallas, no tricks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def boxcut_bisect_ref(v, ub, s, mask, iters: int = 40):
+    """Row-wise projection onto {0 <= x <= ub, Σx <= s} by τ-bisection.
+
+    Identical math to repro.core.projections.project_boxcut (the kernel and
+    this oracle must produce bit-comparable results up to fp reassociation).
+    v, ub, mask: (n, w); s: (n,).
+    """
+    neg = jnp.asarray(-1e30, v.dtype)
+    v = jnp.where(mask, v, neg)
+    f0 = jnp.sum(jnp.where(mask, jnp.clip(v, 0.0, ub), 0.0), axis=-1)
+    need = f0 > s
+    hi = jnp.max(v, axis=-1)
+    lo = jnp.zeros_like(hi)
+    lo = jnp.minimum(lo, hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        x = jnp.clip(v - mid[:, None], 0.0, ub)
+        f = jnp.sum(jnp.where(mask, x, 0.0), axis=-1)
+        big = f > s
+        return jnp.where(big, mid, lo), jnp.where(big, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    tau = jnp.where(need, 0.5 * (lo + hi), 0.0)
+    x = jnp.clip(v - tau[:, None], 0.0, ub)
+    return jnp.where(mask, x, 0.0)
+
+
+def dual_xstar_ref(a_vals, c_vals, dest_idx, mask, ub, s, lam, gamma,
+                   iters: int = 40):
+    """Fused dual-gradient inner step, slab form (oracle for dual_grad.py):
+
+      u      = −(Σ_k a_k ⊙ λ_k[dest] + c) / γ
+      x*     = Π_boxcut(u)
+      gvals  = a ⊙ x*                      (per-edge gradient values)
+      c_x    = <c, x*>,  x_sq = ‖x*‖²
+
+    a_vals: (n, w, m); lam: (m, J); returns (x, gvals, c_x, x_sq).
+    """
+    lam_e = lam[:, dest_idx]                                # (m, n, w)
+    atl = jnp.einsum("nwm,mnw->nw", a_vals, lam_e)
+    u = -(atl + c_vals) / gamma
+    x = boxcut_bisect_ref(u, ub, s, mask, iters)
+    gvals = a_vals * x[..., None]
+    c_x = jnp.vdot(c_vals, x)
+    x_sq = jnp.vdot(x, x)
+    return x, gvals, c_x, x_sq

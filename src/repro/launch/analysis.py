@@ -1,0 +1,172 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Terms (per assignment; TPU v5e constants):
+    t_compute = HLO_FLOPs_global    / (chips × 197e12  FLOP/s bf16)
+    t_memory  = HLO_bytes_global    / (chips × 819e9   B/s HBM)
+    t_coll    = collective_bytes_gl / (chips × 50e9    B/s ICI link)
+
+`cost_analysis()` reports the per-device SPMD module, so global = per-device
+× chips; the two conventions give identical term values and we record both.
+
+collective_bytes is parsed from the compiled HLO: the summed RESULT sizes of
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+ops (result-size convention; ring-algorithm factors of ~2(n-1)/n are uniform
+across variants so relative comparisons — what §Perf optimizes — are exact).
+
+MODEL_FLOPS = 6·N·D (dense train), 6·N_active·D (MoE), 2·N·D forward-only;
+the ratio MODEL_FLOPS / HLO_FLOPs is the useful-compute fraction (catches
+remat/dispatch/padding waste).  Attention FLOPs are intentionally excluded
+from MODEL_FLOPS (assignment formula), so the ratio is conservative.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# result types like "f32[8,128]{1,0}" or "(f32[8]{0}, bf16[4,4]{1,0})"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective kind from (compiled) HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)(?:-start|-done)?\(", stripped)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        if stripped.split("=", 1)[1].lstrip().startswith("("):
+            # tuple result: count it once via full tuple string
+            pass
+        b = _shape_bytes(type_str)
+        # "-done" ops repeat the "-start" result; count starts + sync forms
+        if "-done(" in stripped:
+            continue
+        out[kind] += b
+        out["count"] += 1
+    return out
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+    }
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes"]
+    out = {}
+    for k in keys:
+        out[k] = float(getattr(ma, k, 0.0))
+    out["peak_bytes_estimate"] = (out["argument_size_in_bytes"]
+                                  + out["output_size_in_bytes"]
+                                  + out["temp_size_in_bytes"]
+                                  - out["alias_size_in_bytes"])
+    return out
+
+
+def roofline(cost: Dict[str, float], coll: Dict[str, int],
+             n_devices: int) -> Dict[str, float]:
+    flops_g = cost["flops_per_device"] * n_devices
+    bytes_g = cost["bytes_per_device"] * n_devices
+    coll_g = sum(coll[k] for k in _COLLECTIVES) * n_devices
+    t_c = flops_g / (n_devices * PEAK_FLOPS)
+    t_m = bytes_g / (n_devices * HBM_BW)
+    t_x = coll_g / (n_devices * ICI_BW)
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    return {
+        "hlo_flops_global": flops_g,
+        "hlo_bytes_global": bytes_g,
+        "collective_bytes_global": coll_g,
+        "t_compute_s": t_c,
+        "t_memory_s": t_m,
+        "t_collective_s": t_x,
+        "dominant": dom,
+        "bound_step_time_s": max(t_c, t_m, t_x),
+    }
+
+
+# ---------------------------------------------------------------------------
+# model FLOPs accounting
+# ---------------------------------------------------------------------------
+def count_params(defs: Dict) -> Tuple[int, int]:
+    """(total, active) parameter counts from ParamDefs.
+
+    Active scales each routed-expert tensor by top_k/n_experts; shared
+    experts and everything else count fully.  Embedding included (standard
+    6·N·D convention counts all applied matmul params; we include embeddings
+    — they are matmul'd in the loss — and note the convention)."""
+    total = active = 0
+    for path, d in defs.items():
+        n = int(np.prod(d.shape))
+        total += n
+        active += n
+    return total, active
+
+
+def count_active_params(defs: Dict, cfg) -> int:
+    active = 0
+    for path, d in defs.items():
+        n = int(np.prod(d.shape))
+        if "/moe/w" in path or path.startswith("moe/w") or "/moe/" in path:
+            if "/shared" not in path and "router" not in path:
+                n = int(n * cfg.top_k / max(cfg.n_experts, 1))
+        active += n
+    return active
+
+
+def model_flops(cfg, defs, cell, n_new_tokens: int = 1) -> Dict[str, float]:
+    """MODEL_FLOPS per assignment: 6·N·D train, 2·N·D forward (prefill),
+    2·N_active·tokens for decode (one token per sequence in the batch)."""
+    total, _ = count_params(defs)
+    active = count_active_params(defs, cfg)
+    B, S = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        D = B * S
+        return {"params": total, "active_params": active,
+                "model_flops": 6.0 * active * D}
+    if cell.kind == "prefill":
+        D = B * S
+        return {"params": total, "active_params": active,
+                "model_flops": 2.0 * active * D}
+    # decode: one token per sequence
+    return {"params": total, "active_params": active,
+            "model_flops": 2.0 * active * B * n_new_tokens}

@@ -1,0 +1,325 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+#   This is dry-run-only; tests/benches see the real single CPU device.
+"""Multi-pod dry-run launcher.
+
+For every (architecture × input shape) cell — and the LP solver's own
+workloads — lower + compile the production step on:
+  * the single-pod mesh  (16, 16)        ("data", "model")       256 chips
+  * the multi-pod mesh   (2, 16, 16)     ("pod", "data", "model") 512 chips
+
+and record memory_analysis / cost_analysis / parsed collective bytes into
+benchmarks/results/dryrun/<mesh>/<cell>.json.  A compile failure here is a
+bug in the sharding design, not an environment problem.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --arch lp-matching
+
+Results are cached by cell key; --force recomputes.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding
+from repro.configs import arch_ids, get_config
+from repro.launch import analysis, hlo_cost
+from repro.launch.mesh import make_production_mesh, batch_axes
+from repro.models import SHAPES, build_model, cell_applicable
+from repro.models.layers import abstract_params
+from repro.optim import AdamW, cosine_schedule
+from repro.training.trainer import make_train_step, TrainState
+
+RESULTS = os.path.join(os.path.dirname(__file__),
+                       "../../../benchmarks/results/dryrun")
+
+
+def _sds_with_sharding(tree_sds, tree_pspec, mesh):
+    def put(sd, spec):
+        spec = sharding.sanitize_spec(spec, sd.shape, mesh)
+        return jax.ShapeDtypeStruct(sd.shape, sd.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(put, tree_sds, tree_pspec,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _opt_state_specs(pspecs):
+    from repro.optim import OptState
+    return OptState(count=P(), mu=pspecs, nu=jax.tree.map(lambda s: s, pspecs))
+
+
+def lower_cell(arch: str, shape_name: str, mesh, moe_impl: str = "einsum",
+               extra_rules: Optional[dict] = None,
+               overrides: Optional[dict] = None) -> Dict:
+    """Lower + compile one (arch × shape) cell on one mesh; return metrics.
+
+    `overrides` applies dataclasses.replace on the ModelConfig — the §Perf
+    hillclimb hook (e.g. {"n_heads": 64} for the head-padding variant)."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, cell)
+    if not ok:
+        return {"status": "SKIP", "reason": why}
+    model = build_model(cfg, moe_impl=moe_impl)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    rules = dict(extra_rules or {})
+    if cell.kind == "decode":
+        # serving layout: no ZeRO-3 weight gathers per generated token
+        rules = {**sharding.SERVING_RULES, **rules}
+    with sharding.use_mesh_rules(mesh, rules or None):
+        defs = model.param_defs()
+        params_sds = abstract_params(defs)
+        params_ps = model.param_pspecs()
+        in_specs = model.input_specs(cell)
+        in_ps = model.input_pspecs(cell)
+
+        if cell.kind == "train":
+            opt = AdamW(state_dtype=cfg.optstate_dtype)
+            lr_fn = cosine_schedule(3e-4, 100, 10000)
+            step = make_train_step(model.loss, opt, lr_fn,
+                                   microbatches=cfg.microbatches,
+                                   accum_dtype=cfg.accum_dtype)
+            params_in = _sds_with_sharding(params_sds, params_ps, mesh)
+            opt_sds = jax.eval_shape(opt.init, params_sds)
+            opt_ps = _opt_state_specs(params_ps)
+            opt_in = _sds_with_sharding(opt_sds, opt_ps, mesh)
+            state = TrainState(
+                step=jax.ShapeDtypeStruct((), jnp.int32,
+                                          sharding=NamedSharding(mesh, P())),
+                params=params_in, opt_state=opt_in)
+            batch_in = _sds_with_sharding(in_specs, in_ps, mesh)
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(state, batch_in)
+        elif cell.kind == "prefill":
+            params_in = _sds_with_sharding(params_sds, params_ps, mesh)
+            batch_in = _sds_with_sharding(in_specs, in_ps, mesh)
+            lowered = jax.jit(model.prefill).lower(params_in, batch_in)
+        else:  # decode
+            params_in = _sds_with_sharding(params_sds, params_ps, mesh)
+            cache_in = _sds_with_sharding(in_specs["caches"],
+                                          model.cache_pspecs(), mesh)
+            tok_spec = sharding.spec_for(("cache_batch", None),
+                                         shape=in_specs["tokens"].shape)
+            tok_in = jax.ShapeDtypeStruct(
+                in_specs["tokens"].shape, jnp.int32,
+                sharding=NamedSharding(mesh, tok_spec))
+            pos_in = jax.ShapeDtypeStruct((), jnp.int32,
+                                          sharding=NamedSharding(mesh, P()))
+            lowered = jax.jit(model.decode_step, donate_argnums=(1,)).lower(
+                params_in, cache_in, tok_in, pos_in)
+
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = analysis.memory_summary(compiled)
+        # trip-count-aware walk of the compiled HLO (XLA's cost_analysis
+        # counts while bodies once — useless for scan-over-layers programs)
+        walk = hlo_cost.analyze(compiled.as_text())
+        cost = {"flops_per_device": walk["flops_per_device"],
+                "bytes_per_device": walk["bytes_per_device"]}
+        coll = {**walk["collectives"], "count": walk["collective_count"]}
+        roof = analysis.roofline(cost, coll, n_dev)
+        mf = analysis.model_flops(cfg, defs, cell)
+        xla_raw = analysis.cost_summary(compiled)
+        print(compiled.memory_analysis())
+        return {
+            "status": "OK",
+            "arch": arch, "shape": shape_name, "kind": cell.kind,
+            "mesh": list(np.asarray(mesh.devices).shape),
+            "axes": list(mesh.axis_names),
+            "n_devices": int(n_dev),
+            "moe_impl": moe_impl,
+            "compile_s": t_compile,
+            "memory": mem,
+            "cost": cost,
+            "xla_cost_analysis_raw": xla_raw,
+            "collectives": coll,
+            "roofline": roof,
+            "model_flops": mf,
+            "useful_compute_ratio": (mf["model_flops"]
+                                     / max(roof["hlo_flops_global"], 1.0)),
+            "hbm_per_device_gb": mem["peak_bytes_estimate"] / 1e9,
+        }
+
+
+def lower_lp(mesh, sources: int = 100_000, destinations: int = 10_000,
+             lambda_axis: Optional[str] = None) -> Dict:
+    """Dry-run the LP solver's distributed dual-ascent iteration."""
+    from repro.core import InstanceSpec, SolveConfig
+    from repro.core.types import LPData, Slab
+    from repro.core.distributed import DistributedMatchingObjective
+    from repro.core.maximizer import agd_step, initial_state
+    from functools import partial
+
+    t0 = time.time()
+    n_dev = mesh.devices.size
+    m = 1
+    # abstract slabs: one bucket at width 32 (nu=20 average fill), rows padded
+    # to the shard count — no allocation, pure ShapeDtypeStruct.
+    n_rows = -(-sources // n_dev) * n_dev
+    w = 32
+    row_spec = P(tuple(mesh.axis_names))
+    f32, i32 = jnp.float32, jnp.int32
+
+    def sds(shape, dt, spec):
+        return jax.ShapeDtypeStruct(shape, dt,
+                                    sharding=NamedSharding(mesh, spec))
+
+    slab = Slab(
+        a_vals=sds((n_rows, w, m), f32, row_spec),
+        c_vals=sds((n_rows, w), f32, row_spec),
+        dest_idx=sds((n_rows, w), i32, row_spec),
+        mask=sds((n_rows, w), jnp.bool_, row_spec),
+        ub=sds((n_rows, w), f32, row_spec),
+        s=sds((n_rows,), f32, row_spec),
+        source_ids=sds((n_rows,), i32, row_spec),
+    )
+    lam_spec = P(None, lambda_axis) if lambda_axis else P()
+    lp = LPData(slabs=(slab,), b=sds((m, destinations), f32, lam_spec))
+    obj = DistributedMatchingObjective(
+        lp=lp, mesh=mesh, source_axes=tuple(mesh.axis_names),
+        lambda_axis=lambda_axis)
+    config = SolveConfig(iterations=1, gamma=0.01)
+
+    def one_iteration(lp_arrays, lam):
+        obj2 = dataclasses.replace(obj, lp=lp_arrays)
+        state = initial_state(lam, config)
+        new_state, stats = agd_step(obj2.calculate, config, state, None)
+        return new_state.lam, stats.dual_obj
+
+    lam_in = sds((m, destinations), f32, lam_spec)
+    lowered = jax.jit(one_iteration).lower(lp, lam_in)
+    compiled = lowered.compile()
+    mem = analysis.memory_summary(compiled)
+    walk = hlo_cost.analyze(compiled.as_text())
+    cost = {"flops_per_device": walk["flops_per_device"],
+            "bytes_per_device": walk["bytes_per_device"]}
+    coll = {**walk["collectives"], "count": walk["collective_count"]}
+    roof = analysis.roofline(cost, coll, n_dev)
+    print(compiled.memory_analysis())
+    return {
+        "status": "OK", "arch": "lp-matching",
+        "shape": f"I{sources}_J{destinations}"
+                 + (f"_lam-{lambda_axis}" if lambda_axis else ""),
+        "kind": "solve", "mesh": list(np.asarray(mesh.devices).shape),
+        "axes": list(mesh.axis_names), "n_devices": int(n_dev),
+        "compile_s": time.time() - t0, "memory": mem, "cost": cost,
+        "collectives": coll, "roofline": roof,
+        "hbm_per_device_gb": mem["peak_bytes_estimate"] / 1e9,
+    }
+
+
+def cell_path(mesh_name: str, arch: str, shape: str, moe_impl: str) -> str:
+    tag = f"_{moe_impl}" if moe_impl != "einsum" else ""
+    return os.path.join(RESULTS, mesh_name, f"{arch}__{shape}{tag}.json")
+
+
+def run_cells(archs, shapes, meshes, moe_impl="einsum", force=False,
+              extra_rules=None, tag="", overrides=None):
+    os.makedirs(RESULTS, exist_ok=True)
+    summary = []
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+        os.makedirs(os.path.join(RESULTS, mesh_name), exist_ok=True)
+        for arch in archs:
+            arch_shapes = ["solve"] if arch.startswith("lp-") else shapes
+            for shape in arch_shapes:
+                path = cell_path(mesh_name, arch, shape, moe_impl)
+                if tag:
+                    path = path.replace(".json", f"_{tag}.json")
+                if os.path.exists(path) and not force:
+                    print(f"[cache] {mesh_name}/{arch}/{shape}")
+                    summary.append(json.load(open(path)))
+                    continue
+                print(f"[lower] {mesh_name}/{arch}/{shape} ...", flush=True)
+                try:
+                    if arch == "lp-matching":
+                        res = lower_lp(mesh)
+                    elif arch == "lp-matching-lamsharded":
+                        res = lower_lp(mesh, lambda_axis="model")
+                    else:
+                        res = lower_cell(arch, shape, mesh, moe_impl,
+                                         extra_rules, overrides)
+                except Exception as e:  # a failure here is a sharding bug
+                    res = {"status": "FAIL", "arch": arch, "shape": shape,
+                           "mesh": mesh_name, "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"[FAIL] {arch}/{shape}: {e}")
+                res.setdefault("arch", arch)
+                res.setdefault("shape", shape)
+                res["mesh_name"] = mesh_name
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                if res["status"] == "OK":
+                    r = res.get("roofline", {})
+                    print(f"[ok] {arch}/{shape} {mesh_name}: "
+                          f"t_c={r.get('t_compute_s', 0):.4f}s "
+                          f"t_m={r.get('t_memory_s', 0):.4f}s "
+                          f"t_x={r.get('t_collective_s', 0):.4f}s "
+                          f"dom={r.get('dominant')} "
+                          f"hbm={res.get('hbm_per_device_gb', 0):.2f}GB "
+                          f"compile={res.get('compile_s', 0):.0f}s",
+                          flush=True)
+                summary.append(res)
+    return summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id | all | lp-matching | lp-matching-lamsharded")
+    ap.add_argument("--shape", default="all",
+                    help="shape name | all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--moe-impl", default="einsum",
+                    choices=["einsum", "gather"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for variant runs")
+    ap.add_argument("--override", action="append", default=[],
+                    help="ModelConfig override key=value (hillclimb variants)")
+    args = ap.parse_args()
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    archs = arch_ids() if args.arch == "all" else [args.arch]
+    if args.arch == "all":
+        archs = archs + ["lp-matching", "lp-matching-lamsharded"]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = (["single", "multipod"] if args.mesh == "both"
+              else [args.mesh])
+    summary = run_cells(archs, shapes, meshes, args.moe_impl, args.force,
+                        tag=args.tag, overrides=overrides or None)
+    n_ok = sum(1 for s in summary if s["status"] == "OK")
+    n_skip = sum(1 for s in summary if s["status"] == "SKIP")
+    n_fail = sum(1 for s in summary if s["status"] == "FAIL")
+    print(f"\n== dry-run complete: {n_ok} OK, {n_skip} SKIP (documented), "
+          f"{n_fail} FAIL ==")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,246 @@
+"""Trip-count-aware cost extraction from compiled HLO text.
+
+XLA's `compiled.cost_analysis()` counts a `while` body ONCE, so any
+scan-over-layers program under-reports FLOPs/bytes/collectives by ~L×.
+This walker parses the compiled module, computes per-computation costs, and
+multiplies `while` bodies by their `known_trip_count` backend_config (with a
+condition-constant fallback), recursing through fusion/call/while edges.
+
+Conventions (documented in EXPERIMENTS.md):
+  * FLOPs = dot FLOPs (2 · |result| · contracted_extent).  Elementwise and
+    transcendental flops are excluded — for LM workloads dots are >95% of
+    compute and the omission is uniform across variants.
+  * bytes accessed = Σ over top-level instructions of (operand + result)
+    bytes, fusions counted as single composite ops (internals are
+    VMEM/register traffic, matching XLA's fusion semantics).
+  * collective bytes = result sizes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (result-size
+    convention; uniform across variants so §Perf deltas are exact).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "f8e4m3b11fnuz": 1, "f8e8m0fnu": 1, "f4e2m1fn": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: Dict[str, Instr]
+    order: List[str]
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        header = re.match(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*\{", s)
+        if header and not s.lstrip().startswith("%param"):
+            cur = Computation(name=header.group(2), instrs={}, order=[])
+            comps[cur.name] = cur
+            if header.group(1):
+                entry = cur.name
+            continue
+        if s.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(s)
+        if not m:
+            continue
+        name, type_str, op, rest = m.groups()
+        # operand names: %refs inside the top-level parens only (good enough:
+        # attr refs like condition=%c / calls=%c are captured separately)
+        paren = rest.split(")")[0]
+        operands = re.findall(r"%([\w.\-]+)", paren)
+        cur.instrs[name] = Instr(name=name, type_str=type_str, op=op,
+                                 operands=operands, raw=s)
+        cur.order.append(name)
+    return comps, entry
+
+
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%([\w.\-]+)")
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    out_elems = 1
+    for d in _shape_dims(instr.type_str):
+        out_elems *= d
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.raw)
+    if not mc or not instr.operands:
+        return 2.0 * out_elems       # degenerate
+    lhs = comp.instrs.get(instr.operands[0])
+    if lhs is None:
+        return 2.0 * out_elems
+    lhs_dims = _shape_dims(lhs.type_str)
+    contract = 1
+    cd = mc.group(1)
+    if cd:
+        for i in cd.split(","):
+            idx = int(i)
+            if idx < len(lhs_dims):
+                contract *= lhs_dims[idx]
+    return 2.0 * out_elems * contract
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_count: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+        self.coll_count += int(other.coll_count * mult)
+
+
+def _trip_count(instr: Instr, comps) -> int:
+    m = _TRIP_RE.search(instr.raw)
+    if m:
+        return int(m.group(1))
+    mc = _COND_RE.search(instr.raw)
+    if mc and mc.group(1) in comps:
+        cond = comps[mc.group(1)]
+        for nm in cond.order:
+            cm = re.search(r"constant\((\d+)\)", cond.instrs[nm].raw)
+            if cm:
+                return int(cm.group(1))
+    return 1
+
+
+def _comp_cost(comp: Computation, comps, memo, inside_fusion=False) -> Cost:
+    key = (comp.name, inside_fusion)
+    if key in memo:
+        return memo[key]
+    total = Cost()
+    for nm in comp.order:
+        ins = comp.instrs[nm]
+        op = ins.op
+        if op == "dot":
+            total.flops += _dot_flops(ins, comp)
+            if not inside_fusion:
+                total.bytes += _type_bytes(ins.type_str) + sum(
+                    _type_bytes(comp.instrs[o].type_str)
+                    for o in ins.operands if o in comp.instrs)
+        elif op in _COLLECTIVES or any(
+                op == f"{c}-start" for c in _COLLECTIVES):
+            kind = op.replace("-start", "")
+            total.coll[kind] += _type_bytes(ins.type_str)
+            total.coll_count += 1
+            if not inside_fusion:
+                total.bytes += _type_bytes(ins.type_str)
+        elif op == "fusion":
+            m = _CALLS_RE.search(ins.raw)
+            if m and m.group(1) in comps:
+                sub = _comp_cost(comps[m.group(1)], comps, memo,
+                                 inside_fusion=True)
+                total.add(Cost(flops=sub.flops, coll=sub.coll,
+                               coll_count=sub.coll_count))
+            if not inside_fusion:
+                total.bytes += _type_bytes(ins.type_str) + sum(
+                    _type_bytes(comp.instrs[o].type_str)
+                    for o in ins.operands if o in comp.instrs)
+        elif op == "while":
+            trips = _trip_count(ins, comps)
+            mb, mc_ = _BODY_RE.search(ins.raw), _COND_RE.search(ins.raw)
+            if mb and mb.group(1) in comps:
+                total.add(_comp_cost(comps[mb.group(1)], comps, memo), trips)
+            if mc_ and mc_.group(1) in comps:
+                total.add(_comp_cost(comps[mc_.group(1)], comps, memo), trips)
+        elif op in ("call", "conditional", "async-start"):
+            for m in (_TO_APPLY_RE.findall(ins.raw)
+                      + _CALLS_RE.findall(ins.raw)):
+                if m in comps:
+                    total.add(_comp_cost(comps[m], comps, memo))
+        elif op in ("reduce", "sort", "scatter", "select-and-scatter",
+                    "reduce-window", "map"):
+            # tiny applied computations: ignore flops, count memory
+            if not inside_fusion:
+                total.bytes += _type_bytes(ins.type_str) + sum(
+                    _type_bytes(comp.instrs[o].type_str)
+                    for o in ins.operands if o in comp.instrs)
+        elif op in ("parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast"):
+            pass
+        else:
+            if not inside_fusion:
+                total.bytes += _type_bytes(ins.type_str) + sum(
+                    _type_bytes(comp.instrs[o].type_str)
+                    for o in ins.operands if o in comp.instrs)
+    memo[key] = total
+    return total
+
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    """Trip-count-aware per-device totals from compiled HLO text."""
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        return {"flops_per_device": 0.0, "bytes_per_device": 0.0,
+                "collective_bytes_per_device": 0.0, "collectives": {}}
+    memo: Dict = {}
+    cost = _comp_cost(comps[entry], comps, memo)
+    return {
+        "flops_per_device": cost.flops,
+        "bytes_per_device": cost.bytes,
+        "collective_bytes_per_device": sum(cost.coll.values()),
+        "collectives": dict(cost.coll),
+        "collective_count": cost.coll_count,
+    }

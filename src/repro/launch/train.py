@@ -1,0 +1,65 @@
+"""Training launcher: `python -m repro.launch.train --arch <id> [...]`.
+
+Local mode runs the REDUCED config on available devices (this container: one
+CPU); the full configs target the production mesh and are validated by
+`repro.launch.dryrun`.  Wires together: config -> model -> data stream ->
+optimizer -> fault-tolerant Trainer (checkpoint/resume/NaN-guard/SIGTERM).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import arch_ids, get_config
+from repro.models import build_model
+from repro.optim import AdamW, Adafactor, cosine_schedule
+from repro.data.pipeline import TokenStream
+from repro.training.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=arch_ids())
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full assigned config (production scale; "
+                         "only sensible on a real cluster)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    stream = TokenStream(vocab=cfg.vocab, batch=args.batch, seq_len=args.seq,
+                         seed=0, frontend=cfg.frontend,
+                         n_frontend=cfg.n_frontend_tokens or 16,
+                         d_model=cfg.d_model)
+    if args.optimizer == "adamw":
+        opt = AdamW(state_dtype=cfg.optstate_dtype)
+    else:
+        opt = Adafactor()
+    trainer = Trainer(
+        model, opt, stream,
+        ckpt_dir=args.ckpt_dir or f"/tmp/repro_ckpt_{args.arch}",
+        lr_fn=cosine_schedule(args.lr, warmup=max(args.steps // 20, 5),
+                              total=args.steps),
+        microbatches=args.microbatches,
+        ckpt_every=args.ckpt_every,
+    )
+    state = trainer.run(args.steps, resume=True)
+    if trainer.history:
+        h0, h1 = trainer.history[0], trainer.history[-1]
+        print(f"steps {h0['step']}..{h1['step']}  "
+              f"loss {h0['loss']:.4f} -> {h1['loss']:.4f}  "
+              f"stragglers={trainer.watchdog.outliers}")
+
+
+if __name__ == "__main__":
+    main()

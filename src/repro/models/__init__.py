@@ -1,0 +1,3 @@
+"""LM-family model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM-stub."""
+from .config import ModelConfig, ShapeCell, SHAPES, cell_applicable
+from .model import Model, build_model

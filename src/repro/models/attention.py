@@ -1,0 +1,256 @@
+"""Attention: GQA/MQA with RoPE (+partial), qk_norm, q-chunk-streamed causal
+attention for train/prefill, and sequence-sharded flash-decode (DESIGN.md §6).
+
+Memory policy:
+  * train/prefill never materialize (B, H, S, S): a lax.scan over query
+    chunks computes exact softmax per chunk against the full key range.
+  * decode KV caches are laid out (B, S, kv, d) with batch -> "data" and
+    S -> "model" (sequence-sharded).  Softmax/contraction over the sharded S
+    lowers to the distributed flash-decode pattern (psum of max/sum stats)
+    under GSPMD — this is what makes 32k x 128-batch caches fit, and is
+    insensitive to kv_heads < model-axis size (GQA kv=1..8).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from .config import ModelConfig
+from .layers import ParamDef, ParamDefs, apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+def attn_defs(cfg: ModelConfig, prefix: str = "attn",
+              stack: Tuple[int, ...] = (), cross: bool = False) -> ParamDefs:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    L = ("layers",) * len(stack)
+    defs = {
+        f"{prefix}/wq": ParamDef(stack + (D, H, hd), cfg.pdtype,
+                                 L + ("fsdp", "heads", "head_dim")),
+        f"{prefix}/wk": ParamDef(stack + (D, KV, hd), cfg.pdtype,
+                                 L + ("fsdp", "kv_heads", "head_dim")),
+        f"{prefix}/wv": ParamDef(stack + (D, KV, hd), cfg.pdtype,
+                                 L + ("fsdp", "kv_heads", "head_dim")),
+        f"{prefix}/wo": ParamDef(stack + (H, hd, D), cfg.pdtype,
+                                 L + ("heads", "head_dim", "fsdp")),
+    }
+    if cfg.qk_norm and not cross:
+        defs[f"{prefix}/qnorm"] = ParamDef(stack + (hd,), cfg.pdtype,
+                                           L + (None,), scale=-1.0)
+        defs[f"{prefix}/knorm"] = ParamDef(stack + (hd,), cfg.pdtype,
+                                           L + (None,), scale=-1.0)
+    return defs
+
+
+def _project_qkv(cfg, p, x, kv_x, prefix, positions, kv_positions,
+                 rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p[f"{prefix}/wq"].astype(cfg.cdtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p[f"{prefix}/wk"].astype(cfg.cdtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p[f"{prefix}/wv"].astype(cfg.cdtype))
+    if cfg.qk_norm and f"{prefix}/qnorm" in p:
+        q = rms_norm(q, p[f"{prefix}/qnorm"], cfg.norm_eps)
+        k = rms_norm(k, p[f"{prefix}/knorm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_fraction, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,H,d)  k: (B,Sk,KV,d) -> f32 scores (B, KV, G, Sq, Sk).
+
+    f32 via preferred_element_type (MXU-native accumulation) — a trailing
+    .astype(f32) makes XLA hoist converts onto the operands, materializing
+    f32 copies of the whole KV cache."""
+    B, Sq, H, d = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, d)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(probs, v):
+    """probs: (B,KV,G,Sq,Sk)  v: (B,Sk,KV,d) -> (B,Sq,H,d)."""
+    B, KV, G, Sq, Sk = probs.shape
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, KV * G, -1)
+
+
+def heads_shardable(cfg: ModelConfig) -> bool:
+    """True iff n_heads divides evenly over the mesh axes assigned to
+    'heads' — decides head-TP vs context-parallel attention."""
+    mesh = sharding.current_mesh()
+    if mesh is None:
+        return True
+    spec = sharding.spec_for(("heads",), mesh)
+    part = spec[0]
+    if part is None:
+        return False
+    axes = part if isinstance(part, tuple) else (part,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n > 1 and cfg.n_heads % n == 0
+
+
+def attention(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+              prefix: str = "attn", kv_x: Optional[jax.Array] = None,
+              causal: bool = True, positions: Optional[jax.Array] = None,
+              rope: bool = True) -> jax.Array:
+    """Full attention for train/prefill, streamed over query chunks.
+
+    Per chunk the softmax is exact (full key row available), so no running
+    LSE statistics are needed; peak memory is (B, KV, G, qc, Sk).
+    """
+    B, S, D = x.shape
+    cross = kv_x is not None
+    kv_src = kv_x if cross else x
+    Sk = kv_src.shape[1]
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    kv_positions = jnp.arange(Sk)[None, :]
+    q, k, v = _project_qkv(cfg, p, x, kv_src, prefix, positions, kv_positions,
+                           rope=rope and not cross)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.head_dim, jnp.float32))
+    head_tp = heads_shardable(cfg)
+    G = cfg.n_heads // cfg.n_kv
+    if head_tp:
+        # Head tensor-parallelism (SP -> TP transition): KV repeated to full
+        # heads so the 4D einsums keep a clean 16-way head tiling; the
+        # repeat is sharded, so per-device KV stays 1/16th.
+        if G > 1:
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
+        q = sharding.constrain(q, "batch", None, "heads", None)
+        k = sharding.constrain(k, "batch", None, "heads", None)
+        v = sharding.constrain(v, "batch", None, "heads", None)
+    else:
+        # Context parallelism: heads do not divide the model axis (gemma 8H,
+        # deepseek 56H); shard the KV sequence instead.  Softmax and the
+        # probs·V contraction reduce over the sharded dim -> GSPMD emits the
+        # distributed flash-attention stats pattern.
+        q = sharding.constrain(q, "batch", None, None, None)
+        k = sharding.constrain(k, "batch", "seq", "kv_heads", None)
+        v = sharding.constrain(v, "batch", "seq", "kv_heads", None)
+
+    qc = min(cfg.attn_q_chunk, S)
+    n = -(-S // qc)
+    pad = n * qc - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions = jnp.pad(positions, ((0, 0), (0, pad)),
+                            constant_values=Sk + 1)
+    qs = q.reshape(B, n, qc, *q.shape[2:]).swapaxes(0, 1)   # (n,B,qc,H,d)
+    pos_s = jnp.broadcast_to(positions, (B, n * qc)) \
+               .reshape(B, n, qc).swapaxes(0, 1)            # (n,B,qc)
+
+    @jax.checkpoint
+    def chunk_out(qb, pb):
+        # rematerialized in backward: f32 scores/probs are never stored as
+        # scan residuals (flash-attention memory behaviour via remat)
+        kv_pos = jnp.arange(Sk)
+        if head_tp:
+            scores = jnp.einsum("bqhd,bshd->bhqs", qb, k,
+                                preferred_element_type=jnp.float32) * scale
+            scores = sharding.constrain(scores, "batch", "heads", None, None)
+            if causal and not cross:
+                mask = pb[:, None, :, None] >= kv_pos[None, None, None, :]
+                scores = jnp.where(mask, scores, NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1).astype(cfg.cdtype)
+            out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+        else:
+            scores = _gqa_scores(qb, k) * scale
+            scores = sharding.constrain(scores, "batch", None, None, None,
+                                        "seq")
+            if causal and not cross:
+                mask = (pb[:, None, None, :, None]
+                        >= kv_pos[None, None, None, None, :])
+                scores = jnp.where(mask, scores, NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1).astype(cfg.cdtype)
+            out = _gqa_out(probs, v)
+        return out
+
+    def chunk(carry, xs):
+        qb, pb = xs
+        return carry, chunk_out(qb, pb)
+
+    _, outs = jax.lax.scan(chunk, None, (qs, pos_s))
+    out = outs.swapaxes(0, 1).reshape(B, n * qc, cfg.n_heads, cfg.head_dim)
+    out = out[:, :S]
+    out = sharding.constrain(out, "batch", None,
+                             "heads" if head_tp else None, None)
+    return jnp.einsum("bshk,hkd->bsd", out, p[f"{prefix}/wo"].astype(cfg.cdtype))
+
+
+# ---------------------------------------------------------------------------
+# decode path: sequence-sharded KV cache
+# ---------------------------------------------------------------------------
+def init_cache_shapes(cfg: ModelConfig, batch: int, seq_len: int,
+                      dtype=None) -> Dict[str, jax.ShapeDtypeStruct]:
+    dt = dtype or cfg.cdtype
+    return {
+        "k": jax.ShapeDtypeStruct((batch, seq_len, cfg.n_kv, cfg.head_dim), dt),
+        "v": jax.ShapeDtypeStruct((batch, seq_len, cfg.n_kv, cfg.head_dim), dt),
+    }
+
+
+def cache_pspec():
+    from .config import ModelConfig  # noqa: F401
+    return {
+        "k": sharding.spec_for(("cache_batch", "cache_seq", "kv_heads", None)),
+        "v": sharding.spec_for(("cache_batch", "cache_seq", "kv_heads", None)),
+    }
+
+
+def decode_attention(cfg: ModelConfig, p: Dict[str, jax.Array],
+                     x: jax.Array, cache: Dict[str, jax.Array],
+                     pos: jax.Array, prefix: str = "attn",
+                     update_cache: bool = True,
+                     rope: bool = True) -> Tuple[jax.Array, Dict]:
+    """One-token attention against a (B, S, kv, d) cache.
+
+    S is sharded over "model": the softmax max/sum and the probs·V
+    contraction reduce over the sharded axis, which GSPMD lowers to the
+    flash-decode psum pattern.  The new (k, v) is written at `pos` via
+    dynamic_update_slice on the sharded dim (GSPMD emits a masked update).
+    """
+    B, one, D = x.shape
+    S = cache["k"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(cfg, p, x, x, prefix, positions, positions,
+                                   rope=rope)
+    if update_cache:
+        # masked select instead of dynamic_update_slice: the write at a
+        # dynamic position on the seq-SHARDED dim stays fully local per
+        # shard (a DUS here makes GSPMD all-gather the whole cache).
+        s_idx = jnp.arange(S)[None, :, None, None]
+        k = jnp.where(s_idx == pos, k_new.astype(cache["k"].dtype),
+                      cache["k"])
+        v = jnp.where(s_idx == pos, v_new.astype(cache["v"].dtype),
+                      cache["v"])
+    else:
+        k, v = cache["k"], cache["v"]
+    k = sharding.constrain(k, "cache_batch", "cache_seq", "kv_heads", None)
+    v = sharding.constrain(v, "cache_batch", "cache_seq", "kv_heads", None)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.head_dim, jnp.float32))
+    scores = _gqa_scores(q, k.astype(cfg.cdtype)) * scale
+    # pin the flash-decode pattern: scores stay SEQ-SHARDED (q is replicated
+    # over "model", so without this GSPMD may instead all-gather the whole
+    # K/V cache — 1 GB/layer/device for deepseek's 32k x 128 cell).
+    scores = sharding.constrain(scores, "cache_batch", None, None, None,
+                                "cache_seq")
+    valid = jnp.arange(S)[None, None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, NEG_INF)
+    # softmax max/sum reduce over the sharded dim (all-reduce of tiny stats);
+    # the probs·V contraction psums the (B, H, d) partial outputs.
+    probs = jax.nn.softmax(scores, axis=-1).astype(cfg.cdtype)
+    out = _gqa_out(probs, v.astype(cfg.cdtype))
+    out = sharding.constrain(out, "cache_batch", None, None, None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p[f"{prefix}/wo"].astype(cfg.cdtype))
+    new_cache = {"k": k, "v": v} if update_cache else cache
+    return y, new_cache

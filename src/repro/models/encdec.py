@@ -1,0 +1,163 @@
+"""Encoder-decoder backbone (seamless-m4t): audio-frontend stub -> encoder,
+token decoder with cross-attention.  The modality frontend is a STUB per the
+assignment: `input_specs()` supplies precomputed frame embeddings
+(B, S_src, d_model); the graded backbone is the transformer itself.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from .config import ModelConfig
+from .layers import (ParamDef, ParamDefs, chunked_xent, embed_defs,
+                     embed_tokens, logits_last, mlp_apply, mlp_defs, rms_norm)
+from .attention import (attn_defs, attention, decode_attention,
+                        init_cache_shapes, cache_pspec)
+
+
+def encdec_param_defs(cfg: ModelConfig) -> ParamDefs:
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    defs = dict(embed_defs(cfg))
+    defs["frontend/proj"] = ParamDef((cfg.d_model, cfg.d_model), cfg.pdtype,
+                                     ("fsdp", "embed"))
+    defs["enc_final_norm"] = ParamDef((cfg.d_model,), cfg.pdtype, (None,),
+                                      scale=-1.0)
+    defs["final_norm"] = ParamDef((cfg.d_model,), cfg.pdtype, (None,),
+                                  scale=-1.0)
+    enc = {
+        "enc/norm1": ParamDef((Le, cfg.d_model), cfg.pdtype,
+                              ("layers", None), scale=-1.0),
+        "enc/norm2": ParamDef((Le, cfg.d_model), cfg.pdtype,
+                              ("layers", None), scale=-1.0),
+        **attn_defs(cfg, prefix="enc/attn", stack=(Le,)),
+        **mlp_defs(cfg, prefix="enc/mlp", stack=(Le,)),
+    }
+    dec = {
+        "dec/norm1": ParamDef((Ld, cfg.d_model), cfg.pdtype,
+                              ("layers", None), scale=-1.0),
+        "dec/norm2": ParamDef((Ld, cfg.d_model), cfg.pdtype,
+                              ("layers", None), scale=-1.0),
+        "dec/norm3": ParamDef((Ld, cfg.d_model), cfg.pdtype,
+                              ("layers", None), scale=-1.0),
+        **attn_defs(cfg, prefix="dec/self", stack=(Ld,)),
+        **attn_defs(cfg, prefix="dec/cross", stack=(Ld,), cross=True),
+        **mlp_defs(cfg, prefix="dec/mlp", stack=(Ld,)),
+    }
+    defs.update(enc)
+    defs.update(dec)
+    return defs
+
+
+def _subtree(params, pre):
+    return {k[len(pre):]: v for k, v in params.items() if k.startswith(pre)}
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_src, D) stub embeddings -> encoder states."""
+    x = frames.astype(cfg.cdtype) @ params["frontend/proj"].astype(cfg.cdtype)
+    x = sharding.constrain(x, "batch", "seq", None)
+    enc = _subtree(params, "enc/")
+
+    def body(x, p):
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        h = attention(cfg, p, h, prefix="attn", causal=False)
+        x = x + h
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlp_apply(cfg, p, h, prefix="mlp")
+        return sharding.constrain(x, "batch", "seq", None), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, enc)
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def decode_train(cfg: ModelConfig, params, tokens: jax.Array,
+                 memory: jax.Array) -> jax.Array:
+    """Teacher-forced decoder pass -> hidden states (B, S_tgt, D)."""
+    x = embed_tokens(cfg, params, tokens)
+    dec = _subtree(params, "dec/")
+
+    def body(x, p):
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        h = attention(cfg, p, h, prefix="self", causal=True)
+        x = x + h
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        h = attention(cfg, p, h, prefix="cross", kv_x=memory, causal=False)
+        x = x + h
+        h = rms_norm(x, p["norm3"], cfg.norm_eps)
+        x = x + mlp_apply(cfg, p, h, prefix="mlp")
+        return sharding.constrain(x, "batch", "seq", None), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, dec)
+    return x
+
+
+def encdec_loss(cfg: ModelConfig, params, batch: Dict[str, jax.Array]):
+    memory = encode(cfg, params, batch["frames"])
+    h = decode_train(cfg, params, batch["tokens"], memory)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return chunked_xent(cfg, params, h, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def encdec_cache_shapes(cfg: ModelConfig, batch: int, seq_len: int,
+                        src_len: int):
+    """Per-layer (unstacked) cache buffers — see transformer.lm_cache_shapes
+    for the aliasing rationale."""
+    self_c = tuple(init_cache_shapes(cfg, batch, seq_len)
+                   for _ in range(cfg.n_layers))
+    cross = tuple({
+        "k": jax.ShapeDtypeStruct((batch, src_len, cfg.n_kv, cfg.head_dim),
+                                  cfg.cdtype),
+        "v": jax.ShapeDtypeStruct((batch, src_len, cfg.n_kv, cfg.head_dim),
+                                  cfg.cdtype),
+    } for _ in range(cfg.n_layers))
+    return {"self": self_c, "cross": cross}
+
+
+def encdec_cache_pspecs(cfg: ModelConfig):
+    P = jax.sharding.PartitionSpec
+    base = cache_pspec()
+    cross_spec = sharding.spec_for(("cache_batch", "frames", "kv_heads",
+                                    None))
+    return {
+        "self": tuple({k: P(*v) for k, v in base.items()}
+                      for _ in range(cfg.n_layers)),
+        "cross": tuple({k: cross_spec for k in ("k", "v")}
+                       for _ in range(cfg.n_layers)),
+    }
+
+
+def encdec_decode_step(cfg: ModelConfig, params, caches, tokens: jax.Array,
+                       pos: jax.Array):
+    """One decoder token against self-cache (seq-sharded) + fixed cross K/V."""
+    x = embed_tokens(cfg, params, tokens)
+    dec = _subtree(params, "dec/")
+    new_self = list(caches["self"])
+    for i in range(cfg.n_layers):
+        p = jax.tree.map(lambda a: a[i], dec)
+        self_c, cross_c = caches["self"][i], caches["cross"][i]
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        h, nc = decode_attention(cfg, p, h, self_c, pos, prefix="self")
+        new_self[i] = jax.tree.map(lambda n, o: n.astype(o.dtype), nc, self_c)
+        x = x + h
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        h, _ = decode_attention(cfg, p, h, cross_c,
+                                jnp.asarray(cross_c["k"].shape[1] - 1,
+                                            jnp.int32),
+                                prefix="cross", update_cache=False,
+                                rope=False)
+        x = x + h
+        h = rms_norm(x, p["norm3"], cfg.norm_eps)
+        x = x + mlp_apply(cfg, p, h, prefix="mlp")
+    h = rms_norm(x[:, 0, :], params["final_norm"], cfg.norm_eps)
+    return logits_last(cfg, params, h), {"self": tuple(new_self),
+                                         "cross": caches["cross"]}

@@ -1,0 +1,193 @@
+"""Shared neural layers: params-as-data, norms, RoPE, gated MLPs, chunked xent.
+
+Models are pure functions over flat param dicts ("path" -> array).  Each
+param is declared once as a ParamDef carrying shape, dtype, init scale and
+*logical* sharding axes — a single source of truth used for init,
+ShapeDtypeStruct dry-run stand-ins, and sharding specs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from .config import ModelConfig
+
+
+class ParamDef(NamedTuple):
+    shape: Tuple[int, ...]
+    dtype: object
+    logical: Tuple[Optional[str], ...]
+    scale: float = 1.0          # normal stddev multiplier; 0 => zeros, -1 => ones
+
+
+ParamDefs = Dict[str, ParamDef]
+
+
+def init_params(defs: ParamDefs, key: jax.Array) -> Dict[str, jax.Array]:
+    keys = jax.random.split(key, len(defs))
+    out = {}
+    for (path, d), k in zip(sorted(defs.items()), keys):
+        if d.scale == 0.0:
+            out[path] = jnp.zeros(d.shape, d.dtype)
+        elif d.scale == -1.0:
+            out[path] = jnp.ones(d.shape, d.dtype)
+        else:
+            fan_in = d.shape[0] if len(d.shape) > 1 else max(d.shape[0], 1)
+            std = d.scale / math.sqrt(fan_in)
+            out[path] = (jax.random.normal(k, d.shape, jnp.float32) * std
+                         ).astype(d.dtype)
+    return out
+
+
+def abstract_params(defs: ParamDefs) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {p: jax.ShapeDtypeStruct(d.shape, d.dtype) for p, d in defs.items()}
+
+
+def param_pspecs(defs: ParamDefs) -> Dict[str, object]:
+    """PartitionSpecs from logical axes, shape-fitted under the active mesh
+    (divisibility fallback + axis dedup happen here, not at use sites)."""
+    return {p: sharding.spec_for(d.logical, shape=d.shape)
+            for p, d in defs.items()}
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, fraction: float, theta: float):
+    """Frequencies for the rotated sub-dimension (chatglm's '2d RoPE' rotates
+    only the first half of head_dim: fraction=0.5; standard: fraction=1)."""
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return rot, inv
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, fraction: float,
+               theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    D = x.shape[-1]
+    rot, inv = rope_freqs(D, fraction, theta)
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = positions[..., None].astype(jnp.float32) * inv          # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+def mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None,
+             prefix: str = "mlp", stack: Tuple[int, ...] = ()) -> ParamDefs:
+    ff = d_ff or cfg.d_ff
+    L = ("layers",) * len(stack)
+    return {
+        f"{prefix}/wg": ParamDef(stack + (cfg.d_model, ff), cfg.pdtype,
+                                 L + ("fsdp", "ff")),
+        f"{prefix}/wu": ParamDef(stack + (cfg.d_model, ff), cfg.pdtype,
+                                 L + ("fsdp", "ff")),
+        f"{prefix}/wo": ParamDef(stack + (ff, cfg.d_model), cfg.pdtype,
+                                 L + ("ff", "fsdp")),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+              prefix: str = "mlp") -> jax.Array:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    g = act(x @ p[f"{prefix}/wg"].astype(cfg.cdtype))
+    u = x @ p[f"{prefix}/wu"].astype(cfg.cdtype)
+    h = sharding.constrain(g * u, "batch", None, "ff")
+    return h @ p[f"{prefix}/wo"].astype(cfg.cdtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings + chunked softmax cross-entropy
+# ---------------------------------------------------------------------------
+def embed_defs(cfg: ModelConfig) -> ParamDefs:
+    V = cfg.padded_vocab          # tiles evenly on the model axis
+    defs = {"embed/tok": ParamDef((V, cfg.d_model), cfg.pdtype,
+                                  ("vocab", "fsdp"), scale=1.0)}
+    if not cfg.tie_embeddings:
+        defs["embed/out"] = ParamDef((cfg.d_model, V), cfg.pdtype,
+                                     ("fsdp", "vocab"))
+    return defs
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens: jax.Array) -> jax.Array:
+    emb = p["embed/tok"].astype(cfg.cdtype)
+    x = jnp.take(emb, tokens, axis=0)
+    return sharding.constrain(x * jnp.sqrt(float(cfg.d_model)).astype(cfg.cdtype),
+                              "batch", "seq", None)
+
+
+def _out_matrix(cfg: ModelConfig, p) -> jax.Array:
+    if cfg.tie_embeddings:
+        return p["embed/tok"].astype(cfg.cdtype).T
+    return p["embed/out"].astype(cfg.cdtype)
+
+
+def logits_last(cfg: ModelConfig, p, h: jax.Array) -> jax.Array:
+    """Logits for the last position only (decode path): h (B, D) -> (B, V)."""
+    out = h @ _out_matrix(cfg, p)
+    return sharding.constrain(out, "batch", "vocab")
+
+
+def chunked_xent(cfg: ModelConfig, p, h: jax.Array,
+                 labels: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy without materializing (B, S, V).
+
+    Scans over sequence chunks; per chunk computes logits, logsumexp and the
+    label logit, accumulating the loss in f32.  Peak memory is
+    (B, chunk, V/model_shards) — the standard large-vocab trick.
+    """
+    B, S, D = h.shape
+    C = min(cfg.xent_chunk, S)
+    n = -(-S // C)
+    pad = n * C - S
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = h.reshape(B, n, C, D).swapaxes(0, 1)          # (n, B, C, D)
+    lc = labels.reshape(B, n, C).swapaxes(0, 1)        # (n, B, C)
+    out_w = _out_matrix(cfg, p)
+
+    @jax.checkpoint
+    def chunk_loss(hb, lb):
+        # rematerialized in backward: the (B, C, V) logits never become
+        # stored scan residuals (the large-vocab memory trick, part 2)
+        logits = (hb @ out_w).astype(jnp.float32)      # (B, C, V)
+        logits = sharding.constrain(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lbl = jnp.clip(lb, 0, cfg.vocab - 1)
+        picked = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+        valid = (lb >= 0).astype(jnp.float32)
+        return jnp.sum((lse - picked) * valid), jnp.sum(valid)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hb, lb = xs
+        t, c = chunk_loss(hb, lb)
+        return (tot + t, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,228 @@
+"""Mamba2 (SSD — state-space duality, Dao & Gu 2024) in pure JAX.
+
+Training/prefill uses the chunked SSD form: within a chunk of length Q the
+computation is a decay-masked quadratic "attention" (MXU-friendly einsums);
+across chunks a recurrent state h ∈ (B, nh, hp, N) is carried by a scan.
+Decode is the O(1) single-step recurrence
+
+    h_t = exp(Δt·a) ⊙ h_{t-1} + Δt · x_t ⊗ B_t,     y_t = C_t · h_t + D·x_t.
+
+Sharding: heads (nh) over "model" ("ssm_heads"), batch over ("pod","data"),
+state N unsharded.  Projections are split per-component (z/x/B/C/dt) so TP
+boundaries never cross a semantic boundary.
+
+This is a TPU-native layout choice: the official CUDA kernels fuse the
+chunk scan in shared memory; here each chunk-local einsum maps to the MXU
+and the inter-chunk recurrence is a lax.scan of (B, nh, hp, N) states —
+see DESIGN.md §2 (hardware adaptation).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from .config import ModelConfig
+from .layers import ParamDef, ParamDefs, rms_norm
+
+
+def dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_head_dim
+    return di, nh, cfg.ssm_state
+
+
+def mamba_defs(cfg: ModelConfig, prefix: str = "mamba",
+               stack: Tuple[int, ...] = ()) -> ParamDefs:
+    D = cfg.d_model
+    di, nh, N = dims(cfg)
+    K = cfg.ssm_conv
+    L = ("layers",) * len(stack)
+    return {
+        f"{prefix}/wz": ParamDef(stack + (D, di), cfg.pdtype, L + ("fsdp", "ff")),
+        f"{prefix}/wx": ParamDef(stack + (D, di), cfg.pdtype, L + ("fsdp", "ff")),
+        f"{prefix}/wB": ParamDef(stack + (D, N), cfg.pdtype, L + ("fsdp", None)),
+        f"{prefix}/wC": ParamDef(stack + (D, N), cfg.pdtype, L + ("fsdp", None)),
+        f"{prefix}/wdt": ParamDef(stack + (D, nh), cfg.pdtype, L + ("fsdp", None)),
+        f"{prefix}/conv_x": ParamDef(stack + (K, di), cfg.pdtype,
+                                     L + (None, "ff"), scale=-1.0),
+        f"{prefix}/conv_B": ParamDef(stack + (K, N), cfg.pdtype,
+                                     L + (None, None), scale=-1.0),
+        f"{prefix}/conv_C": ParamDef(stack + (K, N), cfg.pdtype,
+                                     L + (None, None), scale=-1.0),
+        f"{prefix}/dt_bias": ParamDef(stack + (nh,), jnp.float32,
+                                      L + (None,), scale=0.0),
+        f"{prefix}/A_log": ParamDef(stack + (nh,), jnp.float32,
+                                    L + (None,), scale=0.0),
+        f"{prefix}/Dskip": ParamDef(stack + (nh,), jnp.float32,
+                                    L + (None,), scale=-1.0),
+        f"{prefix}/norm": ParamDef(stack + (di,), cfg.pdtype,
+                                   L + ("ff",), scale=-1.0),
+        f"{prefix}/wo": ParamDef(stack + (di, D), cfg.pdtype, L + ("ff", "fsdp")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via K shifted adds.  x: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    y = x * w[-1]
+    for k in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, :-k, :]
+        y = y + shifted * w[K - 1 - k]
+    return y
+
+
+def _project(cfg, p, prefix, x):
+    z = x @ p[f"{prefix}/wz"].astype(cfg.cdtype)
+    xs = x @ p[f"{prefix}/wx"].astype(cfg.cdtype)
+    Bm = x @ p[f"{prefix}/wB"].astype(cfg.cdtype)
+    Cm = x @ p[f"{prefix}/wC"].astype(cfg.cdtype)
+    dt = x @ p[f"{prefix}/wdt"].astype(cfg.cdtype)
+    return z, xs, Bm, Cm, dt
+
+
+def mamba_apply(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+                prefix: str = "mamba") -> jax.Array:
+    """Chunked SSD forward (train/prefill).  x: (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    di, nh, N = dims(cfg)
+    hp = cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    z, xs, Bm, Cm, dt = _project(cfg, p, prefix, x)
+    # SP -> TP transition: inside the mixer the "model" axis holds d_inner
+    # channels (z/x) — never the sequence.
+    z = sharding.constrain(z, "batch", None, "ff")
+    xs = sharding.constrain(xs, "batch", None, "ff")
+    # dt drives cum/diff/Lmask/att — (B,nc,Q,Q,nh) tensors inherit THIS
+    # sharding; without it they are replicated over "model" (16x memory).
+    dt = sharding.constrain(dt, "batch", None, "ssm_heads")
+    xs = jax.nn.silu(_causal_conv(xs, p[f"{prefix}/conv_x"].astype(cfg.cdtype)))
+    Bm = jax.nn.silu(_causal_conv(Bm, p[f"{prefix}/conv_B"].astype(cfg.cdtype)))
+    Cm = jax.nn.silu(_causal_conv(Cm, p[f"{prefix}/conv_C"].astype(cfg.cdtype)))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p[f"{prefix}/dt_bias"])               # (B,S,nh)
+    a = -jnp.exp(p[f"{prefix}/A_log"])                           # (nh,)
+    da = dt * a                                                   # (B,S,nh) <= 0
+
+    xh = xs.reshape(B, S, nh, hp)
+    xh = sharding.constrain(xh, "batch", None, "ssm_heads", None)
+    # chunk views
+    dac = da.reshape(B, nc, Q, nh)
+    cum = jnp.cumsum(dac, axis=2)                                # (B,nc,Q,nh)
+    seg_end = cum[:, :, -1, :]                                   # (B,nc,nh)
+    xc = xh.reshape(B, nc, Q, nh, hp)
+    dtc = dt.reshape(B, nc, Q, nh)
+    Bc = Bm.reshape(B, nc, Q, N)
+    Cc = Cm.reshape(B, nc, Q, N)
+
+    # ---- intra-chunk (quadratic within chunk, decay-masked) ----
+    # L[i,j] = exp(cum_i - cum_j) for i >= j, else 0.  The exponent is
+    # masked BEFORE exp: the upper triangle has positive diff -> exp would
+    # overflow and poison gradients through the jnp.where (NaN-grad trap).
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]         # (B,nc,Q,Q,nh)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    diff = jnp.where(causal[None, None, :, :, None], diff, -1e30)
+    Lmask = jnp.exp(diff).astype(cfg.cdtype)       # (B,nc,Q,Q,nh) — big:
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)     # keep in compute dtype
+    att = (cb[..., None] * Lmask
+           * dtc.astype(cfg.cdtype)[:, :, None, :, :])
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xc,
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk states + inter-chunk recurrence ----
+    decay_out = jnp.exp(seg_end[:, :, None, :] - cum)            # (B,nc,Q,nh)
+    state_c = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                         (dtc * decay_out), Bc.astype(jnp.float32),
+                         xc.astype(jnp.float32))                 # (B,nc,nh,hp,N)
+
+    def scan_fn(h, inp):
+        st, se = inp                                              # (B,nh,hp,N),(B,nh)
+        h_new = h * jnp.exp(se)[:, :, None, None] + st
+        return h_new, h                                           # emit state BEFORE chunk
+
+    h0 = jnp.zeros((B, nh, hp, N), jnp.float32)
+    _, h_before = jax.lax.scan(
+        scan_fn, h0, (state_c.swapaxes(0, 1), seg_end.swapaxes(0, 1)))
+    h_before = h_before.swapaxes(0, 1)                            # (B,nc,nh,hp,N)
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         Cc.astype(jnp.float32), h_before,
+                         jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(B, S, nh, hp)
+    y = y + p[f"{prefix}/Dskip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(cfg.cdtype)
+
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p[f"{prefix}/norm"], cfg.norm_eps)
+    return y @ p[f"{prefix}/wo"].astype(cfg.cdtype)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_mamba_cache_shapes(cfg: ModelConfig, batch: int, dtype=None):
+    di, nh, N = dims(cfg)
+    dt = dtype or cfg.cdtype
+    K = cfg.ssm_conv
+    return {
+        "conv_x": jax.ShapeDtypeStruct((batch, K - 1, di), dt),
+        "conv_B": jax.ShapeDtypeStruct((batch, K - 1, N), dt),
+        "conv_C": jax.ShapeDtypeStruct((batch, K - 1, N), dt),
+        "ssm": jax.ShapeDtypeStruct((batch, nh, cfg.ssm_head_dim, N),
+                                    jnp.float32),
+    }
+
+
+def mamba_cache_pspec():
+    return {
+        "conv_x": sharding.spec_for(("cache_batch", None, "ff")),
+        "conv_B": sharding.spec_for(("cache_batch", None, None)),
+        "conv_C": sharding.spec_for(("cache_batch", None, None)),
+        "ssm": sharding.spec_for(("cache_batch", "ssm_heads", None, None)),
+    }
+
+
+def _conv_step(x_t, state, w):
+    """x_t: (B,C); state: (B,K-1,C); w: (K,C) -> (y_t, new_state)."""
+    full = jnp.concatenate([state, x_t[:, None, :]], axis=1)      # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", full, w)
+    return y, full[:, 1:, :]
+
+
+def mamba_decode_step(cfg: ModelConfig, p: Dict[str, jax.Array],
+                      x: jax.Array, cache: Dict[str, jax.Array],
+                      prefix: str = "mamba"):
+    """x: (B,1,D) -> (y (B,1,D), new cache).  O(1) recurrence."""
+    B = x.shape[0]
+    di, nh, N = dims(cfg)
+    hp = cfg.ssm_head_dim
+    z, xs, Bm, Cm, dt = _project(cfg, p, prefix, x[:, 0, :])
+    xs, cx = _conv_step(xs, cache["conv_x"].astype(cfg.cdtype),
+                        p[f"{prefix}/conv_x"].astype(cfg.cdtype))
+    Bm, cB = _conv_step(Bm, cache["conv_B"].astype(cfg.cdtype),
+                        p[f"{prefix}/conv_B"].astype(cfg.cdtype))
+    Cm, cC = _conv_step(Cm, cache["conv_C"].astype(cfg.cdtype),
+                        p[f"{prefix}/conv_C"].astype(cfg.cdtype))
+    xs, Bm, Cm = map(jax.nn.silu, (xs, Bm, Cm))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p[f"{prefix}/dt_bias"])
+    a = -jnp.exp(p[f"{prefix}/A_log"])
+    da = jnp.exp(dt * a)                                          # (B,nh)
+
+    xh = xs.reshape(B, nh, hp).astype(jnp.float32)
+    h = cache["ssm"] * da[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bm.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h)
+    y = y + p[f"{prefix}/Dskip"][None, :, None] * xh
+    y = y.reshape(B, 1, di).astype(cfg.cdtype)
+    y = y * jax.nn.silu(z)[:, None, :]
+    y = rms_norm(y, p[f"{prefix}/norm"], cfg.norm_eps)
+    out = y @ p[f"{prefix}/wo"].astype(cfg.cdtype)
+    return out, {"conv_x": cx.astype(cache["conv_x"].dtype),
+                 "conv_B": cB.astype(cache["conv_B"].dtype),
+                 "conv_C": cC.astype(cache["conv_C"].dtype),
+                 "ssm": h}

@@ -1,0 +1,168 @@
+"""build_model(config) — one façade over the zoo.
+
+Returns a `Model` with a uniform functional surface used by the trainer,
+the serving engine, and the dry-run:
+
+  param_defs()                  single source of truth (shape/dtype/logical)
+  init(key) / abstract_params() materialized or ShapeDtypeStruct params
+  param_pspecs()                PartitionSpecs under the active mesh rules
+  loss(params, batch)           train objective (next-token xent [+ moe aux])
+  prefill(params, batch)        full-context forward -> last-position logits
+  decode_step(params, caches, tokens, pos)
+  cache_shapes(batch, seq_len)  / cache_pspecs()
+  input_specs(shape_cell)       ShapeDtypeStructs for the dry-run
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from .config import ModelConfig, ShapeCell
+from . import layers, transformer, encdec
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    moe_impl: str = "einsum"
+
+    # -- params ------------------------------------------------------------
+    def param_defs(self):
+        if self.cfg.is_encdec:
+            return encdec.encdec_param_defs(self.cfg)
+        return transformer.lm_param_defs(self.cfg)
+
+    def init(self, key: jax.Array):
+        return layers.init_params(self.param_defs(), key)
+
+    def abstract_params(self):
+        return layers.abstract_params(self.param_defs())
+
+    def param_pspecs(self):
+        return layers.param_pspecs(self.param_defs())
+
+    @property
+    def use_rope(self) -> bool:
+        # jamba-style hybrids rely on mamba for position; no rope there
+        return not (self.cfg.family == "hybrid")
+
+    # -- training ------------------------------------------------------------
+    def loss(self, params, batch) -> jax.Array:
+        if self.cfg.is_encdec:
+            return encdec.encdec_loss(self.cfg, params, batch)
+        return transformer.lm_loss(self.cfg, params, batch,
+                                   moe_impl=self.moe_impl,
+                                   use_rope=self.use_rope)
+
+    # -- serving ---------------------------------------------------------
+    def prefill(self, params, batch) -> jax.Array:
+        if self.cfg.is_encdec:
+            memory = encdec.encode(self.cfg, params, batch["frames"])
+            h = encdec.decode_train(self.cfg, params, batch["tokens"], memory)
+            h = layers.rms_norm(h[:, -1, :], params["final_norm"],
+                                self.cfg.norm_eps)
+            return layers.logits_last(self.cfg, params, h)
+        tokens = batch["tokens"]
+        if self.cfg.frontend == "patches" and "patches" in batch:
+            x = layers.embed_tokens(self.cfg, params, tokens)
+            x = transformer._merge_frontend(self.cfg, params, x,
+                                            batch["patches"])
+            h, _ = transformer.lm_backbone(self.cfg, params, x,
+                                           self.moe_impl, self.use_rope)
+            h = layers.rms_norm(h[:, -1, :], params["final_norm"],
+                                self.cfg.norm_eps)
+            return layers.logits_last(self.cfg, params, h)
+        return transformer.lm_prefill(self.cfg, params, tokens,
+                                      moe_impl=self.moe_impl,
+                                      use_rope=self.use_rope)
+
+    def decode_step(self, params, caches, tokens, pos):
+        if self.cfg.is_encdec:
+            return encdec.encdec_decode_step(self.cfg, params, caches,
+                                             tokens, pos)
+        return transformer.lm_decode_step(self.cfg, params, caches, tokens,
+                                          pos, moe_impl=self.moe_impl,
+                                          use_rope=self.use_rope)
+
+    def cache_shapes(self, batch: int, seq_len: int, src_len: int = 4096):
+        if self.cfg.is_encdec:
+            return encdec.encdec_cache_shapes(self.cfg, batch, seq_len,
+                                              src_len)
+        return transformer.lm_cache_shapes(self.cfg, batch, seq_len)
+
+    def cache_pspecs(self):
+        if self.cfg.is_encdec:
+            return encdec.encdec_cache_pspecs(self.cfg)
+        return transformer.lm_cache_pspecs(self.cfg)
+
+    # -- dry-run input stand-ins ------------------------------------------
+    def input_specs(self, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+        train:   {tokens, labels [, frames | patches]}
+        prefill: {tokens [, frames | patches]}
+        decode:  {tokens (B,1), pos, caches}
+        """
+        B, S = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        cfg = self.cfg
+        if cell.kind in ("train", "prefill"):
+            if cfg.is_encdec:
+                # split the cell's seq budget: half frames, half tokens
+                s_src, s_tgt = S // 2, S // 2
+                specs = {
+                    "frames": jax.ShapeDtypeStruct((B, s_src, cfg.d_model),
+                                                   cfg.cdtype),
+                    "tokens": jax.ShapeDtypeStruct((B, s_tgt), i32),
+                }
+                if cell.kind == "train":
+                    specs["labels"] = jax.ShapeDtypeStruct((B, s_tgt), i32)
+                return specs
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if cfg.frontend == "patches":
+                # vlm stub: patch embeddings prepended; token budget reduced
+                P = cfg.n_frontend_tokens
+                specs["tokens"] = jax.ShapeDtypeStruct((B, S - P), i32)
+                specs["patches"] = jax.ShapeDtypeStruct((B, P, cfg.d_model),
+                                                        cfg.cdtype)
+            if cell.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct(
+                    (B, specs["tokens"].shape[1]), i32)
+            return specs
+        # decode: one new token against a seq_len cache
+        if cfg.is_encdec:
+            caches = self.cache_shapes(B, S, src_len=4096)
+        else:
+            caches = self.cache_shapes(B, S)
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+            "caches": caches,
+        }
+
+    def input_pspecs(self, cell: ShapeCell):
+        """PartitionSpecs mirroring input_specs (under active mesh rules)."""
+        P = jax.sharding.PartitionSpec
+        sp = sharding.spec_for
+        if cell.kind in ("train", "prefill"):
+            specs = {"tokens": sp(("batch", "seq"))}
+            if self.cfg.is_encdec:
+                specs["frames"] = sp(("batch", "seq", None))
+            if self.cfg.frontend == "patches":
+                specs["patches"] = sp(("batch", None, None))
+            if cell.kind == "train":
+                specs["labels"] = sp(("batch", "seq"))
+            return specs
+        return {
+            "tokens": sp(("cache_batch", None)),
+            "pos": P(),
+            "caches": self.cache_pspecs(),
+        }
+
+
+def build_model(cfg: ModelConfig, moe_impl: str = "einsum") -> Model:
+    return Model(cfg=cfg, moe_impl=moe_impl)

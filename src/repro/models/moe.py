@@ -1,0 +1,199 @@
+"""Mixture-of-Experts layer with expert parallelism over the "model" axis.
+
+Two mathematically identical dispatch implementations (same router, same
+capacity/drop policy — tested equal):
+
+  * "einsum"  — classic one-hot dispatch/combine (Mesh-TF / early-MaxText
+    style), grouped over token blocks of `GROUP` so the (tokens, E, C)
+    one-hot stays bounded.  Fully SPMD-local (each data shard routes its own
+    tokens; experts sharded over "model"), but the one-hot contractions cost
+    O(T·g·k·cf·d) dead MACs.  This is the paper-faithful-simple BASELINE.
+  * "gather"  — index-based dispatch: intra-expert rank via cumsum, scatter
+    rows into an (E, C, d) buffer, scatter-add back.  Same routing
+    decisions, ~zero extra matmul FLOPs.  Beyond-paper §Perf optimization;
+    the roofline's MODEL_FLOPS/HLO_FLOPs ratio shows the win directly.
+
+Capacity: C = ceil(tokens_per_group · top_k · cf / E); tokens beyond an
+expert's capacity are dropped (contribute 0) in BOTH variants.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from .config import ModelConfig
+from .layers import ParamDef, ParamDefs
+
+CAPACITY_FACTOR = 1.25   # default; ModelConfig.moe_capacity_factor overrides
+GROUP = 256          # tokens per routing group (einsum variant)
+
+
+def moe_defs(cfg: ModelConfig, prefix: str = "moe",
+             stack: Tuple[int, ...] = ()) -> ParamDefs:
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    L = ("layers",) * len(stack)
+    defs = {
+        f"{prefix}/router": ParamDef(stack + (D, E), jnp.float32,
+                                     L + ("fsdp", None)),
+        # expert weights are EP-only over "model" (experts axis); putting
+        # "ff" on "model" too would double-book the mesh axis.  fsdp still
+        # shards the d_model dim over "data".
+        # "expert_fsdp" stays data-sharded even under the serving layout:
+        # 398B-class MoE weights cannot be E-sharded-only on 16GB chips, so
+        # serving pays a per-use gather of the local expert instead.
+        f"{prefix}/wg": ParamDef(stack + (E, D, F), cfg.pdtype,
+                                 L + ("experts", "expert_fsdp", None)),
+        f"{prefix}/wu": ParamDef(stack + (E, D, F), cfg.pdtype,
+                                 L + ("experts", "expert_fsdp", None)),
+        f"{prefix}/wo": ParamDef(stack + (E, F, D), cfg.pdtype,
+                                 L + ("experts", None, "expert_fsdp")),
+    }
+    for s in range(cfg.n_shared_experts):
+        defs.update({
+            f"{prefix}/shared{s}/wg": ParamDef(stack + (D, F), cfg.pdtype,
+                                               L + ("fsdp", "ff")),
+            f"{prefix}/shared{s}/wu": ParamDef(stack + (D, F), cfg.pdtype,
+                                               L + ("fsdp", "ff")),
+            f"{prefix}/shared{s}/wo": ParamDef(stack + (F, D), cfg.pdtype,
+                                               L + ("ff", "fsdp")),
+        })
+    return defs
+
+
+def _route(cfg: ModelConfig, p, prefix, xf: jax.Array):
+    """xf: (..., d) -> (gates (...,k), experts (...,k), probs (...,E))."""
+    logits = xf.astype(jnp.float32) @ p[f"{prefix}/router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, experts, probs
+
+
+def _expert_ranks(cfg: ModelConfig, experts: jax.Array):
+    """experts: (T, k) -> rank of each (token, slot) within its expert,
+    counted slot-major (all slot-0 assignments first, mirroring Mesh-TF)."""
+    E = cfg.n_experts
+    T = experts.shape[0]
+    onehot = jax.nn.one_hot(experts, E, dtype=jnp.int32)        # (T,k,E)
+    flat = onehot.swapaxes(0, 1).reshape(cfg.top_k * T, E)
+    ranks = jnp.cumsum(flat, axis=0) - flat
+    rank_tok = ((ranks.reshape(cfg.top_k, T, E).swapaxes(0, 1) * onehot)
+                .sum(-1))                                       # (T,k)
+    return onehot, rank_tok
+
+
+def _expert_ffn(cfg: ModelConfig, p, prefix, xin: jax.Array) -> jax.Array:
+    """xin: (G, E, C, d) -> (G, E, C, d).
+
+    The group dim G inherits the batch ("data") sharding and the expert dim
+    E is EP over "model", so the big (…, F) hidden is sharded on BOTH mesh
+    axes — without this, jamba's 24k-wide expert hidden is 8 GB/device."""
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    xin = sharding.constrain(xin, "batch", "experts", None, None)
+    g = act(jnp.einsum("gecd,edf->gecf", xin,
+                       p[f"{prefix}/wg"].astype(cfg.cdtype)))
+    u = jnp.einsum("gecd,edf->gecf", xin, p[f"{prefix}/wu"].astype(cfg.cdtype))
+    h = sharding.constrain(g * u, "batch", "experts", None, None)
+    return jnp.einsum("gecf,efd->gecd", h,
+                      p[f"{prefix}/wo"].astype(cfg.cdtype))
+
+
+def moe_einsum(cfg: ModelConfig, p, x: jax.Array,
+               prefix: str = "moe") -> Tuple[jax.Array, jax.Array]:
+    """Baseline grouped one-hot dispatch.  x: (B,S,d) -> ((B,S,d), aux)."""
+    B, S, D = x.shape
+    T = B * S
+    g = min(cfg.moe_group, T)
+    G = T // g
+    assert T % g == 0, (T, g)
+    E = cfg.n_experts
+    C = max(1, int(-(-g * cfg.top_k * cfg.moe_capacity_factor // E)))
+    xf = x.reshape(G, g, D)
+    gates, experts, probs = _route(cfg, p, prefix, xf)
+
+    def group_tensors(gates_g, experts_g):
+        onehot, rank = _expert_ranks(cfg, experts_g)            # (g,k,E),(g,k)
+        keep = rank < C
+        pos = jnp.clip(rank, 0, C - 1)
+        poh = jax.nn.one_hot(pos, C, dtype=jnp.float32)         # (g,k,C)
+        d = ((onehot * keep[..., None]).astype(jnp.float32)[..., None]
+             * poh[:, :, None, :])                              # (g,k,E,C)
+        return d.sum(1), (d * gates_g[..., None, None]).sum(1)
+
+    dispatch, combine = jax.vmap(group_tensors)(gates, experts)  # (G,g,E,C)
+    xin = jnp.einsum("gsec,gsd->gecd", dispatch.astype(cfg.cdtype), xf)
+    out = _expert_ffn(cfg, p, prefix, xin)                       # (G,E,C,d)
+    y = jnp.einsum("gecd,gsec->gsd", out, combine.astype(cfg.cdtype))
+    aux = _load_balance_loss(cfg, probs.reshape(T, E),
+                             experts.reshape(T, cfg.top_k))
+    y = y.reshape(B, S, D) + _shared(cfg, p, prefix, x)
+    return y, aux
+
+
+def moe_gather(cfg: ModelConfig, p, x: jax.Array,
+               prefix: str = "moe") -> Tuple[jax.Array, jax.Array]:
+    """Gather/scatter dispatch — same routing decisions, no one-hot matmuls.
+
+    Uses the same per-group capacity/rank policy as moe_einsum so the two
+    are numerically identical (tested)."""
+    B, S, D = x.shape
+    T = B * S
+    g = min(cfg.moe_group, T)
+    G = T // g
+    E = cfg.n_experts
+    C = max(1, int(-(-g * cfg.top_k * cfg.moe_capacity_factor // E)))
+    xf = x.reshape(G, g, D)
+    gates, experts, probs = _route(cfg, p, prefix, xf)
+
+    def group_slots(experts_g):
+        onehot, rank = _expert_ranks(cfg, experts_g)
+        keep = rank < C
+        return jnp.where(keep, experts_g * C + rank, E * C), keep
+
+    slot, keep = jax.vmap(group_slots)(experts)                 # (G,g,k)
+    # scatter rows into the per-group expert buffer (E*C+1 with scratch row)
+    src = jnp.repeat(xf[:, :, None, :], cfg.top_k, axis=2)      # (G,g,k,D)
+    buf = jnp.zeros((G, E * C + 1, D), cfg.cdtype)
+    buf = jax.vmap(lambda b, s, v: b.at[s.reshape(-1)].set(
+        v.reshape(-1, D).astype(cfg.cdtype), mode="drop"))(buf, slot, src)
+    xin = buf[:, :E * C].reshape(G, E, C, D)
+    out = _expert_ffn(cfg, p, prefix, xin).reshape(G, E * C, D)
+    outp = jnp.concatenate([out, jnp.zeros((G, 1, D), out.dtype)], axis=1)
+    picked = jax.vmap(lambda o, s: jnp.take(o, s.reshape(-1), axis=0))(
+        outp, slot).reshape(G, g, cfg.top_k, D)
+    y = (picked * (gates * keep).astype(cfg.cdtype)[..., None]).sum(2)
+    aux = _load_balance_loss(cfg, probs.reshape(T, E),
+                             experts.reshape(T, cfg.top_k))
+    y = y.reshape(B, S, D) + _shared(cfg, p, prefix, x)
+    return y, aux
+
+
+def _shared(cfg: ModelConfig, p, prefix, x: jax.Array) -> jax.Array:
+    if not cfg.n_shared_experts:
+        return jnp.zeros_like(x)
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    y = jnp.zeros_like(x)
+    for s in range(cfg.n_shared_experts):
+        gg = act(x @ p[f"{prefix}/shared{s}/wg"].astype(cfg.cdtype))
+        u = x @ p[f"{prefix}/shared{s}/wu"].astype(cfg.cdtype)
+        h = sharding.constrain(gg * u, "batch", None, "ff")
+        y = y + h @ p[f"{prefix}/shared{s}/wo"].astype(cfg.cdtype)
+    return y
+
+
+def _load_balance_loss(cfg: ModelConfig, probs, experts) -> jax.Array:
+    """Switch-style aux loss: E · Σ_e f_e · p̄_e."""
+    E = cfg.n_experts
+    hits = jax.nn.one_hot(experts, E, dtype=jnp.float32).sum(1)  # (T,E)
+    f = hits.mean(0) / cfg.top_k
+    pbar = probs.mean(0)
+    return E * jnp.sum(f * pbar)
+
+
+def moe_apply(cfg: ModelConfig, p, x, prefix: str = "moe",
+              impl: str = "einsum"):
+    fn = moe_einsum if impl == "einsum" else moe_gather
+    return fn(cfg, p, x, prefix)

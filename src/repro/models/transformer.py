@@ -1,0 +1,227 @@
+"""Decoder-only LM assembly: pre-norm blocks, scan-over-periods, remat.
+
+Layer heterogeneity (jamba's attn:mamba 1:7 interleave, MoE-every-other) is
+handled by *scan over periods*: `ModelConfig.layer_groups()` finds the
+smallest repeating period of (mixer, mlp) kinds; params are stacked over
+period repetitions and a single lax.scan runs the whole depth with one
+period body in the HLO (compile time ∝ period, not depth).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from .config import ModelConfig
+from .layers import (ParamDef, ParamDefs, chunked_xent, embed_defs,
+                     embed_tokens, logits_last, mlp_apply, mlp_defs, rms_norm)
+from .attention import (attn_defs, attention, decode_attention,
+                        init_cache_shapes, cache_pspec)
+from .mamba import (mamba_defs, mamba_apply, mamba_decode_step,
+                    init_mamba_cache_shapes, mamba_cache_pspec)
+from . import moe as moe_mod
+
+
+def _block_defs(cfg: ModelConfig, pos: int, kind: Tuple[str, str],
+                n_periods: int) -> ParamDefs:
+    mixer, mlp = kind
+    stack = (n_periods,) if n_periods > 1 or True else ()
+    pre = f"blk{pos}"
+    defs: ParamDefs = {
+        f"{pre}/norm1": ParamDef(stack + (cfg.d_model,), cfg.pdtype,
+                                 ("layers", None), scale=-1.0),
+    }
+    if mlp != "none":
+        defs[f"{pre}/norm2"] = ParamDef(stack + (cfg.d_model,), cfg.pdtype,
+                                        ("layers", None), scale=-1.0)
+    if mixer == "attn":
+        defs.update(attn_defs(cfg, prefix=f"{pre}/attn", stack=stack))
+    else:
+        defs.update(mamba_defs(cfg, prefix=f"{pre}/mamba", stack=stack))
+    if mlp == "moe":
+        defs.update(moe_mod.moe_defs(cfg, prefix=f"{pre}/moe", stack=stack))
+    elif mlp == "dense":
+        defs.update(mlp_defs(cfg, prefix=f"{pre}/mlp", stack=stack))
+    return defs
+
+
+def lm_param_defs(cfg: ModelConfig) -> ParamDefs:
+    period, kinds = cfg.layer_groups()
+    n_periods = cfg.n_layers // period
+    defs = dict(embed_defs(cfg))
+    defs["final_norm"] = ParamDef((cfg.d_model,), cfg.pdtype, (None,),
+                                  scale=-1.0)
+    if cfg.frontend:
+        # modality stub: projection from precomputed frontend embeddings
+        defs["frontend/proj"] = ParamDef((cfg.d_model, cfg.d_model),
+                                         cfg.pdtype, ("fsdp", "embed"))
+    for pos, kind in enumerate(kinds):
+        defs.update(_block_defs(cfg, pos, kind, n_periods))
+    return defs
+
+
+def _slice_block(params: Dict[str, jax.Array], pos: int) -> Dict[str, jax.Array]:
+    pre = f"blk{pos}/"
+    return {k[len(pre):]: v for k, v in params.items() if k.startswith(pre)}
+
+
+def _block_apply(cfg: ModelConfig, kind: Tuple[str, str], p_blk, x,
+                 moe_impl: str, use_rope: bool):
+    """One pre-norm block; p_blk holds per-layer (unstacked) params."""
+    mixer, mlp = kind
+    h = rms_norm(x, p_blk["norm1"], cfg.norm_eps)
+    if mixer == "attn":
+        h = attention(cfg, p_blk, h, prefix="attn", causal=True,
+                      rope=use_rope)
+    else:
+        h = mamba_apply(cfg, p_blk, h, prefix="mamba")
+    x = x + h
+    x = sharding.constrain(x, "batch", "seq", None)
+    aux = jnp.zeros((), jnp.float32)
+    if mlp == "none":
+        return x, aux
+    h = rms_norm(x, p_blk["norm2"], cfg.norm_eps)
+    if mlp == "moe":
+        h, aux = moe_mod.moe_apply(cfg, p_blk, h, prefix="moe", impl=moe_impl)
+    else:
+        h = mlp_apply(cfg, p_blk, h, prefix="mlp")
+    x = x + h
+    return sharding.constrain(x, "batch", "seq", None), aux
+
+
+def lm_backbone(cfg: ModelConfig, params: Dict[str, jax.Array], x: jax.Array,
+                moe_impl: str = "einsum",
+                use_rope: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Run all blocks via scan-over-periods. x: (B,S,D) -> (h, moe_aux)."""
+    period, kinds = cfg.layer_groups()
+    n_periods = cfg.n_layers // period
+    stacked = [_slice_block(params, pos) for pos in range(period)]
+
+    def period_body(x, p_slices):
+        aux = jnp.zeros((), jnp.float32)
+        for pos, kind in enumerate(kinds):
+            x, a = _block_apply(cfg, kind, p_slices[pos], x, moe_impl,
+                                use_rope)
+            aux = aux + a
+        return x, aux
+
+    if cfg.remat == "full":
+        period_body = jax.checkpoint(period_body,
+                                     prevent_cse=False)
+
+    def scan_fn(x, p_slices):
+        x, aux = period_body(x, p_slices)
+        return x, aux
+
+    x, auxs = jax.lax.scan(scan_fn, x, tuple(stacked))
+    return x, jnp.sum(auxs)
+
+
+def _merge_frontend(cfg: ModelConfig, params, x_tok, frontend_embeds):
+    """VLM stub: project precomputed patch embeddings and prepend them."""
+    fe = frontend_embeds.astype(cfg.cdtype) @ params["frontend/proj"].astype(
+        cfg.cdtype)
+    return jnp.concatenate([fe, x_tok], axis=1)
+
+
+def lm_loss(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+            moe_impl: str = "einsum", use_rope: bool = True) -> jax.Array:
+    """Next-token loss.  batch: tokens (B,S) int32, labels (B,S) int32
+    (-1 = pad); optional patches (B,P,D) for VLM stubs."""
+    x = embed_tokens(cfg, params, batch["tokens"])
+    labels = batch["labels"]
+    if cfg.frontend == "patches" and "patches" in batch:
+        x = _merge_frontend(cfg, params, x, batch["patches"])
+        pad_lab = jnp.full(batch["patches"].shape[:2], -1, labels.dtype)
+        labels = jnp.concatenate([pad_lab, labels], axis=1)
+    h, moe_aux = lm_backbone(cfg, params, x, moe_impl, use_rope)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    loss = chunked_xent(cfg, params, h, labels)
+    return loss + 0.01 * moe_aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with per-position caches
+# ---------------------------------------------------------------------------
+def lm_cache_shapes(cfg: ModelConfig, batch: int, seq_len: int):
+    """Cache pytree (ShapeDtypeStructs): one entry PER LAYER, unstacked.
+
+    Per-layer buffers (rather than one stacked (L, ...) array) let XLA alias
+    each layer's cache update in place under donation; a stacked layout
+    forces a copy of the whole cache per step on backends that don't fuse
+    the dynamic_update_slice chain."""
+    caches = []
+    for i in range(cfg.n_layers):
+        mixer, _ = cfg.layer_kind(i)
+        if mixer == "attn":
+            caches.append(init_cache_shapes(cfg, batch, seq_len))
+        else:
+            caches.append(init_mamba_cache_shapes(cfg, batch))
+    return tuple(caches)
+
+
+def lm_cache_pspecs(cfg: ModelConfig):
+    out = []
+    for i in range(cfg.n_layers):
+        mixer, _ = cfg.layer_kind(i)
+        base = cache_pspec() if mixer == "attn" else mamba_cache_pspec()
+        out.append({k: jax.sharding.PartitionSpec(*v)
+                    for k, v in base.items()})
+    return tuple(out)
+
+
+def lm_decode_step(cfg: ModelConfig, params, caches, tokens: jax.Array,
+                   pos: jax.Array, moe_impl: str = "einsum",
+                   use_rope: bool = True):
+    """One decode step.  tokens: (B,1) int32; caches as lm_cache_shapes.
+
+    Layers are UNROLLED with dynamic_update_slice cache write-back: a
+    scan-over-periods would double-buffer the whole stacked KV cache
+    (input xs + output ys both live => 2x cache HBM, which alone breaks
+    deepseek's 32k/128 cell), while the DUS chain aliases in place under
+    donation.  Decode bodies are small, so the HLO growth is cheap.
+    """
+    period, kinds = cfg.layer_groups()
+    n_periods = cfg.n_layers // period
+    x = embed_tokens(cfg, params, tokens)
+    stacked = [_slice_block(params, posn) for posn in range(period)]
+
+    new_caches = list(caches)
+    for i in range(cfg.n_layers):
+        r, posn = divmod(i, period)
+        mixer, mlp = kinds[posn]
+        p_blk = jax.tree.map(lambda a: a[r], stacked[posn])
+        h = rms_norm(x, p_blk["norm1"], cfg.norm_eps)
+        if mixer == "attn":
+            h, nc = decode_attention(cfg, p_blk, h, caches[i],
+                                     pos, prefix="attn", rope=use_rope)
+        else:
+            h, nc = mamba_decode_step(cfg, p_blk, h, caches[i],
+                                      prefix="mamba")
+        new_caches[i] = jax.tree.map(lambda n, o: n.astype(o.dtype),
+                                     nc, caches[i])
+        x = x + h
+        if mlp != "none":
+            h = rms_norm(x, p_blk["norm2"], cfg.norm_eps)
+            if mlp == "moe":
+                h, _ = moe_mod.moe_apply(cfg, p_blk, h, prefix="moe",
+                                         impl=moe_impl)
+            else:
+                h = mlp_apply(cfg, p_blk, h, prefix="mlp")
+            x = x + h
+    h = rms_norm(x[:, 0, :], params["final_norm"], cfg.norm_eps)
+    return logits_last(cfg, params, h), tuple(new_caches)
+
+
+def lm_prefill(cfg: ModelConfig, params, tokens: jax.Array,
+               moe_impl: str = "einsum", use_rope: bool = True):
+    """Prefill forward only (logits of last position).  Cache write-back is
+    exercised separately by decode; this matches the assigned
+    'inference-prefill' cell (one full forward at seq_len)."""
+    x = embed_tokens(cfg, params, tokens)
+    h, _ = lm_backbone(cfg, params, x, moe_impl, use_rope)
+    h = rms_norm(h[:, -1, :], params["final_norm"], cfg.norm_eps)
+    return logits_last(cfg, params, h)

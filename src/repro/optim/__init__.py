@@ -1,0 +1,13 @@
+"""Optimizers (implemented in-repo; optax is not a dependency).
+
+AdamW and Adafactor, functional style: `init(params) -> state`,
+`update(grads, state, params, lr) -> (new_params, new_state)`.  Optimizer
+state inherits the parameter sharding (ZeRO-style: fsdp over "data", TP over
+"model" — see repro.sharding) and its dtype is configurable so the largest
+models (jamba-398b) can keep m/v in bf16.
+"""
+from .optimizers import (AdamW, Adafactor, OptState, clip_by_global_norm,
+                         cosine_schedule, make_optimizer)
+
+__all__ = ["AdamW", "Adafactor", "OptState", "clip_by_global_norm",
+           "cosine_schedule", "make_optimizer"]

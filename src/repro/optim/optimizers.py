@@ -1,0 +1,136 @@
+"""AdamW + Adafactor, schedules, global-norm clipping."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    count: jax.Array
+    mu: Dict[str, jax.Array]      # AdamW: m;  Adafactor: row stats
+    nu: Dict[str, jax.Array]      # AdamW: v;  Adafactor: col stats
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: Optional[str] = "float32"   # bf16 for the largest models
+
+    def init(self, params) -> OptState:
+        dt = jnp.dtype(self.state_dtype)
+        z = lambda p: jnp.zeros(p.shape, dt)
+        return OptState(count=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(z, params),
+                        nu=jax.tree.map(z, params))
+
+    def update(self, grads, state: OptState, params, lr) -> Tuple[Dict, OptState]:
+        c = state.count + 1
+        b1c = 1.0 - self.b1 ** c.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** c.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m_new = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * gf
+            v_new = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * gf * gf
+            step = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * step
+            return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                    v_new.astype(v.dtype))
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, OptState(count=c, mu=new_m, nu=new_v)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Factored second moments: O(r+c) state per matrix instead of O(r·c) —
+    the distributed-optimization memory trick for the largest models."""
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params) -> OptState:
+        def rows(p):
+            if p.ndim < 2:
+                return jnp.zeros(p.shape, jnp.float32)
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+
+        def cols(p):
+            if p.ndim < 2:
+                return jnp.zeros((1,), jnp.float32)
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+
+        return OptState(count=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(rows, params),
+                        nu=jax.tree.map(cols, params))
+
+    def update(self, grads, state: OptState, params, lr):
+        c = state.count + 1
+        beta = 1.0 - (c.astype(jnp.float32)) ** (-self.decay)
+
+        def upd(p, g, r, col):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + self.eps
+            if p.ndim < 2:
+                r_new = beta * r + (1 - beta) * g2
+                update = gf / jnp.sqrt(r_new + self.eps)
+                col_new = col
+            else:
+                r_new = beta * r + (1 - beta) * g2.mean(-1)
+                col_new = beta * col + (1 - beta) * g2.mean(-2)
+                r_fac = r_new / jnp.maximum(
+                    r_new.mean(-1, keepdims=True), self.eps)
+                denom = jnp.sqrt(r_fac)[..., None] * jnp.sqrt(col_new)[..., None, :]
+                update = gf / denom
+            rms = jnp.sqrt(jnp.mean(update * update))
+            update = update / jnp.maximum(1.0, rms / self.clip_threshold)
+            p_new = (p.astype(jnp.float32) - lr * update
+                     - lr * self.weight_decay * p.astype(jnp.float32))
+            return p_new.astype(p.dtype), r_new, col_new
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), OptState(count=c, mu=pick(1), nu=pick(2))
+
+
+def make_optimizer(name: str, **kw):
+    if name == "adamw":
+        return AdamW(**kw)
+    if name == "adafactor":
+        return Adafactor(**{k: v for k, v in kw.items()
+                            if k != "state_dtype"})
+    raise ValueError(name)

@@ -1,0 +1,174 @@
+"""Logical-axis sharding rules (MaxText-style), shared by LM zoo + LP solver.
+
+Model code annotates arrays with *logical* axis names; the mapping to mesh
+axes lives here, in one table, so changing the parallelism strategy is a
+one-line rule edit (and a §Perf iteration, not a model rewrite).
+
+Key choices (DESIGN.md §6):
+  batch      -> ("pod", "data")   data parallelism, hierarchical across pods
+  seq        -> "model"           sequence parallelism for activations between
+                                  layers: the per-layer remat checkpoint is
+                                  1/16th per chip — this is what lets e.g.
+                                  deepseek-33b train_4k fit
+  heads/ff/vocab/experts -> "model"   tensor/expert parallelism
+  fsdp       -> "data"            parameter + optimizer-state sharding over
+                                  the data axis (ZeRO-3 style)
+  cache_seq  -> "model"           decode KV caches sharded over sequence, with
+                                  a distributed flash-decode softmax
+
+Uneven divisibility (e.g. 56 heads on a 16-way axis, vocab 256206) is allowed:
+GSPMD pads internally.  The padding waste shows up honestly in the roofline's
+HLO_FLOPs and is a hillclimb target.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": ("model",),
+    "embed": (),
+    "head_dim": (),
+    "heads": ("model",),
+    "kv_heads": (),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "fsdp": ("data",),
+    "expert_fsdp": ("data",),
+    "cache_batch": ("data",),
+    "cache_seq": ("model",),
+    "ssm_heads": ("model",),
+    "state": (),
+    "layers": (),
+    "frames": ("model",),
+}
+
+_ctx = threading.local()
+
+
+@contextmanager
+def use_mesh_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Activate (mesh, rules) for logical-axis resolution in model code."""
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, {**DEFAULT_RULES, **(rules or {})})
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    st = getattr(_ctx, "state", None)
+    return st[0] if st else None
+
+
+def _resolve(name: Optional[str], mesh: Mesh, rules: dict):
+    if name is None:
+        return None
+    axes = tuple(a for a in rules.get(name, ()) if a in mesh.axis_names)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def spec_for(logical: Sequence[Optional[str]],
+             mesh: Optional[Mesh] = None,
+             shape: Optional[Sequence[int]] = None) -> P:
+    """PartitionSpec from logical axis names; P() outside a mesh context.
+
+    With `shape`, axes that do not evenly divide their dimension are dropped
+    (progressively, from the innermost axis of a multi-axis rule): jit
+    in_shardings and with_sharding_constraint require even tiling, so e.g.
+    56 heads on a 16-way "model" axis fall back to replication.  The waste
+    is visible in the roofline and is a §Perf target, not a silent choice.
+    """
+    st = getattr(_ctx, "state", None)
+    if mesh is None:
+        if st is None or st[0] is None:
+            return P()
+        mesh, rules = st
+    else:
+        rules = (st[1] if st else DEFAULT_RULES)
+    parts = [_resolve(n, mesh, rules) for n in logical]
+    if shape is not None:
+        parts = [_fit(p, dim, mesh) for p, dim in zip(parts, shape)]
+    return P(*_dedup(parts))
+
+
+def _dedup(parts):
+    """A mesh axis may appear once per spec: first dim wins, later drop.
+
+    Needed when rule overrides map two logical axes of one tensor onto the
+    same mesh axis (e.g. serving layouts with fsdp -> "model")."""
+    seen = set()
+    out = []
+    for p in parts:
+        if p is None:
+            out.append(None)
+            continue
+        axes = list(p) if isinstance(p, tuple) else [p]
+        kept = [a for a in axes if a not in seen]
+        seen.update(kept)
+        out.append(tuple(kept) if len(kept) > 1 else
+                   (kept[0] if kept else None))
+    return out
+
+
+def _fit(part, dim: int, mesh: Mesh):
+    """Drop trailing mesh axes until the tiling divides `dim` evenly."""
+    if part is None:
+        return None
+    axes = list(part) if isinstance(part, tuple) else [part]
+    while axes:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if dim % n == 0:
+            break
+        axes.pop()
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def sanitize_spec(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
+    """Apply the divisibility fallback + axis dedup to a PartitionSpec."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    return P(*_dedup([_fit(p, d, mesh) for p, d in zip(parts, shape)]))
+
+
+# Serving layout: params live model-sharded (row/column-parallel), NOT
+# fsdp-sharded — decode must not pay a ZeRO-3 all-gather of the weights for
+# every generated token.  Checkpoints reshard on load (elastic restore).
+SERVING_RULES = {"fsdp": ("model",)}
+
+
+def sharding_for(logical: Sequence[Optional[str]],
+                 mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
+    st = getattr(_ctx, "state", None)
+    if mesh is None:
+        if st is None or st[0] is None:
+            return None
+        mesh = st[0]
+    return NamedSharding(mesh, spec_for(logical, mesh))
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op outside a mesh ctx.
+
+    This is THE hook the dry-run uses to pin activation layouts; smoke tests
+    run without a context and see pure jnp.  Shape-aware: non-dividing axes
+    fall back per spec_for.
+    """
+    st = getattr(_ctx, "state", None)
+    if st is None or st[0] is None:
+        return x
+    mesh = st[0]
+    spec = spec_for(logical, mesh, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,174 @@
+"""Train step factory + fault-tolerant training loop.
+
+make_train_step builds the jitted (state, batch) -> (state, metrics) update:
+  * value_and_grad over the model loss (remat policy lives in the model),
+  * optional microbatch gradient accumulation (scan over microbatches) with
+    optionally bf16-compressed accumulation — the gradient-compression knob:
+    on a real fleet the per-microbatch psum then moves half the bytes,
+  * global-norm clipping,
+  * NaN/Inf guard: a non-finite loss or gradient SKIPS the update
+    (params/opt state pass through unchanged) and raises a flag the loop
+    turns into an emergency checkpoint.
+
+Trainer adds the fleet-behaviour shell around it: checkpoint/auto-resume,
+SIGTERM -> final checkpoint, step-time EWMA watchdog (straggler detection).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.optim import OptState, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt_state: OptState
+
+
+class StepMetrics(NamedTuple):
+    loss: jax.Array
+    grad_norm: jax.Array
+    skipped: jax.Array      # 1.0 if the NaN guard suppressed the update
+
+
+def make_train_step(loss_fn: Callable, optimizer, lr_fn: Callable,
+                    clip_norm: float = 1.0, microbatches: int = 1,
+                    accum_dtype: Optional[str] = None):
+    """loss_fn(params, batch) -> scalar.  Returns jit-able step fn."""
+
+    def compute_grads(params, batch):
+        if microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        # split batch leading dim into microbatches and accumulate
+        def reshape(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+        mb = jax.tree.map(reshape, batch)
+        acc_dt = jnp.dtype(accum_dtype) if accum_dtype else None
+
+        def body(carry, mbatch):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mbatch)
+            if acc_dt is not None:
+                g = jax.tree.map(lambda x: x.astype(acc_dt), g)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, acc_dt or p.dtype), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), mb)
+        inv = 1.0 / microbatches
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, StepMetrics]:
+        loss, grads = compute_grads(state.params, batch)
+        grads, gn = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(state.step)
+        new_params, new_opt = optimizer.update(grads, state.opt_state,
+                                               state.params, lr)
+        finite = jnp.isfinite(loss) & jnp.isfinite(gn)
+        pick = lambda new, old: jax.tree.map(
+            lambda a, b: jnp.where(finite, a, b), new, old)
+        new_params = pick(new_params, state.params)
+        new_opt = jax.tree.map(
+            lambda a, b: jnp.where(finite, a, b), new_opt, state.opt_state)
+        new_state = TrainState(step=state.step + 1, params=new_params,
+                               opt_state=new_opt)
+        return new_state, StepMetrics(loss=loss, grad_norm=gn,
+                                      skipped=1.0 - finite.astype(jnp.float32))
+
+    return train_step
+
+
+@dataclasses.dataclass
+class Watchdog:
+    """Step-time EWMA straggler detector (fleet behaviour, CPU-testable)."""
+    alpha: float = 0.1
+    threshold: float = 3.0
+    ewma: Optional[float] = None
+    outliers: int = 0
+
+    def observe(self, dt: float) -> bool:
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        slow = dt > self.threshold * self.ewma
+        if slow:
+            self.outliers += 1
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+
+class Trainer:
+    def __init__(self, model, optimizer, stream, ckpt_dir: str,
+                 lr_fn=None, clip_norm: float = 1.0, microbatches: int = 1,
+                 ckpt_every: int = 50, keep_last: int = 3,
+                 accum_dtype: Optional[str] = None):
+        self.model = model
+        self.stream = stream
+        self.optimizer = optimizer
+        self.manager = CheckpointManager(ckpt_dir, keep_last=keep_last)
+        lr_fn = lr_fn or (lambda step: 1e-3)
+        self.step_fn = jax.jit(make_train_step(
+            model.loss, optimizer, lr_fn, clip_norm, microbatches,
+            accum_dtype))
+        self.ckpt_every = ckpt_every
+        self.watchdog = Watchdog()
+        self._stop = False
+        self.history = []
+
+    def _install_sigterm(self):
+        def handler(signum, frame):
+            self._stop = True     # checkpoint at next step boundary
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass                   # non-main thread (tests)
+
+    def init_state(self, seed: int = 0) -> TrainState:
+        params = self.model.init(jax.random.PRNGKey(seed))
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                          opt_state=self.optimizer.init(params))
+
+    def run(self, num_steps: int, state: Optional[TrainState] = None,
+            resume: bool = True) -> TrainState:
+        self._install_sigterm()
+        if state is None:
+            state = self.init_state()
+        if resume:
+            got = self.manager.restore_latest(state)
+            if got is not None:
+                step, state, extra = got
+                if "stream" in extra:
+                    self.stream.restore(extra["stream"])
+        start = int(state.step)
+        for i in range(start, num_steps):
+            t0 = time.perf_counter()
+            batch = {k: jnp.asarray(v) for k, v in self.stream.next().items()}
+            state, metrics = self.step_fn(state, batch)
+            loss = float(metrics.loss)
+            dt = time.perf_counter() - t0
+            slow = self.watchdog.observe(dt)
+            self.history.append({"step": i, "loss": loss, "time": dt,
+                                 "skipped": float(metrics.skipped),
+                                 "straggler": bool(slow)})
+            if float(metrics.skipped) > 0:
+                # emergency checkpoint on NaN guard trip
+                self.manager.save(i, state, {"stream": self.stream.state(),
+                                             "emergency": True})
+            if (i + 1) % self.ckpt_every == 0 or self._stop:
+                self.manager.save(i + 1, state,
+                                  {"stream": self.stream.state()})
+            if self._stop:
+                break
+        return state

@@ -1,0 +1,144 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward/train step on CPU, asserting output shapes + no NaNs (assignment
+requirement).  The FULL configs are exercised only via the dry-run."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import arch_ids, get_config
+from repro.models import build_model, SHAPES, cell_applicable
+from repro.optim import AdamW
+from repro.training.trainer import make_train_step, TrainState
+
+ARCHS = arch_ids()
+B, S = 2, 32
+
+
+def _batch(cfg, key=0):
+    rng = np.random.default_rng(key)
+    toks = rng.integers(0, cfg.vocab, (B, S + 1)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks[:, :-1]),
+             "labels": jnp.asarray(toks[:, 1:])}
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, 16, cfg.d_model)).astype(np.float32))
+    if cfg.frontend == "patches":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_frontend_tokens, cfg.d_model))
+            .astype(np.float32))
+    return batch
+
+
+def test_exact_assigned_dimensions():
+    """The full configs must carry the exact assigned hyperparameters."""
+    want = {
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "mamba2-780m": (48, 1536, 1, 1, 0, 50280),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+    }
+    assert set(want) == set(ARCHS)
+    for a, (L, d, H, kv, ff, V) in want.items():
+        c = get_config(a)
+        got = (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab)
+        assert got == (L, d, H, kv, ff, V), (a, got)
+    assert get_config("jamba-1.5-large-398b").n_experts == 16
+    assert get_config("jamba-1.5-large-398b").top_k == 2
+    assert get_config("llama4-scout-17b-a16e").n_experts == 16
+    assert get_config("llama4-scout-17b-a16e").top_k == 1
+    assert get_config("granite-moe-1b-a400m").n_experts == 32
+    assert get_config("granite-moe-1b-a400m").top_k == 8
+    assert get_config("mamba2-780m").ssm_state == 128
+    assert get_config("gemma-2b").head_dim == 256
+    assert get_config("chatglm3-6b").rope_fraction == 0.5
+    assert get_config("qwen3-1.7b").qk_norm
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    # forward loss
+    loss = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    # rough calibration: xent at init should be near log(vocab)
+    assert float(loss) < np.log(cfg.vocab) + 2.0
+    # one optimizer step decreases nothing catastrophic / stays finite
+    opt = AdamW(state_dtype="float32")
+    step_fn = jax.jit(make_train_step(model.loss, opt,
+                                      lambda s: 1e-3))
+    state = TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                       opt_state=opt.init(params))
+    state, metrics = step_fn(state, batch)
+    assert bool(jnp.isfinite(metrics.loss)), arch
+    assert float(metrics.skipped) == 0.0
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf))), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if cfg.is_encdec:
+        caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                              model.cache_shapes(B, S, src_len=16))
+    else:
+        caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                              model.cache_shapes(B, S))
+    toks = jnp.ones((B, 1), jnp.int32)
+    logits, new_caches = jax.jit(model.decode_step)(
+        params, caches, toks, jnp.asarray(1, jnp.int32))
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-780m",
+                                  "granite-moe-1b-a400m"])
+def test_decode_matches_prefill(arch):
+    """Autoregressive consistency on reduced configs across families.
+
+    MoE capacity factor is raised so no token is ever dropped: drop
+    behaviour legitimately differs between prefill groups (many tokens
+    compete) and decode groups (batch-only), which is a property of
+    capacity-based MoE, not a bug."""
+    import dataclasses
+    cfg = get_config(arch).reduced()
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=float(cfg.n_experts))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    T = 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab)
+    ref = model.prefill(params, {"tokens": toks})
+    caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                          model.cache_shapes(B, T))
+    step = jax.jit(model.decode_step)
+    for t in range(T):
+        logits, caches = step(params, caches, toks[:, t:t + 1],
+                              jnp.asarray(t, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               atol=2e-2, rtol=1e-2)
+
+
+def test_cell_applicability_rules():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        ok, why = cell_applicable(cfg, SHAPES["long_500k"])
+        if cfg.family in ("ssm", "hybrid"):
+            assert ok, arch
+        else:
+            assert not ok and "sub-quadratic" in why, arch
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert cell_applicable(cfg, SHAPES[s])[0]

@@ -1,0 +1,101 @@
+"""The trip-count-aware HLO cost walker vs known-flop programs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_cost
+
+
+def _flops(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return hlo_cost.analyze(txt)
+
+
+M, K, N = 64, 128, 96
+X = jax.ShapeDtypeStruct((M, K), jnp.float32)
+W = jax.ShapeDtypeStruct((K, K), jnp.float32)
+
+
+class TestDotFlops:
+    def test_single_matmul(self):
+        res = _flops(lambda x, w: x @ w, X, W)
+        assert res["flops_per_device"] == pytest.approx(2 * M * K * K)
+
+    def test_scan_multiplies_by_trip_count(self):
+        def f(x, w):
+            def body(x, _):
+                return jnp.tanh(x @ w), None
+            return jax.lax.scan(body, x, None, length=7)[0]
+        res = _flops(f, X, W)
+        assert res["flops_per_device"] == pytest.approx(2 * M * K * K * 7)
+
+    def test_nested_scan(self):
+        def f(x, w):
+            def outer(x, _):
+                def inner(x, _):
+                    return jnp.tanh(x @ w), None
+                return jax.lax.scan(inner, x, None, length=3)[0], None
+            return jax.lax.scan(outer, x, None, length=5)[0]
+        res = _flops(f, X, W)
+        assert res["flops_per_device"] == pytest.approx(2 * M * K * K * 15)
+
+    def test_batched_dot(self):
+        def f(a, b):
+            return jnp.einsum("bij,bjk->bik", a, b)
+        A = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+        B = jax.ShapeDtypeStruct((4, 16, 32), jnp.float32)
+        res = _flops(f, A, B)
+        assert res["flops_per_device"] == pytest.approx(2 * 4 * 8 * 16 * 32)
+
+    def test_xla_cost_analysis_undercounts_scans(self):
+        """Documents WHY the walker exists."""
+        def f(x, w):
+            def body(x, _):
+                return jnp.tanh(x @ w), None
+            return jax.lax.scan(body, x, None, length=7)[0]
+        c = jax.jit(f).lower(X, W).compile()
+        ca = c.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        assert ca["flops"] == pytest.approx(2 * M * K * K)  # 1x, not 7x
+
+
+class TestCollectives:
+    def test_psum_bytes_counted(self):
+        import numpy as np
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1, 1), ("data", "model"))
+
+        def f(x):
+            return jax.shard_map(
+                lambda v: jax.lax.psum(v, "data"), mesh=mesh,
+                in_specs=jax.sharding.PartitionSpec("data"),
+                out_specs=jax.sharding.PartitionSpec())(x)
+        res = _flops(f, jax.ShapeDtypeStruct((16, 8), jnp.float32))
+        # 1-device mesh: psum may compile away; just verify no crash and
+        # dict structure
+        assert set(res["collectives"]) == {
+            "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+            "collective-permute"}
+
+    def test_collective_inside_scan_multiplied(self):
+        txt = """
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %p = f32[8] parameter(0)
+  %t = (s32[], f32[8]) tuple(%c, %p)
+  %while.1 = (s32[], f32[8]) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %r = f32[8] get-tuple-element(%while.1), index=1
+}
+%body (arg: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %arg = (s32[], f32[8]) parameter(0)
+  %g = f32[8] get-tuple-element(%arg), index=1
+  %ar = f32[8] all-reduce(%g), replica_groups={}
+  ROOT %tp = (s32[], f32[8]) tuple(%i, %ar)
+}
+%cond (arg: (s32[], f32[8])) -> pred[] {
+  %arg2 = (s32[], f32[8]) parameter(0)
+  ROOT %lt = pred[] compare(%i2, %n2), direction=LT
+}
+"""
+        res = hlo_cost.analyze(txt)
+        assert res["collectives"]["all-reduce"] == 8 * 4 * 5  # 5 trips

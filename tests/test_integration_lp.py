@@ -1,0 +1,76 @@
+"""End-to-end LP integration: full feature stack in one solve.
+
+Combines: Appendix-B instance -> primal scaling + Jacobi row-norm -> γ
+continuation -> AGD with Pallas kernels -> distributed (shard_map) solve —
+and checks the result against the plain single-device pure-jnp solve.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (InstanceSpec, generate, precondition, primal_scale,
+                        MatchingObjective, Maximizer, SolveConfig)
+from repro.core.distributed import solve_distributed
+from repro.launch.mesh import make_mesh
+
+
+@pytest.fixture(scope="module")
+def lp_raw():
+    spec = InstanceSpec(num_sources=80, num_destinations=12,
+                        avg_nnz_per_row=12, seed=21, scale_sigma=1.5)
+    return jax.tree.map(jnp.asarray, generate(spec))
+
+
+def _solve(lp, use_pallas=False, distributed=False, continuation=True,
+           iterations=800):
+    cfg = SolveConfig(
+        iterations=iterations, gamma=0.05,
+        gamma_init=0.8 if continuation else None, gamma_decay_every=25,
+        max_step=20.0, initial_step=1e-3, use_pallas=use_pallas)
+    if distributed:
+        mesh = make_mesh((1, 1), ("data", "model"))
+        return solve_distributed(lp, cfg, mesh)
+    return Maximizer(cfg).maximize(MatchingObjective(lp,
+                                                     use_pallas=use_pallas))
+
+
+class TestFullStack:
+    def test_all_features_reach_reference_optimum(self, lp_raw):
+        lp, _ = primal_scale(lp_raw)
+        lp, _ = precondition(lp, row_norm=True)
+        ref = _solve(lp)
+        full = _solve(lp, use_pallas=True, distributed=True)
+        a = float(ref.stats.dual_obj[-1])
+        b = float(full.stats.dual_obj[-1])
+        assert abs(a - b) < 1e-2 * abs(a)
+        assert float(full.stats.infeas[-1]) < 0.05
+
+    def test_primal_scaling_preserves_lp_value(self, lp_raw):
+        """Primal scaling deliberately CHANGES the regularizer geometry
+        (γ/2 ||D_v x||² vs γ/2 ||x||²), so the regularized optima differ;
+        the underlying LINEAR objective cᵀx must agree as γ -> small.
+        Note c'ᵀz = (c/v)ᵀ(v x) = cᵀx, so aux.primal_obj is directly
+        comparable without unscaling."""
+        import dataclasses
+        lp_pc, _ = precondition(lp_raw, row_norm=True)
+        lp_ps, _ = primal_scale(lp_raw)
+        lp_ps, _ = precondition(lp_ps, row_norm=True)
+
+        def lin_obj(lp):
+            cfg = SolveConfig(iterations=3000, gamma=0.005, gamma_init=0.8,
+                              gamma_decay_every=25, max_step=50.0,
+                              initial_step=1e-3)
+            res = Maximizer(cfg).maximize(MatchingObjective(lp))
+            return float(res.stats.primal_obj[-1])
+
+        a, b = lin_obj(lp_pc), lin_obj(lp_ps)
+        assert abs(a - b) < 0.05 * abs(a), (a, b)
+
+    def test_continuation_with_pallas_matches_without(self, lp_raw):
+        lp, _ = precondition(lp_raw, row_norm=True)
+        a = _solve(lp, use_pallas=False)
+        b = _solve(lp, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(a.stats.dual_obj[-50:]),
+                                   np.asarray(b.stats.dual_obj[-50:]),
+                                   rtol=1e-3)

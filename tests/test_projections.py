@@ -1,0 +1,125 @@
+"""Unit + property tests for the blockwise projections (paper §3.2/§6)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import projections as P
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand_row(rng, w):
+    v = rng.normal(0, 3, size=w).astype(np.float32)
+    ub = rng.uniform(0.1, 2.0, size=w).astype(np.float32)
+    return v, ub
+
+
+class TestBoxcutAgainstExactOracle:
+    @pytest.mark.parametrize("w", [2, 3, 8, 17, 64])
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_matches_sort_based_exact(self, w, seed):
+        rng = np.random.default_rng(seed)
+        v, ub = _rand_row(rng, w)
+        s = float(rng.uniform(0.05, 0.9) * ub.sum())
+        mask = np.ones(w, bool)
+        got = P.project_boxcut(jnp.asarray(v)[None], jnp.asarray(ub)[None],
+                               jnp.asarray([s]), jnp.asarray(mask)[None])
+        want = P.project_boxcut_exact_1d(v, ub, s)
+        np.testing.assert_allclose(np.asarray(got)[0], want, atol=2e-4)
+
+    def test_inactive_cut_is_plain_box(self):
+        v = jnp.asarray([[0.5, -1.0, 0.3]])
+        ub = jnp.asarray([[1.0, 1.0, 1.0]])
+        mask = jnp.ones((1, 3), bool)
+        got = P.project_boxcut(v, ub, jnp.asarray([100.0]), mask)
+        np.testing.assert_allclose(np.asarray(got), [[0.5, 0.0, 0.3]], atol=1e-6)
+
+    def test_equality_hits_budget(self):
+        rng = np.random.default_rng(7)
+        v, ub = _rand_row(rng, 12)
+        s = 0.5 * float(ub.sum())
+        mask = np.ones(12, bool)
+        got = P.project_boxcut(jnp.asarray(v)[None], jnp.asarray(ub)[None],
+                               jnp.asarray([s]), jnp.asarray(mask)[None],
+                               equality=True)
+        assert abs(float(np.asarray(got).sum()) - s) < 1e-3
+
+
+class TestMaskSemantics:
+    def test_masked_entries_are_zero_and_excluded(self):
+        v = jnp.asarray([[2.0, 2.0, 2.0, 2.0]])
+        ub = jnp.ones((1, 4))
+        mask = jnp.asarray([[True, True, False, False]])
+        got = np.asarray(P.project_boxcut(v, ub, jnp.asarray([1.0]), mask))
+        assert got[0, 2] == 0 and got[0, 3] == 0
+        assert abs(got[0, :2].sum() - 1.0) < 1e-4
+
+    def test_padding_invariance(self):
+        """Projecting a padded copy must equal projecting the tight row."""
+        rng = np.random.default_rng(3)
+        v, ub = _rand_row(rng, 5)
+        s = 0.4 * float(ub.sum())
+        tight = P.project_boxcut(jnp.asarray(v)[None], jnp.asarray(ub)[None],
+                                 jnp.asarray([s]), jnp.ones((1, 5), bool))
+        vp = np.concatenate([v, rng.normal(0, 100, 3).astype(np.float32)])
+        up = np.concatenate([ub, np.ones(3, np.float32)])
+        mp = np.array([True] * 5 + [False] * 3)
+        padded = P.project_boxcut(jnp.asarray(vp)[None], jnp.asarray(up)[None],
+                                  jnp.asarray([s]), jnp.asarray(mp)[None])
+        np.testing.assert_allclose(np.asarray(padded)[0, :5],
+                                   np.asarray(tight)[0], atol=1e-5)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    w=st.integers(2, 32),
+    seed=st.integers(0, 2**31 - 1),
+    frac=st.floats(0.05, 0.95),
+)
+def test_property_projection_invariants(w, seed, frac):
+    """Π_C output is (i) feasible, (ii) idempotent, (iii) non-expansive."""
+    rng = np.random.default_rng(seed)
+    v, ub = _rand_row(rng, w)
+    s = float(frac * ub.sum())
+    mask = jnp.ones((1, w), bool)
+    args = (jnp.asarray(ub)[None], jnp.asarray([s]), mask)
+    x = P.project_boxcut(jnp.asarray(v)[None], *args)
+    xn = np.asarray(x)[0]
+    # feasibility
+    assert (xn >= -1e-5).all() and (xn <= ub + 1e-4).all()
+    assert xn.sum() <= s + max(1e-4, 1e-4 * abs(s))
+    # idempotency: projecting the projection is a fixed point
+    x2 = P.project_boxcut(x, *args)
+    np.testing.assert_allclose(np.asarray(x2)[0], xn, atol=2e-4)
+    # non-expansiveness vs a second point
+    v2 = rng.normal(0, 3, size=w).astype(np.float32)
+    y = P.project_boxcut(jnp.asarray(v2)[None], *args)
+    lhs = np.linalg.norm(np.asarray(y)[0] - xn)
+    rhs = np.linalg.norm(v2 - v)
+    assert lhs <= rhs + 1e-3
+
+
+@settings(max_examples=30, deadline=None)
+@given(w=st.integers(2, 16), seed=st.integers(0, 2**31 - 1))
+def test_property_simplex_projection(w, seed):
+    """simplex kind: x >= 0, Σx <= s, and closest point property vs oracle."""
+    rng = np.random.default_rng(seed)
+    v = rng.normal(0, 2, size=w).astype(np.float32)
+    s = float(rng.uniform(0.2, 2.0))
+    mask = jnp.ones((1, w), bool)
+    x = P.project("simplex", jnp.asarray(v)[None], jnp.zeros((1, w)),
+                  jnp.asarray([s]), mask, iters=60)
+    xn = np.asarray(x)[0]
+    assert (xn >= -1e-5).all() and xn.sum() <= s + 1e-3
+    want = P.project_boxcut_exact_1d(v, np.full(w, 1e30), s)
+    # bisection τ tolerance scales with the value range of the draw
+    tol = max(2e-4, 1e-4 * float(np.abs(v).max()))
+    np.testing.assert_allclose(xn, want, atol=tol)
+
+
+def test_projection_map_overrides():
+    pm = P.ProjectionMap(kind="boxcut", overrides={1: "box"})
+    assert pm.kind_for(0) == "boxcut"
+    assert pm.kind_for(1) == "box"

@@ -1,0 +1,56 @@
+"""Property-based tests (hypothesis) on the solver's system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (InstanceSpec, generate, precondition,
+                        MatchingObjective, Maximizer, SolveConfig)
+from repro.core.instance import to_dense
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       sources=st.integers(10, 60),
+       dests=st.integers(3, 12),
+       sigma=st.floats(0.2, 1.5))
+def test_property_solve_invariants(seed, sources, dests, sigma):
+    """For random Appendix-B instances the solved dual must satisfy:
+    (i) λ* >= 0; (ii) recovered primal is box-cut feasible; (iii) weak
+    duality: g(λ) <= primal regularized objective at any feasible x
+    (checked at x*(λ*)); (iv) dual objective non-decreasing over the last
+    quarter of iterations (post-warmup monotonicity up to fp noise)."""
+    spec = InstanceSpec(num_sources=sources, num_destinations=dests,
+                        avg_nnz_per_row=8, seed=seed, scale_sigma=sigma)
+    lp = jax.tree.map(jnp.asarray, generate(spec))
+    lp, _ = precondition(lp, row_norm=True)
+    gamma = 0.1
+    cfg = SolveConfig(iterations=600, gamma=gamma, max_step=10.0,
+                      initial_step=1e-3)
+    obj = MatchingObjective(lp)
+    res = Maximizer(cfg).maximize(obj)
+
+    lam = np.asarray(res.lam)
+    assert (lam >= 0).all()                                   # (i)
+
+    xs = obj.primal(res.lam, jnp.float32(gamma))
+    for x, slab in zip(xs, lp.slabs):
+        xn = np.asarray(x)
+        m = np.asarray(slab.mask)
+        assert (xn[m] >= -1e-5).all()                         # (ii) x >= 0
+        assert (xn[m] <= np.asarray(slab.ub)[m] + 1e-4).all()
+        sums = np.where(m, xn, 0.0).sum(-1)
+        assert (sums <= np.asarray(slab.s) + 1e-3).all()
+
+    # (iii) weak duality at the recovered point
+    A, c, _ = to_dense(lp, sources, dests)
+    x_flat = np.concatenate([np.asarray(x)[np.asarray(s.mask)]
+                             for x, s in zip(xs, lp.slabs)])
+    prim = float(c @ x_flat + gamma / 2 * (x_flat @ x_flat))
+    g_final = float(res.stats.dual_obj[-1])
+    assert g_final <= prim + 5e-2 * max(abs(prim), 1.0)
+
+    # (iv) net progress in the tail (adaptive restart can dip transiently,
+    # so strict monotonicity is NOT an invariant — net ascent is)
+    d = np.asarray(res.stats.dual_obj)
+    assert d[-1] >= d[len(d) // 2] - 5e-2 * max(abs(d[-1]), 1.0)

@@ -1,0 +1,247 @@
+"""System tests for the DuaLip solver: convergence, KKT, parity, §5.1 effects."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (InstanceSpec, generate, MatchingObjective,
+                        GlobalCountObjective, Maximizer, SolveConfig,
+                        precondition, gram_condition_number, row_norms,
+                        dual_value_and_grad)
+from repro.core.instance import to_dense
+from repro.core import baseline_numpy as bn
+
+
+@pytest.fixture(scope="module")
+def small_lp():
+    spec = InstanceSpec(num_sources=30, num_destinations=8,
+                        avg_nnz_per_row=10, seed=3)
+    lp = jax.tree.map(jnp.asarray, generate(spec))
+    lp_pc, _ = precondition(lp, row_norm=True)
+    return lp, lp_pc
+
+
+@pytest.fixture(scope="module")
+def solved(small_lp):
+    _, lp_pc = small_lp
+    obj = MatchingObjective(lp_pc, proj_kind="boxcut")
+    cfg = SolveConfig(iterations=3000, gamma=0.1, max_step=10.0,
+                      initial_step=1e-3)
+    return obj, cfg, Maximizer(cfg).maximize(obj)
+
+
+class TestKKT:
+    """At the dual optimum, x*(λ*) must be primal-optimal for the
+    ridge-regularized LP: feasible, complementary, zero duality gap."""
+
+    def test_primal_feasible(self, small_lp, solved):
+        _, lp_pc = small_lp
+        obj, cfg, res = solved
+        A, c, _ = to_dense(lp_pc, 30, 8)
+        x = np.concatenate([
+            np.asarray(xs)[np.asarray(s.mask)]
+            for xs, s in zip(obj.primal(res.lam, cfg.gamma), lp_pc.slabs)])
+        viol = np.maximum(A @ x - np.asarray(lp_pc.b).reshape(-1), 0)
+        assert viol.max() < 1e-4
+
+    def test_complementary_slackness(self, small_lp, solved):
+        _, lp_pc = small_lp
+        obj, cfg, res = solved
+        A, c, _ = to_dense(lp_pc, 30, 8)
+        x = np.concatenate([
+            np.asarray(xs)[np.asarray(s.mask)]
+            for xs, s in zip(obj.primal(res.lam, cfg.gamma), lp_pc.slabs)])
+        lam = np.asarray(res.lam).reshape(-1)
+        slack = A @ x - np.asarray(lp_pc.b).reshape(-1)
+        assert np.abs(lam * slack).max() < 1e-3
+
+    def test_strong_duality(self, small_lp, solved):
+        _, lp_pc = small_lp
+        obj, cfg, res = solved
+        A, c, _ = to_dense(lp_pc, 30, 8)
+        x = np.concatenate([
+            np.asarray(xs)[np.asarray(s.mask)]
+            for xs, s in zip(obj.primal(res.lam, cfg.gamma), lp_pc.slabs)])
+        prim = c @ x + cfg.gamma / 2 * (x @ x)
+        gap = abs(prim - float(res.stats.dual_obj[-1]))
+        assert gap < 1e-3 * max(1.0, abs(prim))
+
+    def test_dual_objective_converges(self, solved):
+        _, _, res = solved
+        d = np.asarray(res.stats.dual_obj)
+        # last 100 iterations move less than 1e-5 relative
+        assert abs(d[-1] - d[-100]) < 1e-5 * abs(d[-1])
+        assert float(res.stats.infeas[-1]) < 1e-4
+
+
+class TestGradient:
+    def test_finite_difference(self, small_lp):
+        _, lp_pc = small_lp
+        obj = MatchingObjective(lp_pc, proj_kind="boxcut")
+        gamma = jnp.float32(0.1)
+        lam = jax.random.uniform(jax.random.PRNGKey(0), (1, 8)) * 2.0
+        _, grad, _ = obj.calculate(lam, gamma)
+        eps = 1e-3
+        for i in range(8):
+            d = jnp.zeros_like(lam).at[0, i].set(eps)
+            gp, _, _ = obj.calculate(lam + d, gamma)
+            gm, _, _ = obj.calculate(lam - d, gamma)
+            fd = float((gp - gm) / (2 * eps))
+            assert abs(fd - float(grad[0, i])) < 2e-2
+
+    def test_gradient_is_ax_minus_b(self, small_lp):
+        """∇g(λ) = A x*(λ) − b exactly (Danskin)."""
+        _, lp_pc = small_lp
+        obj = MatchingObjective(lp_pc, proj_kind="boxcut")
+        A, c, _ = to_dense(lp_pc, 30, 8)
+        lam = jax.random.uniform(jax.random.PRNGKey(1), (1, 8))
+        gamma = jnp.float32(0.1)
+        _, grad, _ = obj.calculate(lam, gamma)
+        x = np.concatenate([
+            np.asarray(xs)[np.asarray(s.mask)]
+            for xs, s in zip(obj.primal(lam, gamma), lp_pc.slabs)])
+        want = A @ x - np.asarray(lp_pc.b).reshape(-1)
+        np.testing.assert_allclose(np.asarray(grad).reshape(-1), want,
+                                   atol=1e-4)
+
+
+class TestParity:
+    """Fig. 1/2 analogue: JAX solver vs the independent numpy implementation
+    must agree to well under the paper's 1%-in-100-iterations criterion."""
+
+    def test_trajectory_parity(self, small_lp):
+        _, lp_pc = small_lp
+        obj = MatchingObjective(lp_pc, proj_kind="boxcut")
+        cfg = SolveConfig(iterations=150, gamma=0.1, max_step=10.0,
+                          initial_step=1e-3)
+        res = Maximizer(cfg).maximize(obj)
+        _, hist = bn.solve(bn.from_slabs(lp_pc), cfg)
+        ours = np.asarray(res.stats.dual_obj)
+        ref = np.asarray(hist["dual_obj"])
+        rel = np.abs(ours - ref) / np.maximum(np.abs(ref), 1e-12)
+        assert rel[-50:].max() < 0.01          # <1% after warmup
+        assert rel[-1] < 1e-3
+
+
+class TestPreconditioning:
+    def test_kappa_drops_to_one(self, small_lp):
+        """m=1 matching ⇒ AAᵀ diagonal ⇒ Jacobi gives κ = 1 exactly."""
+        lp, lp_pc = small_lp
+        assert gram_condition_number(lp) > 10
+        assert gram_condition_number(lp_pc) < 1.0 + 1e-3
+
+    def test_feasible_set_preserved(self, small_lp):
+        """Row scaling preserves {x : Ax <= b}: same optimal primal obj."""
+        lp, lp_pc = small_lp
+        gamma = 0.1
+        cfg = SolveConfig(iterations=3000, gamma=gamma, max_step=10.0,
+                          initial_step=1e-3)
+        res_raw = Maximizer(cfg).maximize(MatchingObjective(lp))
+        res_pc = Maximizer(cfg).maximize(MatchingObjective(lp_pc))
+        # both converge to the same regularized optimum value
+        assert abs(float(res_raw.stats.dual_obj[-1])
+                   - float(res_pc.stats.dual_obj[-1])) < 2e-3 * abs(
+                       float(res_pc.stats.dual_obj[-1]))
+
+    def test_row_norms_match_dense(self, small_lp):
+        lp, _ = small_lp
+        A, _, _ = to_dense(lp, 30, 8)
+        want = np.linalg.norm(A, axis=1)
+        got = np.asarray(row_norms(lp)).reshape(-1)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_faster_early_convergence(self):
+        """Fig. 4 analogue: preconditioning accelerates convergence on an
+        ill-conditioned instance (heterogeneous row scales, σ_scale = 2 ⇒
+        κ(AAᵀ) ≈ 3e6).  On tiny well-conditioned LPs the adaptive step
+        already compensates, so the effect is measured where it matters."""
+        spec = InstanceSpec(num_sources=60, num_destinations=12,
+                            avg_nnz_per_row=12, seed=5, scale_sigma=2.0)
+        lp = jax.tree.map(jnp.asarray, generate(spec))
+        lp_pc, _ = precondition(lp, row_norm=True)
+        long = SolveConfig(iterations=6000, gamma=0.1, max_step=10.0,
+                           initial_step=1e-3)
+        cfg = SolveConfig(iterations=200, gamma=0.1, max_step=10.0,
+                          initial_step=1e-3)
+        ref = float(Maximizer(long).maximize(
+            MatchingObjective(lp_pc)).stats.dual_obj[-1])
+        raw = Maximizer(cfg).maximize(MatchingObjective(lp))
+        pc = Maximizer(cfg).maximize(MatchingObjective(lp_pc))
+        err_raw = abs(float(raw.stats.dual_obj[-1]) - ref)
+        err_pc = abs(float(pc.stats.dual_obj[-1]) - ref)
+        assert err_pc * 100 < err_raw  # >=100x closer at iteration 200
+
+
+class TestContinuation:
+    def test_gamma_schedule(self):
+        from repro.core import gamma_at
+        cfg = SolveConfig(gamma=0.01, gamma_init=0.16, gamma_decay_every=25,
+                          gamma_decay_rate=0.5)
+        gs = [float(gamma_at(cfg, jnp.asarray(t))) for t in
+              [0, 24, 25, 50, 75, 100, 125, 1000]]
+        assert gs[0] == pytest.approx(0.16)
+        assert gs[1] == pytest.approx(0.16)
+        assert gs[2] == pytest.approx(0.08)
+        assert gs[-1] == pytest.approx(0.01)
+        assert all(a >= b for a, b in zip(gs, gs[1:]))
+
+    def test_continuation_reaches_same_solution(self, small_lp):
+        """Fig. 5: decayed-γ run ends at (nearly) the fixed-γ optimum."""
+        _, lp_pc = small_lp
+        obj = MatchingObjective(lp_pc)
+        fixed = SolveConfig(iterations=2500, gamma=0.05, max_step=20.0,
+                            initial_step=1e-3)
+        cont = SolveConfig(iterations=2500, gamma=0.05, gamma_init=0.8,
+                           gamma_decay_every=25, gamma_decay_rate=0.5,
+                           max_step=20.0, initial_step=1e-3)
+        rf = Maximizer(fixed).maximize(obj)
+        rc = Maximizer(cont).maximize(obj)
+        vf, vc = float(rf.stats.dual_obj[-1]), float(rc.stats.dual_obj[-1])
+        assert abs(vf - vc) < 5e-3 * abs(vf)
+
+
+class TestLemmaA1:
+    """‖(Ax*(λ)−b)₊‖₂ <= sqrt(2L(g(λ*)−g(λ))) with L = ‖A‖₂²/γ."""
+
+    def test_infeasibility_bound(self, small_lp):
+        _, lp_pc = small_lp
+        gamma = 0.1
+        obj = MatchingObjective(lp_pc)
+        cfg = SolveConfig(iterations=4000, gamma=gamma, max_step=10.0,
+                          initial_step=1e-3)
+        res = Maximizer(cfg).maximize(obj)
+        g_star = float(res.stats.dual_obj[-1])
+        A, _, _ = to_dense(lp_pc, 30, 8)
+        L = np.linalg.norm(A, 2) ** 2 / gamma
+        for lam_scale in [0.0, 0.5]:
+            lam = res.lam * lam_scale
+            g, grad, aux = obj.calculate(lam, jnp.float32(gamma))
+            lhs = float(aux.infeas)
+            rhs = np.sqrt(max(2 * L * (g_star - float(g)), 0.0))
+            assert lhs <= rhs + 1e-3
+
+
+class TestGlobalCount:
+    """§4's motivating extension: one extra dual row, composed locally."""
+
+    def test_count_constraint_binds(self, small_lp):
+        _, lp_pc = small_lp
+        gamma = 0.1
+        cfg = SolveConfig(iterations=3000, gamma=gamma, max_step=10.0,
+                          initial_step=1e-3)
+        # unconstrained total assignment:
+        base = Maximizer(cfg).maximize(MatchingObjective(lp_pc))
+        obj0 = MatchingObjective(lp_pc)
+        x_tot = sum(float(x.sum()) for x in obj0.primal(base.lam, gamma))
+        count = 0.5 * x_tot
+        obj = GlobalCountObjective(lp_pc, count=count)
+        res = Maximizer(cfg).maximize(obj)
+        lam_flat = res.lam
+        lam_main = lam_flat[:-1].reshape(1, -1)
+        mu = float(lam_flat[-1])
+        # recompute primal with the count dual folded in
+        m, J = lp_pc.m, lp_pc.num_destinations
+        g, grad, aux = obj.calculate(lam_flat, jnp.float32(gamma))
+        x_tot_new = float(grad[-1]) + count
+        assert x_tot_new <= count * 1.01
+        assert mu > 0  # constraint binds => positive dual
