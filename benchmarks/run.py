@@ -9,8 +9,10 @@ writes benchmarks/results/bench_results.json.
   fig5     γ-continuation ablation                         (Figure 5)
   lemma51  row-normalization conditioning bound            (Lemma 5.1)
   lemmaA1  primal-infeasibility bound                      (Lemma A.1)
-  kernels  Pallas dual-grad kernel vs pure-jnp hot path
+  kernels  Pallas dual-grad + ax-reduce kernels vs pure-jnp hot path
   roofline aggregated dry-run roofline terms               (§Roofline)
+  perf_lp  solver §Perf hillclimb it0..it5 (it4/it5: constraint-aligned
+           scatter-free Ax, guarded by dual_drift_rel in each row)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 """
@@ -31,7 +33,8 @@ def _kernel_bench(quick: bool = False):
     reports correctness delta vs the oracle instead of time.
     """
     import jax, jax.numpy as jnp, numpy as np
-    from repro.core import InstanceSpec, generate, dual_value_and_grad
+    from repro.core import (InstanceSpec, build_ax_plan, generate,
+                            dual_value_and_grad)
     from repro.kernels import ops, ref as kref
     spec = InstanceSpec(num_sources=20_000, num_destinations=1000,
                         avg_nnz_per_row=20, seed=42)
@@ -53,6 +56,13 @@ def _kernel_bench(quick: bool = False):
     x_r, g_r, cx_r, xsq_r = kref.dual_xstar_ref(
         slab.a_vals, slab.c_vals, slab.dest_idx, slab.mask, slab.ub, slab.s,
         lam, gamma)
+    # aligned gather-reduce kernel vs oracle over the whole plan
+    plan = jax.tree.map(jnp.asarray, build_ax_plan(lp))
+    E = sum(s.n * s.width for s in lp.slabs)
+    gv = jnp.asarray(np.random.default_rng(0)
+                     .normal(size=(E, lp.m)).astype(np.float32))
+    ax_k = ops.ax_aligned(plan, gv, use_pallas=True)
+    ax_r = kref.ax_plan_ref(plan, gv)
     return [
         {"name": "kernels/dual_grad_jnp_hotpath", "us_per_call": dt * 1e6,
          "derived": {"edges": int(sum(int(np.asarray(s.mask).sum())
@@ -60,6 +70,10 @@ def _kernel_bench(quick: bool = False):
         {"name": "kernels/dual_grad_pallas_vs_oracle", "us_per_call": 0.0,
          "derived": {"max_abs_err_x": float(jnp.abs(x_k - x_r).max()),
                      "max_abs_err_gvals": float(jnp.abs(g_k - g_r).max())}},
+        {"name": "kernels/ax_reduce_pallas_vs_oracle", "us_per_call": 0.0,
+         "derived": {"max_abs_err_ax":
+                     float(jnp.abs(ax_k - ax_r.astype(ax_k.dtype)).max()),
+                     "plan_rows": int(sum(b.rows for b in plan.buckets))}},
     ]
 
 

@@ -5,22 +5,28 @@ The paper's operator-centric model (§4) — three primitives, one contract each
   ObjectiveFunction.calculate(λ, γ)  -> (g, ∇g, aux)
   ProjectionMap.project(block, v)    -> projected v
 """
-from .types import LPData, Slab, SolveConfig, SolveResult, SolveState, IterStats
+from .types import (AxBucket, AxPlan, LPData, Slab, SolveConfig, SolveResult,
+                    SolveState, IterStats)
 from .projections import ProjectionMap, project, project_boxcut, project_box
 from .objectives import (MatchingObjective, GlobalCountObjective,
-                         dual_value_and_grad, ObjectiveAux)
+                         dual_value_and_grad, slab_xgvals, ObjectiveAux,
+                         AX_MODES)
 from .maximizer import Maximizer, maximize, gamma_at, max_step_at
 from .preconditioning import (row_normalize, primal_scale, precondition,
                               row_norms, undo_row_scaling,
                               gram_condition_number)
-from .instance import InstanceSpec, generate, pack_slabs
+from .instance import (InstanceSpec, generate, pack_slabs, build_ax_plan,
+                       build_sharded_ax_plan)
 
 __all__ = [
+    "AxBucket", "AxPlan",
     "LPData", "Slab", "SolveConfig", "SolveResult", "SolveState", "IterStats",
     "ProjectionMap", "project", "project_boxcut", "project_box",
     "MatchingObjective", "GlobalCountObjective", "dual_value_and_grad",
-    "ObjectiveAux", "Maximizer", "maximize", "gamma_at", "max_step_at",
+    "slab_xgvals", "ObjectiveAux", "AX_MODES",
+    "Maximizer", "maximize", "gamma_at", "max_step_at",
     "row_normalize", "primal_scale", "precondition", "row_norms",
     "undo_row_scaling", "gram_condition_number",
-    "InstanceSpec", "generate", "pack_slabs",
+    "InstanceSpec", "generate", "pack_slabs", "build_ax_plan",
+    "build_sharded_ax_plan",
 ]

@@ -29,7 +29,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import objectives
 from .maximizer import maximize
-from .types import LPData, Slab, SolveConfig, SolveResult
+from .types import AxPlan, LPData, Slab, SolveConfig, SolveResult
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-compat shard_map: jax.shard_map(check_vma=) on new jax,
+    jax.experimental.shard_map.shard_map(check_rep=) on older releases."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 def pad_slab_rows(slab: Slab, multiple: int) -> Slab:
@@ -87,6 +98,28 @@ class DistributedMatchingObjective:
     proj_iters: int = 40
     use_pallas: bool = False
     lambda_axis: Optional[str] = None   # beyond-paper λ sharding
+    # "scatter" (paper-faithful segment-sum) or "aligned" (destination-major
+    # AxPlan gather-reduce, scatter-free — DESIGN.md §3).  With "aligned" a
+    # per-shard plan over each device's local slab-edge space is built once
+    # and its leading shard axis is partitioned over source_axes — row-wise
+    # over the λ axis too when lambda_sharding="model" makes it one.
+    ax_mode: str = "scatter"
+    _plan: Optional[AxPlan] = dataclasses.field(
+        default=None, init=False, repr=False)
+
+    def __post_init__(self):
+        if self.ax_mode not in ("scatter", "aligned"):
+            raise ValueError(
+                f"distributed ax_mode is 'scatter' or 'aligned', got "
+                f"{self.ax_mode!r}")
+        if self.ax_mode == "aligned":
+            from .instance import build_sharded_ax_plan
+            n_shards = int(np.prod([self.mesh.shape[a]
+                                    for a in self.source_axes]))
+            plan = build_sharded_ax_plan(self.lp, n_shards)
+            row = NamedSharding(self.mesh, P(self.source_axes))
+            self._plan = jax.tree.map(
+                lambda a: jax.device_put(jnp.asarray(a), row), plan)
 
     @property
     def dual_shape(self):
@@ -106,12 +139,13 @@ class DistributedMatchingObjective:
                 "sources; pass source_axes containing lambda_axis")
         other_axes = tuple(a for a in source_axes if a != lam_axis)
 
+        ax_mode = self.ax_mode
         row_spec = P(source_axes)
         slab_specs = tuple(Slab(*(row_spec,) * 7) for _ in self.lp.slabs)
         b_spec = P(None, lam_axis) if lam_axis else P()
         lam_spec = P(None, lam_axis) if lam_axis else P()
 
-        def local(slabs, b, lam, gamma):
+        def local_core(slabs, b, lam, gamma, plan):
             if lam_axis is not None:
                 # beyond-paper: λ lives sharded on lam_axis; gather it for
                 # the edge pass, reduce-scatter the gradient back.
@@ -119,13 +153,29 @@ class DistributedMatchingObjective:
                     lam, lam_axis, axis=1, tiled=True)
             else:
                 lam_full = lam
-            ax = jnp.zeros((lam_full.shape[0], J), lam_full.dtype)
-            c_x = jnp.zeros((), lam_full.dtype)
-            x_sq = jnp.zeros((), lam_full.dtype)
-            for slab in slabs:
-                ax_s, c_s, sq_s = objectives.slab_contribution(
-                    slab, lam_full, gamma, J, kind, iters, pallas)
-                ax, c_x, x_sq = ax + ax_s, c_x + c_s, x_sq + sq_s
+            if ax_mode == "aligned":
+                # shard-local scatter-free reduce over the local edge space
+                from repro.kernels import ops as kops
+                parts, c_x, x_sq = [], jnp.zeros((), lam_full.dtype), \
+                    jnp.zeros((), lam_full.dtype)
+                for slab in slabs:
+                    _, gvals, c_s, sq_s = objectives.slab_xgvals(
+                        slab, lam_full, gamma, kind, iters, pallas)
+                    parts.append(gvals.reshape(-1, slab.m))
+                    c_x, x_sq = c_x + c_s, x_sq + sq_s
+                local_plan = jax.tree.map(lambda a: a[0], plan)
+                ax = kops.ax_aligned(local_plan,
+                                     jnp.concatenate(parts, axis=0),
+                                     use_pallas=pallas,
+                                     out_dtype=lam_full.dtype)
+            else:
+                ax = jnp.zeros((lam_full.shape[0], J), lam_full.dtype)
+                c_x = jnp.zeros((), lam_full.dtype)
+                x_sq = jnp.zeros((), lam_full.dtype)
+                for slab in slabs:
+                    ax_s, c_s, sq_s = objectives.slab_contribution(
+                        slab, lam_full, gamma, J, kind, iters, pallas)
+                    ax, c_x, x_sq = ax + ax_s, c_x + c_s, x_sq + sq_s
             # the ONE collective round of the paper's iteration:
             c_x = jax.lax.psum(c_x, source_axes)
             x_sq = jax.lax.psum(x_sq, source_axes)
@@ -153,11 +203,27 @@ class DistributedMatchingObjective:
         out_aux_spec = objectives.ObjectiveAux(
             primal_obj=P(), x_sq=P(), ax=P(None, lam_axis) if lam_axis else P(),
             infeas=P())
-        fn = jax.shard_map(
+        out_specs = (P(), lam_spec, out_aux_spec)
+        if self._plan is not None:
+            plan_specs = jax.tree.map(lambda _: row_spec, self._plan)
+
+            def local(slabs, b, plan, lam, gamma):
+                return local_core(slabs, b, lam, gamma, plan)
+
+            fn = _shard_map(
+                local, mesh=self.mesh,
+                in_specs=(slab_specs, b_spec, plan_specs, lam_spec, P()),
+                out_specs=out_specs,
+            )
+            return fn(self.lp.slabs, self.lp.b, self._plan, lam, gamma)
+
+        def local(slabs, b, lam, gamma):
+            return local_core(slabs, b, lam, gamma, None)
+
+        fn = _shard_map(
             local, mesh=self.mesh,
             in_specs=(slab_specs, b_spec, lam_spec, P()),
-            out_specs=(P(), lam_spec, out_aux_spec),
-            check_vma=False,
+            out_specs=out_specs,
         )
         return fn(self.lp.slabs, self.lp.b, lam, gamma)
 
@@ -170,6 +236,7 @@ def solve_distributed(
     lambda_axis: Optional[str] = None,
     algorithm: str = "agd",
     lam0: Optional[jax.Array] = None,
+    ax_mode: str = "scatter",
 ) -> SolveResult:
     """End-to-end distributed solve: place data, build objective, maximize.
 
@@ -183,7 +250,7 @@ def solve_distributed(
     obj = DistributedMatchingObjective(
         lp=lp, mesh=mesh, source_axes=source_axes,
         proj_kind=config.projection, use_pallas=config.use_pallas,
-        lambda_axis=lambda_axis)
+        lambda_axis=lambda_axis, ax_mode=ax_mode)
     if lam0 is None:
         lam0 = jnp.zeros(obj.dual_shape, jnp.float32)
     lam_sharding = (NamedSharding(mesh, P(None, lambda_axis)) if lambda_axis

@@ -24,7 +24,7 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-from .types import LPData, Slab
+from .types import AxBucket, AxPlan, LPData, Slab
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,6 +157,112 @@ def pack_slabs(src, dst, value, a, spec: InstanceSpec) -> LPData:
         ))
     b = _rhs(spec, src, dst, a)
     return LPData(slabs=tuple(slabs), b=b.astype(np.float32))
+
+
+def _flat_edges(slabs, row_slice: Optional[Tuple[int, int]] = None):
+    """(dest, flat_idx) of every real edge in the concatenated slab-edge
+    space; `row_slice=(k, n)` restricts to the k-th of n row blocks per slab
+    (the block partition used by `distributed.place_lp`), with flat indices
+    in the *local* edge space of that block."""
+    dests, idxs, off = [], [], 0
+    for s in slabs:
+        d = np.asarray(s.dest_idx)
+        mk = np.asarray(s.mask).astype(bool)
+        if row_slice is not None:
+            k, n = row_slice
+            assert d.shape[0] % n == 0, (d.shape[0], n)
+            nl = d.shape[0] // n
+            d, mk = d[k * nl:(k + 1) * nl], mk[k * nl:(k + 1) * nl]
+        d, mk = d.reshape(-1), mk.reshape(-1)
+        keep = np.nonzero(mk)[0]
+        dests.append(d[keep])
+        idxs.append(off + keep)
+        off += d.size
+    if not dests:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64), off
+    return (np.concatenate(dests).astype(np.int64),
+            np.concatenate(idxs).astype(np.int64), off)
+
+
+def _pow2_widths(indeg: np.ndarray, min_width: int) -> np.ndarray:
+    return np.maximum(min_width,
+                      1 << np.ceil(np.log2(np.maximum(indeg, 1)))
+                      .astype(np.int64))
+
+
+def _pack_ax_rows(dest, idx, J: int, widths: np.ndarray):
+    """Pack per-destination gather rows under a fixed width assignment.
+
+    Returns ([(edge_idx, mask, dest_ids)] per distinct width, row_pos) with
+    row_pos[j] = position of destination j in the bucket-concatenated rows.
+    """
+    order = np.argsort(dest, kind="stable")
+    dest_s, idx_s = dest[order], idx[order]
+    indeg = np.bincount(dest_s, minlength=J)[:J]
+    start = np.zeros(J, np.int64)
+    start[1:] = np.cumsum(indeg)[:-1]
+    buckets, row_pos, pos = [], np.zeros(J, np.int64), 0
+    for w in sorted(set(widths.tolist())):
+        rows = np.nonzero(widths == w)[0]
+        r = len(rows)
+        gather = start[rows][:, None] + np.arange(w)[None, :]
+        msk = np.arange(w)[None, :] < indeg[rows][:, None]
+        safe = np.where(msk, gather, 0)
+        eidx = (np.where(msk, idx_s[safe], 0) if idx_s.size
+                else np.zeros((r, w), np.int64))
+        buckets.append((eidx.astype(np.int32), msk,
+                        rows.astype(np.int32)))
+        row_pos[rows] = pos + np.arange(r)
+        pos += r
+    return buckets, row_pos
+
+
+def build_ax_plan(lp: LPData, min_width: int = 4) -> AxPlan:
+    """Pack the destination-major companion layout (DESIGN.md §3), host-side,
+    once per instance.
+
+    Destinations are bucketed by ⌈log2 in-degree⌉ into padded power-of-two
+    rows, mirroring `pack_slabs`' source-side bucketing; every destination
+    (including in-degree 0) occupies exactly one row, so the dense (m, J)
+    `Ax` assembles by the `inv_perm` gather with no scatter anywhere.
+    """
+    J = lp.num_destinations
+    dest, idx, _ = _flat_edges(lp.slabs)
+    widths = _pow2_widths(np.bincount(dest, minlength=J)[:J], min_width)
+    buckets, row_pos = _pack_ax_rows(dest, idx, J, widths)
+    return AxPlan(
+        buckets=tuple(AxBucket(edge_idx=e, mask=m, dest_ids=d)
+                      for e, m, d in buckets),
+        inv_perm=row_pos.astype(np.int32))
+
+
+def build_sharded_ax_plan(lp: LPData, num_shards: int,
+                          min_width: int = 4) -> AxPlan:
+    """Per-shard AxPlans over the block row-partition of an (already padded)
+    LP, stacked on a leading shard axis.
+
+    Every shard's plan indexes its *local* slab-edge space (the rows
+    `place_lp` assigns to that device).  Bucket widths are shared across
+    shards (max local in-degree) so all leaves have uniform shapes and the
+    stack is a single pytree whose leading axis shards over the mesh source
+    axes — in particular row-wise over the λ axis when
+    `lambda_sharding="model"` makes it a source axis.
+    """
+    J = lp.num_destinations
+    shard_edges = [_flat_edges(lp.slabs, row_slice=(k, num_shards))[:2]
+                   for k in range(num_shards)]
+    indeg = np.stack([np.bincount(d, minlength=J)[:J]
+                      for d, _ in shard_edges])
+    widths = _pow2_widths(indeg.max(axis=0), min_width)
+    packed = [_pack_ax_rows(d, i, J, widths) for d, i in shard_edges]
+    buckets = []
+    for bi in range(len(packed[0][0])):
+        buckets.append(AxBucket(
+            edge_idx=np.stack([p[0][bi][0] for p in packed]),
+            mask=np.stack([p[0][bi][1] for p in packed]),
+            dest_ids=np.stack([p[0][bi][2] for p in packed])))
+    inv = np.stack([p[1] for p in packed]).astype(np.int32)
+    return AxPlan(buckets=tuple(buckets), inv_perm=inv)
 
 
 def generate(spec: InstanceSpec, shard: Optional[Tuple[int, int]] = None) -> LPData:

@@ -123,9 +123,9 @@ def initial_state(lam0: jax.Array, config: SolveConfig) -> SolveState:
                       it=jnp.asarray(0, jnp.int32))
 
 
-def maximize(calculate: Callable, lam0: jax.Array, config: SolveConfig,
-             algorithm: str = "agd") -> SolveResult:
-    """Run `config.iterations` steps of dual ascent; fully jit-compiled."""
+def _make_runner(calculate: Callable, config: SolveConfig,
+                 algorithm: str) -> Callable:
+    """Build the jitted solve loop (one lax.scan -> one XLA program)."""
     step_fn = partial(_STEPS[algorithm], calculate, config)
 
     @jax.jit
@@ -135,20 +135,47 @@ def maximize(calculate: Callable, lam0: jax.Array, config: SolveConfig,
                                     length=config.iterations)
         return state.lam, stats
 
-    lam, stats = run(lam0)
+    return run
+
+
+def maximize(calculate: Callable, lam0: jax.Array, config: SolveConfig,
+             algorithm: str = "agd") -> SolveResult:
+    """Run `config.iterations` steps of dual ascent; fully jit-compiled."""
+    lam, stats = _make_runner(calculate, config, algorithm)(lam0)
     return SolveResult(lam=lam, stats=stats)
 
 
 class Maximizer:
     """Paper §4 facade: constructed from algorithm settings, exposes the
-    single method `maximize(obj, initial_value) -> Result`."""
+    single method `maximize(obj, initial_value) -> Result`.
+
+    Caches the jitted solve loop for the most recent objective: the free
+    `maximize()` builds a fresh closure every call, which re-traces and
+    re-compiles even for an identical objective — repeat solves (warm
+    restarts, benchmark repeats) were paying full XLA compile each time.
+    The cache is invalidated when the objective's attributes are
+    reassigned (it snapshots attribute identities), and holds a single
+    slot so a sequence of fresh objectives doesn't accumulate compiled
+    executables or pin their LP arrays.
+    """
 
     def __init__(self, config: SolveConfig, algorithm: str = "agd"):
         self.config = config
         self.algorithm = algorithm
+        self._cache = None   # (obj, attr snapshot, jitted run)
+
+    def _runner(self, obj):
+        snap = tuple(sorted(
+            (k, id(v)) for k, v in getattr(obj, "__dict__", {}).items()))
+        if (self._cache is not None and self._cache[0] is obj
+                and self._cache[1] == snap):
+            return self._cache[2]
+        run = _make_runner(obj.calculate, self.config, self.algorithm)
+        self._cache = (obj, snap, run)
+        return run
 
     def maximize(self, obj, initial_value: Optional[jax.Array] = None) -> SolveResult:
         if initial_value is None:
             initial_value = jnp.zeros(obj.dual_shape, jnp.float32)
-        return maximize(obj.calculate, initial_value, self.config,
-                        self.algorithm)
+        lam, stats = self._runner(obj)(initial_value)
+        return SolveResult(lam=lam, stats=stats)

@@ -9,12 +9,19 @@ On the bucketed-slab layout every step is a dense masked row-op:
   1. gather λ at each edge's destination:     lam_e = λ[:, dest_idx]   (m,n,w)
   2. pre-projection point: u = −(Σ_k a_k·λ_k + c)/γ                    (n,w)
   3. blockwise projection x = Π_C(u) per source row                    (n,w)
-  4. per-edge grad vals g_e = a_k · x, segment-summed by destination
+  4. per-edge grad vals g_e = a_k · x, reduced by destination into Ax
   5. local scalars: cᵀx, ‖x‖², λᵀAx accumulate into g(λ).
 
-Only step 4's segment-sum and the final (m, J) reduction touch anything
-non-local — which is exactly why the distributed version (core.distributed)
-communicates nothing but the duals.
+Step 4 is the only non-local stage, and `ax_mode` selects how it runs
+(DESIGN.md §3):
+  "scatter"  per-slab `segment_sum` keyed by destination (random
+             scatter-add — the paper-faithful baseline);
+  "sorted"   edges pre-sorted by destination at construction so the
+             segmented sum takes the `indices_are_sorted` fast path;
+  "aligned"  destination-major companion layout (`AxPlan`): Ax is a dense
+             masked gather row-sum over padded in-degree buckets — no
+             scatter, no atomics, fixed shapes (the constraint-aligned
+             sparse layout of paper §6).
 """
 from __future__ import annotations
 
@@ -25,7 +32,9 @@ import jax
 import jax.numpy as jnp
 
 from . import projections
-from .types import LPData, Slab
+from .types import AxPlan, LPData, Slab
+
+AX_MODES = ("scatter", "sorted", "aligned")
 
 
 class ObjectiveAux(NamedTuple):
@@ -49,19 +58,57 @@ def slab_xstar(slab: Slab, lam: jax.Array, gamma: jax.Array,
                                iters=proj_iters)
 
 
+def slab_xgvals(slab: Slab, lam: jax.Array, gamma: jax.Array,
+                proj_kind: str, proj_iters: int = 40,
+                use_pallas: bool = False, shift=None):
+    """Fused per-slab forward pass: (x*, gvals, cᵀx, ‖x‖²).
+
+    `shift` is a scalar added uniformly inside u — the global count row of
+    GlobalCountObjective (its A-row is all-ones on real edges), folded into
+    c so the jnp and Pallas paths share one implementation.  With
+    `use_pallas` the fused dual_grad kernel's gvals/c_x/x_sq outputs are
+    consumed directly instead of being discarded and recomputed outside.
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+        kslab = (slab if shift is None
+                 else slab._replace(c_vals=slab.c_vals + shift))
+        x, gvals, c_x, x_sq = kops.dual_grad_full(
+            kslab, lam, gamma, proj_kind, proj_iters)
+        if shift is not None:
+            # kernel saw c+μ, so its cᵀx includes μ·Σx (x is 0 on padding)
+            c_x = c_x - shift * jnp.sum(x)
+        return x, gvals, c_x, x_sq
+    lam_e = lam[:, slab.dest_idx]
+    atl = jnp.einsum("nwm,mnw->nw", slab.a_vals, lam_e)
+    if shift is not None:
+        atl = atl + shift
+    u = -(atl + slab.c_vals) / gamma
+    x = projections.project(proj_kind, u, slab.ub, slab.s, slab.mask,
+                            iters=proj_iters)
+    gvals = slab.a_vals * x[..., None]                  # (n, w, m)
+    return x, gvals, jnp.vdot(slab.c_vals, x), jnp.vdot(x, x)
+
+
+def _segment_ax(gvals_flat: jax.Array, flat_dest: jax.Array,
+                num_destinations: int, indices_are_sorted: bool = False):
+    """(m, J) destination-keyed segmented sum of flattened gvals (E, m)."""
+    return jax.vmap(
+        lambda g: jax.ops.segment_sum(g, flat_dest,
+                                      num_segments=num_destinations,
+                                      indices_are_sorted=indices_are_sorted),
+        in_axes=-1, out_axes=0,
+    )(gvals_flat)
+
+
 def slab_contribution(slab: Slab, lam: jax.Array, gamma: jax.Array,
                       num_destinations: int, proj_kind: str,
                       proj_iters: int = 40, use_pallas: bool = False):
-    """One slab's (Ax partial, cᵀx, ‖x‖²)."""
-    x = slab_xstar(slab, lam, gamma, proj_kind, proj_iters, use_pallas)
-    gvals = slab.a_vals * x[..., None]                  # (n, w, m)
-    flat_dest = slab.dest_idx.reshape(-1)
-    ax = jax.vmap(
-        lambda g: jax.ops.segment_sum(g, flat_dest, num_segments=num_destinations),
-        in_axes=-1, out_axes=0,
-    )(gvals.reshape(-1, slab.m))                        # (m, J)
-    c_x = jnp.vdot(slab.c_vals, x)
-    x_sq = jnp.vdot(x, x)
+    """One slab's (Ax partial, cᵀx, ‖x‖²) via the destination scatter."""
+    x, gvals, c_x, x_sq = slab_xgvals(slab, lam, gamma, proj_kind,
+                                      proj_iters, use_pallas)
+    ax = _segment_ax(gvals.reshape(-1, slab.m), slab.dest_idx.reshape(-1),
+                     num_destinations)
     return ax, c_x, x_sq
 
 
@@ -74,7 +121,7 @@ def dual_value_and_grad(
     use_pallas: bool = False,
     ax_reducer=None,
 ) -> Tuple[jax.Array, jax.Array, ObjectiveAux]:
-    """g(λ), ∇g(λ), and diagnostics.
+    """g(λ), ∇g(λ), and diagnostics (functional scatter-mode entry point).
 
     `ax_reducer` is the distribution hook: it reduces the locally-computed
     (Ax, cᵀx, ‖x‖²) across shards (e.g. `jax.lax.psum` inside shard_map).
@@ -104,59 +151,89 @@ class MatchingObjective:
     interface, so new formulations (different layout, extra constraint
     families, a global count constraint, ...) are purely local changes.
 
-    `sorted_scatter=True` (§Perf it3): pre-sorts all edges by destination at
-    construction (host-side, once) so the Ax reduction runs the
-    `indices_are_sorted` segmented-sum fast path instead of a random
-    scatter-add.
+    `ax_mode` selects the Ax reduction (module docstring): "scatter"
+    (paper-faithful segment-sum), "sorted" (§Perf it3: edges pre-sorted by
+    destination at construction so the segmented sum takes the
+    `indices_are_sorted` fast path), or "aligned" (§Perf it4/it5: the
+    destination-major `AxPlan` gather-reduce, scatter-free).  The
+    deprecated `sorted_scatter=True` flag is an alias for
+    `ax_mode="sorted"`.
     """
 
     def __init__(self, lp: LPData, projection_map=None, proj_kind: str = "boxcut",
                  proj_iters: int = 40, use_pallas: bool = False,
-                 ax_reducer=None, sorted_scatter: bool = False):
+                 ax_reducer=None, ax_mode: Optional[str] = None,
+                 sorted_scatter: bool = False,
+                 ax_plan: Optional[AxPlan] = None):
         self.lp = lp
         self.proj_kind = projection_map.kind if projection_map is not None else proj_kind
         self.proj_iters = proj_iters
         self.use_pallas = use_pallas
         self.ax_reducer = ax_reducer
-        self.sorted_scatter = sorted_scatter
-        if sorted_scatter:
+        if ax_mode is None:
+            ax_mode = "sorted" if sorted_scatter else "scatter"
+        if ax_mode not in AX_MODES:
+            raise ValueError(f"ax_mode must be one of {AX_MODES}, got {ax_mode!r}")
+        self.ax_mode = ax_mode
+        self.sorted_scatter = ax_mode == "sorted"   # kept for introspection
+        if ax_mode == "sorted":
             import numpy as np
             dests = np.concatenate([np.asarray(s.dest_idx).reshape(-1)
                                     for s in lp.slabs])
             self._perm = jnp.asarray(np.argsort(dests, kind="stable"))
             self._sorted_dest = jnp.asarray(np.sort(dests, kind="stable"))
+        elif ax_mode == "aligned":
+            if ax_plan is None:
+                from .instance import build_ax_plan
+                ax_plan = build_ax_plan(lp)
+            self._plan = jax.tree.map(jnp.asarray, ax_plan)
 
     @property
     def dual_shape(self) -> Tuple[int, int]:
         return (self.lp.m, self.lp.num_destinations)
 
-    def calculate(self, lam: jax.Array, gamma: jax.Array):
-        if not self.sorted_scatter:
-            return dual_value_and_grad(
-                self.lp, lam, gamma, self.proj_kind, self.proj_iters,
-                self.use_pallas, self.ax_reducer)
-        return self._calculate_sorted(lam, gamma)
-
-    def _calculate_sorted(self, lam: jax.Array, gamma: jax.Array):
+    def _reduce_ax(self, gval_parts, dtype):
+        """(m, J) Ax from per-slab flattened gvals, per the selected mode."""
         lp = self.lp
         J = lp.num_destinations
-        gval_parts, c_x, x_sq = [], jnp.zeros(()), jnp.zeros(())
-        for slab in lp.slabs:
-            x = slab_xstar(slab, lam, gamma, self.proj_kind, self.proj_iters,
-                           self.use_pallas)
-            gval_parts.append((slab.a_vals * x[..., None])
-                              .reshape(-1, slab.m))
-            c_x = c_x + jnp.vdot(slab.c_vals, x)
-            x_sq = x_sq + jnp.vdot(x, x)
-        gvals = jnp.concatenate(gval_parts, axis=0)[self._perm]
-        ax = jax.vmap(
-            lambda g: jax.ops.segment_sum(g, self._sorted_dest,
-                                          num_segments=J,
-                                          indices_are_sorted=True),
-            in_axes=-1, out_axes=0)(gvals)
+        if self.ax_mode == "aligned":
+            from repro.kernels import ops as kops
+            return kops.ax_aligned(self._plan,
+                                   jnp.concatenate(gval_parts, axis=0),
+                                   use_pallas=self.use_pallas,
+                                   out_dtype=dtype)
+        if self.ax_mode == "sorted":
+            gvals = jnp.concatenate(gval_parts, axis=0)[self._perm]
+            return _segment_ax(gvals, self._sorted_dest, J,
+                               indices_are_sorted=True)
+        ax = jnp.zeros((lp.m, J), dtype)
+        for slab, part in zip(lp.slabs, gval_parts):
+            ax = ax + _segment_ax(part, slab.dest_idx.reshape(-1), J)
+        return ax
+
+    def _forward(self, lam: jax.Array, gamma: jax.Array, shift=None,
+                 with_xsum: bool = False):
+        """Shared slab sweep: (Ax, cᵀx, ‖x‖², Σx) for any ax_mode."""
+        parts = []
+        c_x = jnp.zeros((), lam.dtype)
+        x_sq = jnp.zeros((), lam.dtype)
+        x_sum = jnp.zeros((), lam.dtype)
+        for slab in self.lp.slabs:
+            x, gvals, c_s, sq_s = slab_xgvals(
+                slab, lam, gamma, self.proj_kind, self.proj_iters,
+                self.use_pallas, shift)
+            parts.append(gvals.reshape(-1, slab.m))
+            c_x = c_x + c_s
+            x_sq = x_sq + sq_s
+            if with_xsum:
+                x_sum = x_sum + jnp.sum(x)
+        return self._reduce_ax(parts, lam.dtype), c_x, x_sq, x_sum
+
+    def calculate(self, lam: jax.Array, gamma: jax.Array):
+        ax, c_x, x_sq, _ = self._forward(lam, gamma)
         if self.ax_reducer is not None:
             ax, c_x, x_sq = self.ax_reducer((ax, c_x, x_sq))
-        grad = ax - lp.b
+        grad = ax - self.lp.b
         g = c_x + 0.5 * gamma * x_sq + jnp.vdot(lam, grad)
         infeas = jnp.linalg.norm(jnp.maximum(grad, 0.0))
         return g, grad, ObjectiveAux(primal_obj=c_x, x_sq=x_sq, ax=ax,
@@ -176,9 +253,12 @@ class GlobalCountObjective(MatchingObjective):
     Σ_ij x_ij <= count as ONE extra dual row, composed locally.
 
     A_extra is all-ones on real edges; implemented by treating the extra row
-    as an (m+1)-th family whose λ enters u uniformly and whose Ax entry is
-    Σ x.  Demonstrates that 'appending a constraint' is a ~30-line subclass
-    here versus 'extensive changes across the code base' in Scala DuaLip.
+    as an (m+1)-th family whose λ enters u uniformly (the `shift` hook of
+    `slab_xgvals`) and whose Ax entry is Σ x.  Demonstrates that 'appending
+    a constraint' is a ~20-line subclass here versus 'extensive changes
+    across the code base' in Scala DuaLip — and, because it rides the shared
+    `_forward` sweep, it inherits every `ax_mode` and the Pallas path for
+    free.
     """
 
     def __init__(self, lp: LPData, count: float, **kw):
@@ -194,25 +274,8 @@ class GlobalCountObjective(MatchingObjective):
         m, J = self.lp.m, self.lp.num_destinations
         lam = lam_flat[:-1].reshape(m, J)
         mu = lam_flat[-1]
-        J_ = self.lp.num_destinations
-        ax = jnp.zeros((m, J_), lam.dtype)
-        c_x = jnp.zeros((), lam.dtype)
-        x_sq = jnp.zeros((), lam.dtype)
-        x_sum = jnp.zeros((), lam.dtype)
-        for slab in self.lp.slabs:
-            lam_e = lam[:, slab.dest_idx]
-            atl = jnp.einsum("nwm,mnw->nw", slab.a_vals, lam_e) + mu
-            u = -(atl + slab.c_vals) / gamma
-            x = projections.project(self.proj_kind, u, slab.ub, slab.s,
-                                    slab.mask, iters=self.proj_iters)
-            gvals = slab.a_vals * x[..., None]
-            flat_dest = slab.dest_idx.reshape(-1)
-            ax += jax.vmap(
-                lambda g: jax.ops.segment_sum(g, flat_dest, num_segments=J_),
-                in_axes=-1, out_axes=0)(gvals.reshape(-1, slab.m))
-            c_x += jnp.vdot(slab.c_vals, x)
-            x_sq += jnp.vdot(x, x)
-            x_sum += jnp.sum(x)
+        ax, c_x, x_sq, x_sum = self._forward(lam, gamma, shift=mu,
+                                             with_xsum=True)
         if self.ax_reducer is not None:
             ax, c_x, x_sq, x_sum = self.ax_reducer((ax, c_x, x_sq, x_sum))
         grad_main = ax - self.lp.b

@@ -55,6 +55,66 @@ class Slab(NamedTuple):
         return self.a_vals.shape[2]
 
 
+class AxBucket(NamedTuple):
+    """One in-degree bucket of the constraint-aligned companion layout.
+
+    Destination-major mirror of `Slab`: each row is one dual row
+    (destination), holding the positions of its incident edges in the
+    concatenated slab-edge space, padded to a common power-of-two width.
+
+    Shapes (r = #destinations in bucket, w = padded width = bucket power
+    of two):
+      edge_idx: (r, w)  int32  flat edge positions (0 on padding)
+      mask:     (r, w)  bool   True for real incident edges
+      dest_ids: (r,)    int32  destination id j of each row
+
+    A leading shard axis may be prepended to every field (see
+    `instance.build_sharded_ax_plan`); the per-row semantics are unchanged.
+    """
+
+    edge_idx: jax.Array
+    mask: jax.Array
+    dest_ids: jax.Array
+
+    @property
+    def rows(self) -> int:
+        return self.edge_idx.shape[-2]
+
+    @property
+    def width(self) -> int:
+        return self.edge_idx.shape[-1]
+
+
+class AxPlan(NamedTuple):
+    """Destination-major companion of the source-major slab layout
+    (DESIGN.md §3) — packed once at construction, consumed every iteration.
+
+    The slabs answer "which edges does source i own?"; the plan answers
+    "which edges land on dual row j?".  With it, `Ax` is a *gather*:
+    flatten the per-edge gradient values gvals (edge order = slab
+    concatenation order), gather each destination's incident values, and
+    masked-row-sum — no scatter, no atomics, fixed shapes.
+
+    buckets:  one AxBucket per ⌈log2 in-degree⌉ class; together the rows
+              cover every destination exactly once (zero in-degree
+              destinations get a fully masked min-width row).
+    inv_perm: (J,) int32 — position of destination j in the
+              bucket-concatenated row space, so assembling the dense
+              (m, J) result is itself a pure gather.
+    """
+
+    buckets: Tuple[AxBucket, ...]
+    inv_perm: jax.Array
+
+    @property
+    def num_rows(self) -> int:
+        return sum(b.rows for b in self.buckets)
+
+    @property
+    def num_destinations(self) -> int:
+        return self.inv_perm.shape[-1]
+
+
 class LPData(NamedTuple):
     """A matching LP in bucketed-slab layout.
 

@@ -2,6 +2,7 @@
 
   proj.py       batched box-cut projection via τ-bisection
   dual_grad.py  fused x*(λ) + per-edge gradient values + local scalars
+  ax_reduce.py  constraint-aligned gather-reduce for Ax (scatter-free)
   ops.py        jit'd public wrappers (interpret-mode fallback off-TPU)
   ref.py        pure-jnp oracles (ground truth for tests)
 """

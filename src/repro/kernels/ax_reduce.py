@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: constraint-aligned gather-reduce for Ax (paper §6).
+
+The companion layout (`core.types.AxPlan`) turns the dual-gradient's
+`Ax` reduction from a destination-keyed scatter-add into a dense masked
+row-sum: each dual row owns a padded (width,) list of edge positions in
+the concatenated slab-edge space, so its Ax entry is
+
+    ax[row, k] = Σ_q mask[row, q] · gvals[edge_idx[row, q], k].
+
+That is exactly the gather-based formulation cuPDLP-class GPU solvers use
+to retire atomics from the transpose product — every lane does independent
+loads, the sum is a fixed-shape VPU reduction, and there is no write
+contention at all.
+
+Tiling mirrors proj.py: grid over row-blocks of one in-degree bucket; each
+kernel instance owns a (BLOCK_ROWS, width) tile of indices/mask.  The
+flattened per-edge gradient values are staged whole per instance (BlockSpec
+constant index map, like λ in dual_grad.py) because gather indices are
+global — fine at matching-workload sizes where gvals is the slab-edge
+space of one shard; production TPU deployments would chunk the edge space
+per slab and accumulate (see DESIGN.md §3).
+
+Accumulation is always f32 (bf16 gvals included), matching dual_grad.py's
+scalar partials.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .proj import _block_rows
+
+
+def _ax_reduce_kernel(g_ref, idx_ref, mask_ref, out_ref):
+    g = g_ref[...]                           # (E, m) whole edge space
+    idx = idx_ref[...]                       # (br, w) int32
+    mask = mask_ref[...] != 0                # (br, w)
+    br, w = idx.shape
+    m = g.shape[1]
+    # m is tiny (1-4 constraint families): unrolled, one gather per family.
+    cols = []
+    for k in range(m):
+        vals = jnp.take(g[:, k], idx.reshape(-1), axis=0).reshape(br, w)
+        cols.append(jnp.sum(
+            jnp.where(mask, vals.astype(jnp.float32), 0.0), axis=-1))
+    out_ref[...] = jnp.stack(cols, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def ax_reduce_bucket(gvals: jax.Array, edge_idx: jax.Array, mask: jax.Array,
+                     interpret: bool = False,
+                     block_rows: int | None = None) -> jax.Array:
+    """Masked gather row-sum of one AxBucket.
+
+    gvals: (E, m) flattened per-edge gradient values; edge_idx/mask: (r, w).
+    Returns (r, m) float32 partial Ax rows (bucket row order).
+    """
+    r, w = edge_idx.shape
+    E, m = gvals.shape
+    if E == 0 or r == 0:
+        return jnp.zeros((r, m), jnp.float32)
+    # idx + mask + one gathered tile resident at once
+    br = block_rows or min(_block_rows(3 * w), max(r, 8))
+    r_pad = -(-r // br) * br
+    if r_pad != r:
+        pad = [(0, r_pad - r), (0, 0)]
+        edge_idx = jnp.pad(edge_idx, pad)
+        mask = jnp.pad(mask, pad)
+    grid = (r_pad // br,)
+    out = pl.pallas_call(
+        _ax_reduce_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((E, m), lambda i: (0, 0)),     # gvals: whole block
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, m), jnp.float32),
+        interpret=interpret,
+    )(gvals, edge_idx, mask.astype(jnp.int32))
+    return out[:r]

@@ -12,9 +12,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from . import ax_reduce as _ax_reduce
 from . import dual_grad as _dual_grad
 from . import proj as _proj
-from repro.core.types import Slab
+from repro.core.types import AxPlan, Slab
 
 
 def _interpret_default() -> bool:
@@ -38,12 +39,13 @@ def dual_grad_slab(slab: Slab, lam, gamma, iters: int = _proj.DEFAULT_ITERS,
         lam, gamma, iters=iters, interpret=interpret)
 
 
-def dual_xstar(slab: Slab, lam, gamma, proj_kind: str = "boxcut",
-               iters: int = _proj.DEFAULT_ITERS,
-               interpret: bool | None = None):
-    """x*(λ) for one slab via the fused kernel (boxcut/simplex kinds).
+def dual_grad_full(slab: Slab, lam, gamma, proj_kind: str = "boxcut",
+                   iters: int = _proj.DEFAULT_ITERS,
+                   interpret: bool | None = None):
+    """Fused (x*, gvals, cᵀx, ‖x‖²) for one slab with proj-kind dispatch.
 
-    Entry point used by repro.core.objectives.slab_xstar(use_pallas=True).
+    Entry point used by repro.core.objectives.slab_xgvals(use_pallas=True):
+    all four kernel outputs are consumed downstream — nothing recomputed.
     """
     if proj_kind == "simplex":
         big = jnp.full_like(slab.ub, 1e30)
@@ -51,6 +53,48 @@ def dual_xstar(slab: Slab, lam, gamma, proj_kind: str = "boxcut",
     elif proj_kind not in ("boxcut", "box"):
         raise NotImplementedError(
             f"pallas path supports boxcut/simplex/box, got {proj_kind}")
-    x, _, _, _ = dual_grad_slab(slab, lam, gamma, iters=iters,
-                                interpret=interpret)
-    return x
+    return dual_grad_slab(slab, lam, gamma, iters=iters, interpret=interpret)
+
+
+def dual_xstar(slab: Slab, lam, gamma, proj_kind: str = "boxcut",
+               iters: int = _proj.DEFAULT_ITERS,
+               interpret: bool | None = None):
+    """x*(λ) for one slab via the fused kernel (boxcut/simplex kinds)."""
+    return dual_grad_full(slab, lam, gamma, proj_kind, iters, interpret)[0]
+
+
+def ax_reduce_bucket(gvals, edge_idx, mask, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _ax_reduce.ax_reduce_bucket(gvals, edge_idx, mask,
+                                       interpret=interpret)
+
+
+def ax_aligned(plan: AxPlan, gvals: jax.Array, use_pallas: bool = False,
+               interpret: bool | None = None, out_dtype=None) -> jax.Array:
+    """Scatter-free (m, J) Ax via the destination-major companion layout.
+
+    gvals: (E, m) per-edge gradient values, flattened in slab concatenation
+    order (the plan's edge space).  Per bucket the reduction is a masked
+    gather row-sum — through the Pallas kernel when `use_pallas`, otherwise
+    the XLA take+sum fallback; assembly into destination order is the
+    inv_perm gather.  No scatter, no atomics anywhere.
+    """
+    rows = []
+    for b in plan.buckets:
+        if use_pallas:
+            rows.append(ax_reduce_bucket(gvals, b.edge_idx, b.mask,
+                                         interpret=interpret))
+        else:  # XLA fallback: identical math, plain take+sum
+            r, w = b.edge_idx.shape
+            # plan indices are valid by construction: skip gather bounds
+            # checks (they constant-fold painfully over E-sized index sets)
+            g = gvals.at[b.edge_idx.reshape(-1)].get(
+                mode="promise_in_bounds")
+            g = g.reshape(r, w, gvals.shape[-1]).astype(jnp.float32)
+            rows.append(jnp.sum(jnp.where(b.mask[..., None], g, 0.0),
+                                axis=1))
+    rows = jnp.concatenate(rows, axis=0)               # (R, m) f32
+    ax = rows.at[plan.inv_perm].get(                   # (m, J)
+        mode="promise_in_bounds").T
+    return ax.astype(out_dtype or gvals.dtype)

@@ -39,6 +39,32 @@ def boxcut_bisect_ref(v, ub, s, mask, iters: int = 40):
     return jnp.where(mask, x, 0.0)
 
 
+def ax_reduce_ref(gvals, edge_idx, mask):
+    """Oracle for ax_reduce.py: masked gather row-sum of one AxBucket.
+
+      out[r, k] = Σ_q mask[r, q] · gvals[edge_idx[r, q], k]
+
+    gvals: (E, m); edge_idx/mask: (r, w).  Returns (r, m) float32.
+    """
+    r, w = edge_idx.shape
+    g = jnp.take(gvals, edge_idx.reshape(-1), axis=0)
+    g = g.reshape(r, w, gvals.shape[-1])
+    return jnp.sum(jnp.where(mask[..., None], g.astype(jnp.float32), 0.0),
+                   axis=1)
+
+
+def ax_plan_ref(plan, gvals):
+    """Oracle for the full aligned reduction: (m, J) Ax from a plan.
+
+    Concatenates per-bucket row sums and gathers them into destination
+    order via inv_perm — the same assembly ops.ax_aligned performs.
+    """
+    rows = jnp.concatenate(
+        [ax_reduce_ref(gvals, b.edge_idx, b.mask) for b in plan.buckets],
+        axis=0)
+    return jnp.take(rows, plan.inv_perm, axis=0).T
+
+
 def dual_xstar_ref(a_vals, c_vals, dest_idx, mask, ub, s, lam, gamma,
                    iters: int = 40):
     """Fused dual-gradient inner step, slab form (oracle for dual_grad.py):

@@ -14,7 +14,18 @@ from __future__ import annotations
 from typing import Optional, Sequence, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit axis types on Mesh
+    from jax.sharding import AxisType
+except ImportError:  # older jax: Auto is the only (implicit) behavior
+    AxisType = None
+
+
+def _axis_type_kwargs(num_axes: int) -> dict:
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * num_axes}
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str],
@@ -23,9 +34,9 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str],
     if devices is not None:
         import numpy as np
         return Mesh(np.asarray(devices).reshape(tuple(shape)), tuple(axes),
-                    axis_types=(AxisType.Auto,) * len(axes))
+                    **_axis_type_kwargs(len(axes)))
     return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+                         **_axis_type_kwargs(len(axes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

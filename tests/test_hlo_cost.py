@@ -66,8 +66,10 @@ class TestCollectives:
         from repro.launch.mesh import make_mesh
         mesh = make_mesh((1, 1), ("data", "model"))
 
+        from repro.core.distributed import _shard_map
+
         def f(x):
-            return jax.shard_map(
+            return _shard_map(
                 lambda v: jax.lax.psum(v, "data"), mesh=mesh,
                 in_specs=jax.sharding.PartitionSpec("data"),
                 out_specs=jax.sharding.PartitionSpec())(x)

@@ -3,6 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # property tests are dev-extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core import projections as P
