@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (MatchingObjective, Maximizer, SolveConfig,
-                        precondition)
+                        StoppingCriteria, precondition)
 from .lp_common import bench_instance
 
 
@@ -121,4 +121,64 @@ def run(quick: bool = False):
                  "derived": {"dual": d5, "speedup": t0 / t5,
                              "speedup_vs_it3": t3 / t5,
                              "dual_drift_rel": abs(d5 - d0) / abs(d0)}})
+    return rows
+
+
+def run_tolerance(quick: bool = False):
+    """Wall-clock-to-tolerance — the paper's actual headline metric.
+
+    The ≥10x claim is made "under matched stopping criteria": both Ax
+    layouts run under ONE StoppingCriteria (same tolerances, same check
+    cadence) and each row reports the seconds and iterations it took to get
+    there, plus the stop reason.  The scatter row is wall-clock-capped: on
+    this CPU host it may exhaust the budget before reaching tolerance, and
+    `stop_reason="max_seconds"` records that honestly instead of a
+    fixed-iteration timing pretending both did equal work.  Sizes are scaled
+    down from the fixed-iteration rows so the converging row finishes in
+    minutes on one core."""
+    I = 2_000 if quick else 10_000
+    spec, lp_host = bench_instance(I)
+    lp = jax.tree.map(jnp.asarray, lp_host)
+    lp, _ = precondition(lp, row_norm=True)
+    cfg = SolveConfig(iterations=4000, gamma=0.01, max_step=1e-1,
+                      initial_step=1e-5)
+    crit = StoppingCriteria(tol_rel_dual=1e-6, tol_infeas_rel=1e-4,
+                            check_every=25,
+                            max_seconds=60.0 if quick else 300.0)
+    rows, secs = [], {}
+    for tag, ax_mode in [("scatter", "scatter"), ("aligned", "aligned")]:
+        obj = MatchingObjective(lp, proj_kind="boxcut", proj_iters=20,
+                                ax_mode=ax_mode)
+        mx = Maximizer(cfg)
+        # warm-up: compile the check_every-length chunk runner (same engine
+        # cache key as the timed run) so the row times iterations to
+        # tolerance, not each layout's XLA compile
+        warm = mx.maximize(obj, criteria=StoppingCriteria(
+            max_iterations=crit.check_every))
+        jax.block_until_ready(warm.lam)
+        t0 = time.perf_counter()
+        res = mx.maximize(obj, criteria=crit)
+        jax.block_until_ready(res.lam)
+        dt = time.perf_counter() - t0
+        secs[tag] = (dt, res)
+        rows.append({
+            "name": f"perf_lp/tol_{tag}",
+            "us_per_call": dt / max(res.iterations_run, 1) * 1e6,
+            "derived": {
+                "seconds_to_stop": dt,
+                "iterations_run": res.iterations_run,
+                "stop_reason": res.stop_reason.value,
+                "converged": res.converged,
+                "dual": float(res.stats.dual_obj[-1]),
+                "infeas": float(res.stats.infeas[-1]),
+                "checks": len(res.diagnostics),
+            }})
+    dt_sc, res_sc = secs["scatter"]
+    dt_al, res_al = secs["aligned"]
+    rows[-1]["derived"]["wallclock_speedup_vs_scatter"] = dt_sc / dt_al
+    if res_sc.converged and res_al.converged:
+        rows[-1]["derived"]["dual_drift_rel"] = (
+            abs(float(res_al.stats.dual_obj[-1])
+                - float(res_sc.stats.dual_obj[-1]))
+            / abs(float(res_sc.stats.dual_obj[-1])))
     return rows

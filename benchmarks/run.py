@@ -13,6 +13,9 @@ writes benchmarks/results/bench_results.json.
   roofline aggregated dry-run roofline terms               (§Roofline)
   perf_lp  solver §Perf hillclimb it0..it5 (it4/it5: constraint-aligned
            scatter-free Ax, guarded by dual_drift_rel in each row)
+  perf_lp_tol  wall-clock-to-tolerance under matched stopping criteria —
+           the paper's actual speedup metric (scatter vs aligned rows share
+           one StoppingCriteria; each reports seconds/iterations/stop_reason)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 """
@@ -94,6 +97,7 @@ def _register():
         "kernels": lambda q: _kernel_bench(q),
         "roofline": lambda q: roofline_report.run(q),
         "perf_lp": lambda q: perf_lp.run(q),
+        "perf_lp_tol": lambda q: perf_lp.run_tolerance(q),
     })
 
 

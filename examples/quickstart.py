@@ -3,15 +3,18 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Builds a synthetic Appendix-B instance, applies the §5.1 enhancements
-(Jacobi row normalization + γ continuation), solves with the AGD Maximizer,
-and verifies the KKT conditions of the recovered primal.
+(Jacobi row normalization + γ continuation), solves with the AGD Maximizer
+under tolerance-based stopping criteria (DESIGN.md §4 — the iteration count
+is a cap, not a schedule), and verifies the KKT conditions of the recovered
+primal.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (InstanceSpec, generate, precondition,
-                        MatchingObjective, Maximizer, SolveConfig)
+                        MatchingObjective, Maximizer, SolveConfig,
+                        StoppingCriteria)
 
 # 1. an LP instance (paper Appendix B generator)
 spec = InstanceSpec(num_sources=2000, num_destinations=100,
@@ -24,15 +27,22 @@ print(f"LP: {lp.num_sources} sources x {lp.num_destinations} destinations, "
 # 2. §5.1 enhancements: Jacobi row normalization (primal scaling optional)
 lp_pc, (row_scaling, _) = precondition(lp, row_norm=True)
 
-# 3. operator-centric solve: ObjectiveFunction + Maximizer
+# 3. operator-centric solve: ObjectiveFunction + Maximizer.  The solve is
+# tolerance-terminated: it runs in jitted chunks of `check_every` iterations
+# and stops at the first check where the dual objective has stabilized AND
+# the iterate is primal-feasible to tolerance — 1200 is only a cap.
 obj = MatchingObjective(lp_pc, proj_kind="boxcut")
 config = SolveConfig(iterations=1200, gamma=0.05,
                      gamma_init=0.8, gamma_decay_every=25,   # continuation
                      max_step=20.0, initial_step=1e-3)
-result = Maximizer(config).maximize(obj)
+criteria = StoppingCriteria(tol_rel_dual=1e-6, tol_infeas=1e-1,
+                            check_every=50)
+result = Maximizer(config).maximize(obj, criteria=criteria)
 
 d = np.asarray(result.stats.dual_obj)
 print(f"dual objective: {d[0]:.4f} -> {d[-1]:.4f}")
+print(f"stopped after {result.iterations_run}/{config.iterations} "
+      f"iterations ({result.stop_reason.value})")
 print(f"final infeasibility ||(Ax-b)+||: {float(result.stats.infeas[-1]):.2e}")
 print(f"final gamma: {float(result.stats.gamma[-1]):.4f}")
 

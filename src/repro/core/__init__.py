@@ -5,13 +5,15 @@ The paper's operator-centric model (§4) — three primitives, one contract each
   ObjectiveFunction.calculate(λ, γ)  -> (g, ∇g, aux)
   ProjectionMap.project(block, v)    -> projected v
 """
-from .types import (AxBucket, AxPlan, LPData, Slab, SolveConfig, SolveResult,
-                    SolveState, IterStats)
+from .types import (AxBucket, AxPlan, ConvergenceCheck, LPData, Slab,
+                    SolveConfig, SolveResult, SolveState, IterStats,
+                    StopReason, StoppingCriteria)
 from .projections import ProjectionMap, project, project_boxcut, project_box
 from .objectives import (MatchingObjective, GlobalCountObjective,
                          dual_value_and_grad, slab_xgvals, ObjectiveAux,
                          AX_MODES)
-from .maximizer import Maximizer, maximize, gamma_at, max_step_at
+from .maximizer import (Maximizer, SolveEngine, maximize, gamma_at,
+                        max_step_at)
 from .preconditioning import (row_normalize, primal_scale, precondition,
                               row_norms, undo_row_scaling,
                               gram_condition_number)
@@ -21,6 +23,7 @@ from .instance import (InstanceSpec, generate, pack_slabs, build_ax_plan,
 __all__ = [
     "AxBucket", "AxPlan",
     "LPData", "Slab", "SolveConfig", "SolveResult", "SolveState", "IterStats",
+    "StopReason", "StoppingCriteria", "ConvergenceCheck", "SolveEngine",
     "ProjectionMap", "project", "project_boxcut", "project_box",
     "MatchingObjective", "GlobalCountObjective", "dual_value_and_grad",
     "slab_xgvals", "ObjectiveAux", "AX_MODES",

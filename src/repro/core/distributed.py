@@ -28,8 +28,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import objectives
-from .maximizer import maximize
-from .types import AxPlan, LPData, Slab, SolveConfig, SolveResult
+from .maximizer import _infeas_scale, maximize
+from .types import (AxPlan, LPData, Slab, SolveConfig, SolveResult,
+                    StoppingCriteria)
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs):
@@ -237,12 +238,21 @@ def solve_distributed(
     algorithm: str = "agd",
     lam0: Optional[jax.Array] = None,
     ax_mode: str = "scatter",
+    criteria: Optional[StoppingCriteria] = None,
+    diagnostics_fn=None,
 ) -> SolveResult:
     """End-to-end distributed solve: place data, build objective, maximize.
 
     `source_axes` defaults to ALL mesh axes (the paper partitions sources
     over every GPU).  The AGD update itself runs replicated (or λ-sharded):
     identical on every device, so no broadcast step exists at all.
+
+    Routes through the same chunked SolveEngine as the single-device paths
+    (DESIGN.md §4): with `criteria` set, the host controller evaluates the
+    stopping rules at chunk boundaries, and the only data crossing the
+    host/device boundary per chunk are the per-iteration scalar stats —
+    λ and the rest of the solver state stay device-resident (sharded or
+    replicated) for the whole solve.
     """
     if source_axes is None:
         source_axes = tuple(mesh.axis_names)
@@ -256,4 +266,6 @@ def solve_distributed(
     lam_sharding = (NamedSharding(mesh, P(None, lambda_axis)) if lambda_axis
                     else NamedSharding(mesh, P()))
     lam0 = jax.device_put(lam0, lam_sharding)
-    return maximize(obj.calculate, lam0, config, algorithm)
+    return maximize(obj.calculate, lam0, config, algorithm,
+                    criteria=criteria, diagnostics_fn=diagnostics_fn,
+                    infeas_scale=_infeas_scale(obj, criteria))

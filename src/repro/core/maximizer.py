@@ -14,20 +14,29 @@ translated to JAX (paper Appendix B "Optimization algorithm"):
     `gamma_decay_rate` every `gamma_decay_every` iterations until it reaches
     the target γ; the step cap is scaled ∝ γ across transition points.
 
-The whole solve is one `lax.scan`, so it jit-compiles to a single XLA
-program; the update is *replicated* across shards in the distributed setting
+The solve loop is convergence-controlled (DESIGN.md §4): the hot path is an
+inner jitted `lax.scan` of `check_every` steps (one XLA program), wrapped by
+a host-side controller that evaluates the composable `StoppingCriteria`
+(relative dual change, primal infeasibility, gradient norm, iteration /
+wall-clock caps) at chunk boundaries and, with
+`SolveConfig.adaptive_continuation`, decays γ on stall instead of on the
+fixed schedule.  With no criteria set the engine runs ONE scan of the full
+iteration count — bit-identical to the legacy fixed-length behavior.  The
+update is *replicated* across shards in the distributed setting
 (mathematically identical to the paper's rank-0-update-then-broadcast, see
 DESIGN.md §2).
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .types import IterStats, SolveConfig, SolveResult, SolveState
+from .types import (ConvergenceCheck, IterStats, SolveConfig, SolveResult,
+                    SolveState, StopReason, StoppingCriteria)
 
 
 def gamma_at(config: SolveConfig, it: jax.Array) -> jax.Array:
@@ -63,8 +72,9 @@ def _lipschitz_update(state: SolveState, grad: jax.Array,
     return jnp.maximum(state.l_est * decay, obs)
 
 
-def agd_step(calculate: Callable, config: SolveConfig, state: SolveState, _):
-    gamma = gamma_at(config, state.it)
+def agd_step(calculate: Callable, config: SolveConfig, gamma_fn: Callable,
+             state: SolveState, _):
+    gamma = gamma_fn(state)
     cap = max_step_at(config, gamma)
     g, grad, aux = calculate(state.y, gamma)
 
@@ -93,9 +103,10 @@ def agd_step(calculate: Callable, config: SolveConfig, state: SolveState, _):
     return new_state, stats
 
 
-def pga_step(calculate: Callable, config: SolveConfig, state: SolveState, _):
+def pga_step(calculate: Callable, config: SolveConfig, gamma_fn: Callable,
+             state: SolveState, _):
     """Plain projected gradient ascent (no momentum) — ablation baseline."""
-    gamma = gamma_at(config, state.it)
+    gamma = gamma_fn(state)
     cap = max_step_at(config, gamma)
     g, grad, aux = calculate(state.y, gamma)
     l_est = _lipschitz_update(state, grad)
@@ -123,59 +134,220 @@ def initial_state(lam0: jax.Array, config: SolveConfig) -> SolveState:
                       it=jnp.asarray(0, jnp.int32))
 
 
-def _make_runner(calculate: Callable, config: SolveConfig,
-                 algorithm: str) -> Callable:
-    """Build the jitted solve loop (one lax.scan -> one XLA program)."""
-    step_fn = partial(_STEPS[algorithm], calculate, config)
+def _make_chunk_runner(calculate: Callable, config: SolveConfig,
+                       algorithm: str, length: int,
+                       gamma_override: bool) -> Callable:
+    """Jit one inner chunk: `length` steps as a single lax.scan.
 
-    @jax.jit
-    def run(lam0):
-        state0 = initial_state(lam0, config)
-        state, stats = jax.lax.scan(step_fn, state0, None,
-                                    length=config.iterations)
-        return state.lam, stats
+    `gamma_override=False`: γ follows the scheduled continuation
+    `gamma_at(config, it)` inside the scan (the iteration counter is carried
+    in the state, so chunking does not perturb the schedule).
+    `gamma_override=True`: γ is a traced scalar argument, constant within the
+    chunk — the host controller drives it (adaptive stall-decay).
+    """
+    if gamma_override:
+        @jax.jit
+        def run(state, gamma):
+            gamma = jnp.asarray(gamma, jnp.float32)
+            step_fn = partial(_STEPS[algorithm], calculate, config,
+                              lambda st: gamma)
+            return jax.lax.scan(step_fn, state, None, length=length)
+    else:
+        step_fn = partial(_STEPS[algorithm], calculate, config,
+                          lambda st: gamma_at(config, st.it))
 
+        @jax.jit
+        def run(state, gamma):
+            del gamma  # scheduled mode: γ comes from the carried counter
+            return jax.lax.scan(step_fn, state, None, length=length)
     return run
 
 
+class SolveEngine:
+    """The one convergence-controlled solve loop (DESIGN.md §4).
+
+    All entry points — the free `maximize()`, the `Maximizer` facade, and
+    `solve_distributed` — route through this engine.  It owns a cache of
+    jitted chunk runners keyed by (chunk length, γ mode), so a
+    tolerance-driven solve compiles exactly one `check_every`-step XLA
+    program (plus at most one shorter final-remainder chunk) and reuses it
+    across chunks and across repeat solves.
+
+    Host/device contract per chunk: the SolveState (λ, momentum, step
+    bookkeeping) stays on device for the whole solve; what crosses to the
+    host at a chunk boundary is the chunk's IterStats — per-iteration
+    *scalars* — and, in adaptive-continuation mode, one γ scalar goes the
+    other way.  λ is only fetched by the caller after the solve ends.
+    """
+
+    def __init__(self, calculate: Callable, config: SolveConfig,
+                 algorithm: str = "agd"):
+        self.calculate = calculate
+        self.config = config
+        self.algorithm = algorithm
+        self._runners = {}
+
+    def _runner(self, length: int, gamma_override: bool) -> Callable:
+        key = (length, gamma_override)
+        run = self._runners.get(key)
+        if run is None:
+            run = _make_chunk_runner(self.calculate, self.config,
+                                     self.algorithm, length, gamma_override)
+            self._runners[key] = run
+        return run
+
+    def solve(self, lam0: jax.Array,
+              criteria: Optional[StoppingCriteria] = None,
+              diagnostics_fn: Optional[Callable] = None,
+              infeas_scale: float = 1.0) -> SolveResult:
+        config = self.config
+        total = config.iterations
+        if criteria is not None and criteria.max_iterations is not None:
+            total = criteria.max_iterations
+        adaptive = (config.adaptive_continuation
+                    and config.gamma_init is not None
+                    and config.gamma_init > config.gamma)
+        chunked = (total > 0 and
+                   (adaptive
+                    or (criteria is not None and criteria.needs_checks)))
+        state = initial_state(lam0, config)
+        gamma_dev = jnp.asarray(config.gamma, jnp.float32)
+
+        if not chunked:
+            # Fixed-length path: ONE scan of the full count — bit-identical
+            # to the legacy engine, no host round-trips.
+            state, stats = self._runner(total, False)(state, gamma_dev)
+            return SolveResult(lam=state.lam, stats=stats,
+                               iterations_run=total, converged=False,
+                               stop_reason=StopReason.MAX_ITERATIONS)
+
+        criteria = criteria if criteria is not None else StoppingCriteria()
+        check = max(1, int(criteria.check_every))
+        gamma_now = float(config.gamma_init) if adaptive else config.gamma
+        t0 = time.perf_counter()
+        stats_chunks = []
+        diags = []
+        g_prev = None
+        it_done = 0
+        converged = False
+        stop_reason = StopReason.MAX_ITERATIONS
+        while it_done < total:
+            n = min(check, total - it_done)
+            run = self._runner(n, adaptive)
+            state, stats = run(state, jnp.asarray(gamma_now, jnp.float32))
+            it_done += n
+            stats_chunks.append(stats)
+
+            # device→host: the chunk's trailing scalars (this is the sync
+            # point that keeps the hot path a single XLA program per chunk)
+            g = float(stats.dual_obj[-1])
+            infeas = float(stats.infeas[-1])
+            grad_norm = float(stats.grad_norm[-1])
+            gamma_cur = float(stats.gamma[-1])
+            elapsed = time.perf_counter() - t0
+            if g_prev is None:
+                rel_dual = (abs(g - float(stats.dual_obj[0]))
+                            / max(1.0, abs(g)) if n > 1 else float("inf"))
+            else:
+                rel_dual = abs(g - g_prev) / max(1.0, abs(g))
+            g_prev = g
+
+            at_target = gamma_cur <= config.gamma * (1.0 + 1e-6)
+            stalled = rel_dual < config.gamma_stall_tol
+            if adaptive and not at_target and stalled:
+                gamma_now = max(gamma_now * config.gamma_decay_rate,
+                                config.gamma)
+            rec = ConvergenceCheck(it=it_done, dual_obj=g, rel_dual=rel_dual,
+                                   infeas=infeas, grad_norm=grad_norm,
+                                   gamma=gamma_cur, elapsed=elapsed,
+                                   stalled=stalled)
+            diags.append(rec)
+            if diagnostics_fn is not None:
+                diagnostics_fn(rec)
+
+            # tolerance checks only count once γ has reached its target —
+            # g and x*(λ) move with γ, so earlier "convergence" is spurious
+            if at_target and criteria.satisfied(rel_dual, infeas, grad_norm,
+                                                infeas_scale):
+                converged = True
+                stop_reason = StopReason.CONVERGED
+                break
+            if (criteria.max_seconds is not None
+                    and elapsed >= criteria.max_seconds):
+                stop_reason = StopReason.MAX_SECONDS
+                break
+
+        stats = (stats_chunks[0] if len(stats_chunks) == 1 else
+                 jax.tree.map(lambda *xs: jnp.concatenate(xs), *stats_chunks))
+        return SolveResult(lam=state.lam, stats=stats, iterations_run=it_done,
+                           converged=converged, stop_reason=stop_reason,
+                           diagnostics=tuple(diags))
+
+
+def _infeas_scale(obj, criteria: Optional[StoppingCriteria]) -> float:
+    """1 + ‖b‖₂ for the relative infeasibility rule, when obj exposes an LP."""
+    if criteria is None or criteria.tol_infeas_rel is None:
+        return 1.0
+    lp = getattr(obj, "lp", None)
+    if lp is None:
+        return 1.0
+    return 1.0 + float(jnp.linalg.norm(lp.b))
+
+
 def maximize(calculate: Callable, lam0: jax.Array, config: SolveConfig,
-             algorithm: str = "agd") -> SolveResult:
-    """Run `config.iterations` steps of dual ascent; fully jit-compiled."""
-    lam, stats = _make_runner(calculate, config, algorithm)(lam0)
-    return SolveResult(lam=lam, stats=stats)
+             algorithm: str = "agd",
+             criteria: Optional[StoppingCriteria] = None,
+             diagnostics_fn: Optional[Callable] = None,
+             infeas_scale: float = 1.0) -> SolveResult:
+    """Thin wrapper over SolveEngine.  With no `criteria` this runs
+    `config.iterations` steps as one jitted scan (the legacy fixed-length
+    behavior, bit-identical); with criteria it is tolerance-terminated."""
+    return SolveEngine(calculate, config, algorithm).solve(
+        lam0, criteria=criteria, diagnostics_fn=diagnostics_fn,
+        infeas_scale=infeas_scale)
 
 
 class Maximizer:
     """Paper §4 facade: constructed from algorithm settings, exposes the
     single method `maximize(obj, initial_value) -> Result`.
 
-    Caches the jitted solve loop for the most recent objective: the free
-    `maximize()` builds a fresh closure every call, which re-traces and
+    Caches the SolveEngine (and with it every jitted chunk runner) for the
+    most recent objective: building a fresh closure every call re-traces and
     re-compiles even for an identical objective — repeat solves (warm
     restarts, benchmark repeats) were paying full XLA compile each time.
     The cache is invalidated when the objective's attributes are
-    reassigned (it snapshots attribute identities), and holds a single
-    slot so a sequence of fresh objectives doesn't accumulate compiled
-    executables or pin their LP arrays.
+    reassigned: the snapshot holds the attribute values themselves and
+    compares by identity, so a recycled id can never alias a stale entry.
+    It holds a single slot so a sequence of fresh objectives doesn't
+    accumulate compiled executables (the snapshot pins nothing beyond what
+    the cached objective itself already references).
     """
 
-    def __init__(self, config: SolveConfig, algorithm: str = "agd"):
+    def __init__(self, config: SolveConfig, algorithm: str = "agd",
+                 criteria: Optional[StoppingCriteria] = None):
         self.config = config
         self.algorithm = algorithm
-        self._cache = None   # (obj, attr snapshot, jitted run)
+        self.criteria = criteria
+        self._cache = None   # (obj, attr snapshot, SolveEngine)
 
-    def _runner(self, obj):
-        snap = tuple(sorted(
-            (k, id(v)) for k, v in getattr(obj, "__dict__", {}).items()))
+    def _engine(self, obj) -> SolveEngine:
+        snap = tuple(sorted(getattr(obj, "__dict__", {}).items(),
+                            key=lambda kv: kv[0]))
         if (self._cache is not None and self._cache[0] is obj
-                and self._cache[1] == snap):
+                and len(self._cache[1]) == len(snap)
+                and all(k0 == k1 and v0 is v1 for (k0, v0), (k1, v1)
+                        in zip(self._cache[1], snap))):
             return self._cache[2]
-        run = _make_runner(obj.calculate, self.config, self.algorithm)
-        self._cache = (obj, snap, run)
-        return run
+        engine = SolveEngine(obj.calculate, self.config, self.algorithm)
+        self._cache = (obj, snap, engine)
+        return engine
 
-    def maximize(self, obj, initial_value: Optional[jax.Array] = None) -> SolveResult:
+    def maximize(self, obj, initial_value: Optional[jax.Array] = None,
+                 criteria: Optional[StoppingCriteria] = None,
+                 diagnostics_fn: Optional[Callable] = None) -> SolveResult:
         if initial_value is None:
             initial_value = jnp.zeros(obj.dual_shape, jnp.float32)
-        lam, stats = self._runner(obj)(initial_value)
-        return SolveResult(lam=lam, stats=stats)
+        criteria = self.criteria if criteria is None else criteria
+        return self._engine(obj).solve(
+            initial_value, criteria=criteria, diagnostics_fn=diagnostics_fn,
+            infeas_scale=_infeas_scale(obj, criteria))

@@ -166,8 +166,20 @@ class MatchingObjective:
                  sorted_scatter: bool = False,
                  ax_plan: Optional[AxPlan] = None):
         self.lp = lp
-        self.proj_kind = projection_map.kind if projection_map is not None else proj_kind
-        self.proj_iters = proj_iters
+        # A ProjectionMap carries a default kind, a per-bucket override table,
+        # and its own iteration count — honor all three (block id == slab
+        # index), not just `.kind`.
+        if projection_map is not None:
+            self.proj_kind = projection_map.kind
+            self.proj_iters = projection_map.iters
+            self._slab_proj = tuple(
+                (projection_map.kind_for(i), projection_map.iters_for(i))
+                for i in range(len(lp.slabs)))
+        else:
+            self.proj_kind = proj_kind
+            self.proj_iters = proj_iters
+            self._slab_proj = tuple(
+                (proj_kind, proj_iters) for _ in range(len(lp.slabs)))
         self.use_pallas = use_pallas
         self.ax_reducer = ax_reducer
         if ax_mode is None:
@@ -218,10 +230,9 @@ class MatchingObjective:
         c_x = jnp.zeros((), lam.dtype)
         x_sq = jnp.zeros((), lam.dtype)
         x_sum = jnp.zeros((), lam.dtype)
-        for slab in self.lp.slabs:
+        for slab, (kind, iters) in zip(self.lp.slabs, self._slab_proj):
             x, gvals, c_s, sq_s = slab_xgvals(
-                slab, lam, gamma, self.proj_kind, self.proj_iters,
-                self.use_pallas, shift)
+                slab, lam, gamma, kind, iters, self.use_pallas, shift)
             parts.append(gvals.reshape(-1, slab.m))
             c_x = c_x + c_s
             x_sq = x_sq + sq_s
@@ -242,9 +253,8 @@ class MatchingObjective:
     def primal(self, lam: jax.Array, gamma: jax.Array):
         """Recover the (padded) primal solution x*(λ) slab by slab."""
         return [
-            slab_xstar(s, lam, gamma, self.proj_kind, self.proj_iters,
-                       self.use_pallas)
-            for s in self.lp.slabs
+            slab_xstar(s, lam, gamma, kind, iters, self.use_pallas)
+            for s, (kind, iters) in zip(self.lp.slabs, self._slab_proj)
         ]
 
 

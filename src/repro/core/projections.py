@@ -208,6 +208,8 @@ class ProjectionMap:
     `project(block_id, v, slab)` applies the configured projection to the
     rows of one slab.  All slabs share a kind by default, but per-bucket
     overrides are allowed — this is the "purely local composition" hook.
+    An override value is either a kind string or a `(kind, iters)` pair when
+    the bucket also needs its own threshold-search iteration count.
     """
 
     def __init__(self, kind: str = "boxcut", overrides: Optional[dict] = None,
@@ -217,8 +219,14 @@ class ProjectionMap:
         self.iters = iters
 
     def kind_for(self, block_id: int) -> str:
-        return self.overrides.get(block_id, self.kind)
+        ov = self.overrides.get(block_id, self.kind)
+        return ov[0] if isinstance(ov, tuple) else ov
+
+    def iters_for(self, block_id: int) -> int:
+        ov = self.overrides.get(block_id)
+        return ov[1] if isinstance(ov, tuple) else self.iters
 
     def project(self, block_id: int, v: jax.Array, ub: jax.Array,
                 s: jax.Array, mask: jax.Array) -> jax.Array:
-        return project(self.kind_for(block_id), v, ub, s, mask, iters=self.iters)
+        return project(self.kind_for(block_id), v, ub, s, mask,
+                       iters=self.iters_for(block_id))

@@ -14,6 +14,7 @@ objects outside the jitted functions.
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -159,6 +160,13 @@ class SolveConfig:
     gamma_decay_rate: float = 0.5
     # scale the step cap proportionally with γ during continuation (§5.1)
     scale_step_with_gamma: bool = True
+    # adaptive continuation (DESIGN.md §4): instead of decaying γ every
+    # `gamma_decay_every` iterations, the chunked solve loop decays it when
+    # the dual objective stalls (relative change per convergence check below
+    # `gamma_stall_tol`).  Takes effect only in the chunked engine (i.e. when
+    # a StoppingCriteria is active or this flag forces chunking).
+    adaptive_continuation: bool = False
+    gamma_stall_tol: float = 1e-4
     # Jacobi row normalization (§5.1) — applied by `precondition()` before solve
     row_normalize: bool = False
     # primal (per-block) scaling (§5.1)
@@ -167,6 +175,93 @@ class SolveConfig:
     dtype: jnp.dtype = jnp.float32
     log_every: int = 1
     use_pallas: bool = False  # route x*(λ) through the Pallas kernels
+
+
+class StopReason(enum.Enum):
+    """Why the solve loop exited (DESIGN.md §4).
+
+    CONVERGED means every tolerance set on the StoppingCriteria held
+    simultaneously at a convergence check (with γ at its target) — the
+    "matched stopping criteria" of the paper's speedup claims.  The caps
+    (iteration / wall-clock) terminate without convergence.
+    """
+
+    CONVERGED = "converged"
+    MAX_ITERATIONS = "max_iterations"
+    MAX_SECONDS = "max_seconds"
+
+
+@dataclasses.dataclass(frozen=True)
+class StoppingCriteria:
+    """Composable stopping rules, evaluated host-side every `check_every`
+    iterations at a chunk boundary of the solve loop (DESIGN.md §4).
+
+    Tolerances compose conjunctively: the solve is CONVERGED when every
+    tolerance that is set holds at the same check.  Unset fields impose
+    nothing.  The rules are:
+
+      tol_rel_dual    |g_k − g_prev| <= tol · max(1, |g_k|) between
+                      consecutive checks (g = dual objective)
+      tol_infeas /    ‖(Ax−b)₊‖₂ <= tol_infeas + tol_infeas_rel · scale,
+      tol_infeas_rel  where scale = 1 + ‖b‖₂ (supplied by the caller;
+                      defaults to 1 when b is unavailable)
+      tol_grad_norm   ‖∇g(λ)‖₂ <= tol_grad_norm
+
+      max_iterations  overrides SolveConfig.iterations as the total cap
+      max_seconds     wall-clock cap, checked at chunk boundaries (includes
+                      the first chunk's XLA compile)
+    """
+
+    tol_rel_dual: Optional[float] = None
+    tol_infeas: Optional[float] = None
+    tol_infeas_rel: Optional[float] = None
+    tol_grad_norm: Optional[float] = None
+    max_iterations: Optional[int] = None
+    max_seconds: Optional[float] = None
+    check_every: int = 25
+
+    @property
+    def has_tolerances(self) -> bool:
+        return any(t is not None for t in (
+            self.tol_rel_dual, self.tol_infeas, self.tol_infeas_rel,
+            self.tol_grad_norm))
+
+    @property
+    def needs_checks(self) -> bool:
+        """True when the loop must pause at chunk boundaries at all."""
+        return self.has_tolerances or self.max_seconds is not None
+
+    def satisfied(self, rel_dual: float, infeas: float, grad_norm: float,
+                  infeas_scale: float = 1.0) -> bool:
+        """All set tolerances hold (NaNs never satisfy a tolerance)."""
+        if not self.has_tolerances:
+            return False
+        if self.tol_rel_dual is not None and not rel_dual <= self.tol_rel_dual:
+            return False
+        if self.tol_infeas is not None or self.tol_infeas_rel is not None:
+            thr = ((self.tol_infeas or 0.0)
+                   + (self.tol_infeas_rel or 0.0) * infeas_scale)
+            if not infeas <= thr:
+                return False
+        if (self.tol_grad_norm is not None
+                and not grad_norm <= self.tol_grad_norm):
+            return False
+        return True
+
+
+class ConvergenceCheck(NamedTuple):
+    """One record of the diagnostics stream: the host-side scalars read back
+    at a chunk boundary (DESIGN.md §4).  All fields are plain Python values —
+    this is exactly what crosses the device→host boundary per check."""
+
+    it: int             # iterations executed so far
+    dual_obj: float     # g(λ) at the last iteration of the chunk
+    rel_dual: float     # |Δg| / max(1, |g|) since the previous check
+    infeas: float       # ‖(Ax−b)₊‖₂
+    grad_norm: float    # ‖∇g‖₂
+    gamma: float        # γ used for the last iteration of the chunk
+    elapsed: float      # seconds since the solve started (compile included)
+    stalled: bool       # rel_dual < SolveConfig.gamma_stall_tol
 
 
 class SolveState(NamedTuple):
@@ -193,5 +288,14 @@ class IterStats(NamedTuple):
 
 
 class SolveResult(NamedTuple):
+    """Solve output.  `stats` is stacked over the iterations actually
+    executed (`iterations_run` entries — a tolerance-terminated solve returns
+    a shorter trajectory than the iteration cap).  `diagnostics` is the
+    per-check stream of host-side scalars (empty for fixed-length solves)."""
+
     lam: jax.Array
-    stats: IterStats          # stacked over iterations
+    stats: IterStats          # stacked over executed iterations
+    iterations_run: int = 0
+    converged: bool = False
+    stop_reason: Optional[StopReason] = None
+    diagnostics: Tuple[ConvergenceCheck, ...] = ()

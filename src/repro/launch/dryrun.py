@@ -161,7 +161,7 @@ def lower_lp(mesh, sources: int = 100_000, destinations: int = 10_000,
     from repro.core import InstanceSpec, SolveConfig
     from repro.core.types import LPData, Slab
     from repro.core.distributed import DistributedMatchingObjective
-    from repro.core.maximizer import agd_step, initial_state
+    from repro.core.maximizer import agd_step, gamma_at, initial_state
     from functools import partial
 
     t0 = time.time()
@@ -197,7 +197,9 @@ def lower_lp(mesh, sources: int = 100_000, destinations: int = 10_000,
     def one_iteration(lp_arrays, lam):
         obj2 = dataclasses.replace(obj, lp=lp_arrays)
         state = initial_state(lam, config)
-        new_state, stats = agd_step(obj2.calculate, config, state, None)
+        new_state, stats = agd_step(obj2.calculate, config,
+                                    lambda st: gamma_at(config, st.it),
+                                    state, None)
         return new_state.lam, stats.dual_obj
 
     lam_in = sds((m, destinations), f32, lam_spec)

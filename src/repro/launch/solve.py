@@ -14,7 +14,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (InstanceSpec, SolveConfig, generate, precondition)
+from repro.core import (InstanceSpec, SolveConfig, StoppingCriteria, generate,
+                        precondition)
 from repro.core.distributed import solve_distributed
 from repro.launch.mesh import make_mesh
 
@@ -24,13 +25,30 @@ def main():
     ap.add_argument("--sources", type=int, default=100_000)
     ap.add_argument("--destinations", type=int, default=1_000)
     ap.add_argument("--nnz-per-row", type=float, default=None)
-    ap.add_argument("--iterations", type=int, default=200)
+    ap.add_argument("--iterations", type=int, default=200,
+                    help="iteration cap (exact count when no tolerance is set)")
     ap.add_argument("--gamma", type=float, default=0.01)
     ap.add_argument("--continuation", action="store_true")
+    ap.add_argument("--adaptive-continuation", action="store_true",
+                    help="decay gamma on stall instead of on the fixed "
+                         "schedule (implies --continuation)")
     ap.add_argument("--no-precondition", action="store_true")
     ap.add_argument("--lambda-sharded", action="store_true")
     ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument("--seed", type=int, default=42)
+    # convergence-controlled termination (DESIGN.md §4); any of these flags
+    # switches the solve from fixed-length to tolerance-terminated
+    ap.add_argument("--tol-infeas", type=float, default=None,
+                    help="stop when ||(Ax-b)+|| <= TOL (absolute)")
+    ap.add_argument("--tol-rel-dual", type=float, default=None,
+                    help="stop when |dg|/max(1,|g|) <= TOL between checks")
+    ap.add_argument("--max-seconds", type=float, default=None,
+                    help="wall-clock cap, checked every --check-every iters")
+    ap.add_argument("--check-every", type=int, default=25,
+                    help="iterations per jitted chunk between host-side "
+                         "convergence checks")
+    ap.add_argument("--verbose-checks", action="store_true",
+                    help="print the diagnostics stream (one line per check)")
     args = ap.parse_args()
 
     spec = InstanceSpec(
@@ -43,22 +61,42 @@ def main():
           f"{time.perf_counter() - t0:.1f}s")
     if not args.no_precondition:
         lp, _ = precondition(lp, row_norm=True)
+    continuation = args.continuation or args.adaptive_continuation
     cfg = SolveConfig(
         iterations=args.iterations, gamma=args.gamma,
-        gamma_init=(16 * args.gamma if args.continuation else None),
+        gamma_init=(16 * args.gamma if continuation else None),
+        adaptive_continuation=args.adaptive_continuation,
         max_step=1e-1 if not args.no_precondition else 1e-3,
         initial_step=1e-5, use_pallas=args.use_pallas)
+    criteria = None
+    if (args.tol_infeas is not None or args.tol_rel_dual is not None
+            or args.max_seconds is not None or args.adaptive_continuation):
+        # adaptive continuation runs chunked even with no tolerances set —
+        # build the criteria so --check-every governs its check cadence
+        criteria = StoppingCriteria(
+            tol_infeas=args.tol_infeas, tol_rel_dual=args.tol_rel_dual,
+            max_seconds=args.max_seconds, check_every=args.check_every)
+
+    def on_check(rec):
+        if args.verbose_checks:
+            print(f"  it {rec.it:6d}  dual {rec.dual_obj:.6f}  "
+                  f"rel_dual {rec.rel_dual:.2e}  infeas {rec.infeas:.2e}  "
+                  f"gamma {rec.gamma:.4f}  {rec.elapsed:.1f}s")
+
     n = jax.device_count()
     mesh = make_mesh((n, 1), ("data", "model"))
     t0 = time.perf_counter()
     res = solve_distributed(lp, cfg, mesh,
                             lambda_axis="model" if args.lambda_sharded
-                            else None)
+                            else None,
+                            criteria=criteria, diagnostics_fn=on_check)
     jax.block_until_ready(res.lam)
     dt = time.perf_counter() - t0
     d = np.asarray(res.stats.dual_obj)
-    print(f"{cfg.iterations} iterations in {dt:.2f}s "
-          f"({dt / cfg.iterations * 1e3:.1f} ms/iter, compile included)")
+    reason = res.stop_reason.value if res.stop_reason else "?"
+    print(f"{res.iterations_run} iterations in {dt:.2f}s "
+          f"({dt / max(res.iterations_run, 1) * 1e3:.1f} ms/iter, compile "
+          f"included); stop reason: {reason}")
     print(f"dual {d[0]:.3f} -> {d[-1]:.3f}; "
           f"infeas {float(res.stats.infeas[-1]):.3e}; "
           f"gamma {float(res.stats.gamma[-1]):.4f}")

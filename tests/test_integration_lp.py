@@ -10,7 +10,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import (InstanceSpec, generate, precondition, primal_scale,
-                        MatchingObjective, Maximizer, SolveConfig)
+                        MatchingObjective, Maximizer, SolveConfig,
+                        StoppingCriteria)
 from repro.core.distributed import solve_distributed
 from repro.launch.mesh import make_mesh
 
@@ -58,10 +59,15 @@ class TestFullStack:
         lp_ps, _ = precondition(lp_ps, row_norm=True)
 
         def lin_obj(lp):
+            # tolerance-terminated: 3000 is the cap; the engine stops once
+            # the dual has stabilized at the target γ (the continuation gate
+            # keeps mid-continuation "convergence" from firing)
             cfg = SolveConfig(iterations=3000, gamma=0.005, gamma_init=0.8,
                               gamma_decay_every=25, max_step=50.0,
                               initial_step=1e-3)
-            res = Maximizer(cfg).maximize(MatchingObjective(lp))
+            crit = StoppingCriteria(tol_rel_dual=1e-7, check_every=100)
+            res = Maximizer(cfg).maximize(MatchingObjective(lp),
+                                          criteria=crit)
             return float(res.stats.primal_obj[-1])
 
         a, b = lin_obj(lp_pc), lin_obj(lp_ps)

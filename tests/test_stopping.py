@@ -1,0 +1,232 @@
+"""Convergence-controlled solve engine (DESIGN.md §4): chunked scan loop,
+matched stopping criteria, adaptive continuation, diagnostics stream.
+
+The contract under test:
+  * no criteria  -> ONE fixed-length scan, bit-identical to chunked execution
+  * tolerances   -> early stop at a check, same optimum as the full run
+  * caps         -> honest stop_reason without a convergence claim
+  * all three entry points (maximize / Maximizer / solve_distributed)
+    populate iterations_run + stop_reason
+"""
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (InstanceSpec, generate, precondition,
+                        MatchingObjective, Maximizer, SolveConfig,
+                        StopReason, StoppingCriteria, maximize)
+from repro.core.distributed import solve_distributed
+from repro.launch.mesh import make_mesh
+
+
+@pytest.fixture(scope="module")
+def lp():
+    spec = InstanceSpec(num_sources=30, num_destinations=8,
+                        avg_nnz_per_row=10, seed=3)
+    lp = jax.tree.map(jnp.asarray, generate(spec))
+    lp, _ = precondition(lp, row_norm=True)
+    return lp
+
+
+CFG = dict(gamma=0.1, max_step=10.0, initial_step=1e-3)
+
+
+class TestCriteria:
+    """StoppingCriteria.satisfied composes conjunctively over set rules."""
+
+    def test_no_tolerances_never_satisfied(self):
+        assert not StoppingCriteria().satisfied(0.0, 0.0, 0.0)
+        assert not StoppingCriteria(max_seconds=1.0).satisfied(0.0, 0.0, 0.0)
+
+    def test_conjunction_over_set_rules(self):
+        c = StoppingCriteria(tol_rel_dual=1e-6, tol_infeas=1e-4)
+        assert c.satisfied(1e-7, 5e-5, 1e9)       # grad rule unset: ignored
+        assert not c.satisfied(1e-5, 5e-5, 0.0)   # rel_dual fails
+        assert not c.satisfied(1e-7, 5e-4, 0.0)   # infeas fails
+
+    def test_infeas_absolute_plus_relative(self):
+        c = StoppingCriteria(tol_infeas=1e-4, tol_infeas_rel=1e-2)
+        # threshold = 1e-4 + 1e-2 * scale
+        assert c.satisfied(0.0, 0.05, 0.0, infeas_scale=10.0)
+        assert not c.satisfied(0.0, 0.2, 0.0, infeas_scale=10.0)
+
+    def test_nan_never_satisfies(self):
+        c = StoppingCriteria(tol_rel_dual=1e-6, tol_grad_norm=1e-6)
+        assert not c.satisfied(float("nan"), 0.0, 0.0)
+        assert not c.satisfied(0.0, 0.0, float("nan"))
+
+
+class TestChunkingIdentity:
+    def test_chunked_bitwise_identical_to_single_scan(self, lp):
+        """Chunking must not perturb the trajectory: a criteria object whose
+        tolerance can never fire forces the chunked path, and every iterate
+        and statistic must equal the legacy single-scan run bit-for-bit."""
+        cfg = SolveConfig(iterations=200, **CFG)
+        obj = MatchingObjective(lp)
+        fixed = Maximizer(cfg).maximize(obj)
+        chunked = Maximizer(cfg).maximize(
+            obj, criteria=StoppingCriteria(tol_grad_norm=0.0, check_every=7))
+        assert fixed.stop_reason == StopReason.MAX_ITERATIONS
+        assert chunked.stop_reason == StopReason.MAX_ITERATIONS
+        assert fixed.iterations_run == chunked.iterations_run == 200
+        np.testing.assert_array_equal(np.asarray(fixed.lam),
+                                      np.asarray(chunked.lam))
+        for a, b in zip(fixed.stats, chunked.stats):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_scheduled_continuation_survives_chunking(self, lp):
+        """γ(t) is driven by the carried iteration counter, so an arbitrary
+        chunk size must reproduce the exact every-25 decay schedule."""
+        cfg = SolveConfig(iterations=150, gamma=0.05, gamma_init=0.8,
+                          gamma_decay_every=25, max_step=20.0,
+                          initial_step=1e-3)
+        obj = MatchingObjective(lp)
+        fixed = Maximizer(cfg).maximize(obj)
+        chunked = Maximizer(cfg).maximize(
+            obj, criteria=StoppingCriteria(tol_grad_norm=0.0, check_every=13))
+        np.testing.assert_array_equal(np.asarray(fixed.stats.gamma),
+                                      np.asarray(chunked.stats.gamma))
+        np.testing.assert_array_equal(np.asarray(fixed.stats.dual_obj),
+                                      np.asarray(chunked.stats.dual_obj))
+
+
+class TestEarlyStop:
+    def test_stops_early_at_fixed_run_optimum(self, lp):
+        cfg = SolveConfig(iterations=3000, **CFG)
+        obj = MatchingObjective(lp)
+        fixed = Maximizer(cfg).maximize(obj)
+        crit = StoppingCriteria(tol_rel_dual=1e-7, tol_infeas=5e-5,
+                                check_every=100)
+        tol = Maximizer(cfg).maximize(obj, criteria=crit)
+        assert tol.converged and tol.stop_reason == StopReason.CONVERGED
+        assert 0 < tol.iterations_run < 3000
+        a = float(fixed.stats.dual_obj[-1])
+        b = float(tol.stats.dual_obj[-1])
+        assert abs(a - b) <= 1e-6 * max(1.0, abs(a))
+
+    def test_stats_trimmed_to_executed_iterations(self, lp):
+        cfg = SolveConfig(iterations=3000, **CFG)
+        crit = StoppingCriteria(tol_rel_dual=1e-7, tol_infeas=5e-5,
+                                check_every=100)
+        res = Maximizer(cfg).maximize(MatchingObjective(lp), criteria=crit)
+        for field in res.stats:
+            assert np.asarray(field).shape[0] == res.iterations_run
+
+    def test_diagnostics_stream(self, lp):
+        cfg = SolveConfig(iterations=3000, **CFG)
+        crit = StoppingCriteria(tol_rel_dual=1e-7, tol_infeas=5e-5,
+                                check_every=100)
+        seen = []
+        res = Maximizer(cfg).maximize(MatchingObjective(lp), criteria=crit,
+                                      diagnostics_fn=seen.append)
+        assert tuple(seen) == res.diagnostics
+        assert len(res.diagnostics) == math.ceil(res.iterations_run / 100)
+        assert res.diagnostics[-1].it == res.iterations_run
+        its = [r.it for r in res.diagnostics]
+        assert its == sorted(its)
+        last = res.diagnostics[-1]
+        assert last.infeas <= 5e-5 and last.rel_dual <= 1e-7
+
+    def test_max_seconds_cap(self, lp):
+        cfg = SolveConfig(iterations=5000, **CFG)
+        res = Maximizer(cfg).maximize(
+            MatchingObjective(lp),
+            criteria=StoppingCriteria(max_seconds=0.0, check_every=10))
+        assert res.stop_reason == StopReason.MAX_SECONDS
+        assert not res.converged
+        assert res.iterations_run == 10   # stopped at the first check
+
+    def test_max_iterations_override(self, lp):
+        cfg = SolveConfig(iterations=5000, **CFG)
+        res = Maximizer(cfg).maximize(
+            MatchingObjective(lp),
+            criteria=StoppingCriteria(max_iterations=123))
+        assert res.iterations_run == 123
+        assert res.stop_reason == StopReason.MAX_ITERATIONS
+        assert np.asarray(res.stats.dual_obj).shape[0] == 123
+
+
+class TestAllPathsShareEngine:
+    """maximize / Maximizer / solve_distributed all populate the new result
+    fields and stop at the same optimum under the same criteria."""
+
+    def test_free_maximize_fixed(self, lp):
+        cfg = SolveConfig(iterations=50, **CFG)
+        obj = MatchingObjective(lp)
+        res = maximize(obj.calculate, jnp.zeros(obj.dual_shape, jnp.float32),
+                       cfg)
+        assert res.iterations_run == 50
+        assert res.stop_reason == StopReason.MAX_ITERATIONS
+
+    def test_free_maximize_tolerance(self, lp):
+        cfg = SolveConfig(iterations=3000, **CFG)
+        obj = MatchingObjective(lp)
+        res = maximize(obj.calculate, jnp.zeros(obj.dual_shape, jnp.float32),
+                       cfg, criteria=StoppingCriteria(tol_rel_dual=1e-7,
+                                                      check_every=100))
+        assert res.converged and res.iterations_run < 3000
+
+    def test_distributed_tolerance(self, lp):
+        cfg = SolveConfig(iterations=3000, **CFG)
+        crit = StoppingCriteria(tol_rel_dual=1e-7, tol_infeas=5e-5,
+                                check_every=100)
+        ref = Maximizer(cfg).maximize(MatchingObjective(lp), criteria=crit)
+        mesh = make_mesh((1, 1), ("data", "model"))
+        res = solve_distributed(lp, cfg, mesh, source_axes=("data",),
+                                criteria=crit)
+        assert res.converged and res.stop_reason == StopReason.CONVERGED
+        assert res.iterations_run == ref.iterations_run
+        np.testing.assert_allclose(float(res.stats.dual_obj[-1]),
+                                   float(ref.stats.dual_obj[-1]), atol=1e-5)
+
+    def test_maximizer_caches_engine_across_solves(self, lp):
+        cfg = SolveConfig(iterations=100, **CFG)
+        obj = MatchingObjective(lp)
+        mx = Maximizer(cfg)
+        mx.maximize(obj, criteria=StoppingCriteria(tol_rel_dual=1e-7,
+                                                   check_every=25))
+        engine = mx._cache[2]
+        runners = dict(engine._runners)
+        mx.maximize(obj, criteria=StoppingCriteria(tol_rel_dual=1e-7,
+                                                   check_every=25))
+        assert mx._cache[2] is engine            # engine reused
+        for k, v in runners.items():             # jitted chunks reused
+            assert engine._runners[k] is v
+
+
+class TestAdaptiveContinuation:
+    def test_stall_decay_reaches_fixed_gamma_optimum(self, lp):
+        obj = MatchingObjective(lp)
+        fixed = SolveConfig(iterations=2500, gamma=0.05, max_step=20.0,
+                            initial_step=1e-3)
+        adapt = SolveConfig(iterations=2500, gamma=0.05, gamma_init=0.8,
+                            gamma_decay_rate=0.5, max_step=20.0,
+                            initial_step=1e-3, adaptive_continuation=True,
+                            gamma_stall_tol=1e-4)
+        crit = StoppingCriteria(tol_rel_dual=1e-7, tol_infeas=1e-4,
+                                check_every=25)
+        rf = Maximizer(fixed).maximize(obj, criteria=crit)
+        ra = Maximizer(adapt).maximize(obj, criteria=crit)
+        assert ra.converged
+        # γ actually walked down to its target before convergence was allowed
+        assert float(ra.stats.gamma[-1]) == pytest.approx(0.05, rel=1e-6)
+        assert float(ra.stats.gamma[0]) == pytest.approx(0.8, rel=1e-6)
+        vf, va = float(rf.stats.dual_obj[-1]), float(ra.stats.dual_obj[-1])
+        assert abs(vf - va) < 5e-3 * abs(vf)
+        # stall-driven decay needs no hand-tuned decay_every and converges
+        # in fewer iterations than the fixed-γ run
+        assert ra.iterations_run < rf.iterations_run
+
+    def test_adaptive_runs_chunked_even_without_tolerances(self, lp):
+        adapt = SolveConfig(iterations=300, gamma=0.05, gamma_init=0.8,
+                            gamma_decay_rate=0.5, max_step=20.0,
+                            initial_step=1e-3, adaptive_continuation=True)
+        res = Maximizer(adapt).maximize(MatchingObjective(lp))
+        assert res.iterations_run == 300
+        assert res.stop_reason == StopReason.MAX_ITERATIONS
+        assert len(res.diagnostics) > 0          # checks happened
+        gammas = np.asarray(res.stats.gamma)
+        assert gammas[0] > gammas[-1]            # γ decayed on stalls
