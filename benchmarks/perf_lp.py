@@ -33,6 +33,11 @@ unchanged).  Iterations:
 Each row reports: us/iter, speedup vs baseline, and |Δdual| of the converged
 objective vs baseline (dual_drift_rel must be ~0 for accepted changes —
 the it4/it5 guards in run.py's emitted JSON).
+
+`run_tolerance` additionally carries a formulation-subsystem row
+(`tol_multi_budget_aligned`): the multi_budget spec compiled through
+repro.formulations and solved to the same tolerances — the new subsystem
+stays on the perf trajectory from the day it lands.
 """
 from __future__ import annotations
 
@@ -181,4 +186,39 @@ def run_tolerance(quick: bool = False):
             abs(float(res_al.stats.dual_obj[-1])
                 - float(res_sc.stats.dual_obj[-1]))
             / abs(float(res_sc.stats.dual_obj[-1])))
+
+    # the formulation-subsystem row: multi_budget (capacity + global count
+    # + global value caps, DESIGN.md §5) compiled onto the same engine with
+    # the aligned layout — keeps the new subsystem on the perf trajectory.
+    # Stopping: the dual-stability rule at the same tolerance/cadence; the
+    # infeasibility rule is dropped for this row because its binding
+    # coupling rows carry a γ-regularization residual floor (reported in
+    # `infeas`) that no fixed tol_infeas_rel can undercut across instances.
+    from repro import formulations
+    crit_mb = StoppingCriteria(tol_rel_dual=crit.tol_rel_dual,
+                               check_every=crit.check_every,
+                               max_seconds=crit.max_seconds)
+    obj = formulations.make_objective("multi_budget", lp_host,
+                                      ax_mode="aligned", row_norm=True)
+    mx = Maximizer(cfg)
+    warm = mx.maximize(obj, criteria=StoppingCriteria(
+        max_iterations=crit.check_every))
+    jax.block_until_ready(warm.lam)
+    t0 = time.perf_counter()
+    res = mx.maximize(obj, criteria=crit_mb)
+    jax.block_until_ready(res.lam)
+    dt = time.perf_counter() - t0
+    rows.append({
+        "name": "perf_lp/tol_multi_budget_aligned",
+        "us_per_call": dt / max(res.iterations_run, 1) * 1e6,
+        "derived": {
+            "seconds_to_stop": dt,
+            "iterations_run": res.iterations_run,
+            "stop_reason": res.stop_reason.value,
+            "converged": res.converged,
+            "dual": float(res.stats.dual_obj[-1]),
+            "infeas": float(res.stats.infeas[-1]),
+            "checks": len(res.diagnostics),
+            "dual_rows": int(obj.dual_shape[0]),
+        }})
     return rows

@@ -1,7 +1,9 @@
 """Benchmark harness — one entry per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived is compact JSON) and
-writes benchmarks/results/bench_results.json.
+merges them into benchmarks/results/bench_results.json keyed by row name
+(so ``--only``/``--quick`` runs update their own rows without wiping the
+rest of the artifact; ``--fresh`` replaces the file wholesale).
 
   table2   per-iteration time vs prior-CPU baseline + shard scaling (Table 2)
   fig12    implementation parity (<1% in 100 iters)        (Figures 1-2)
@@ -101,10 +103,36 @@ def _register():
     })
 
 
+def _merge_results(out_path: str, rows, fresh: bool):
+    """Merge new rows into the artifact keyed by row name.
+
+    A partial run (--only, --quick) updates its own rows in place and
+    appends genuinely new ones, instead of silently discarding every other
+    suite's results (the old wholesale-overwrite trap).  `fresh=True`
+    restores the replace behavior.
+    """
+    if not fresh and os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                old = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            old = []
+        new_by_name = {r["name"]: r for r in rows}
+        merged = [new_by_name.pop(r.get("name"), r) for r in old]
+        merged.extend(r for r in rows if r["name"] in new_by_name)
+        rows = merged
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--fresh", action="store_true",
+                    help="replace bench_results.json wholesale instead of "
+                         "merging this run's rows into it")
     args = ap.parse_args()
     _register()
     suites = {args.only: SUITES[args.only]} if args.only else SUITES
@@ -123,9 +151,7 @@ def main() -> None:
         all_rows.extend(rows)
     out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                        "results", "bench_results.json")
-    os.makedirs(os.path.dirname(out), exist_ok=True)
-    with open(out, "w") as f:
-        json.dump(all_rows, f, indent=1, default=str)
+    _merge_results(out, all_rows, args.fresh)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """Checkpointing: atomic step dirs, keep-last-k, auto-resume, elastic reshard.
 
-Fault-tolerance contract (DESIGN.md §6):
+Fault-tolerance contract (DESIGN.md §7):
   * atomic commit — state is written to  step_<n>.tmp/  and renamed; a crash
     mid-write never corrupts the latest checkpoint;
   * auto-resume  — restore_latest() scans for the newest committed step;

@@ -16,7 +16,7 @@ from .maximizer import (Maximizer, SolveEngine, maximize, gamma_at,
                         max_step_at)
 from .preconditioning import (row_normalize, primal_scale, precondition,
                               row_norms, undo_row_scaling,
-                              gram_condition_number)
+                              undo_primal_scaling, gram_condition_number)
 from .instance import (InstanceSpec, generate, pack_slabs, build_ax_plan,
                        build_sharded_ax_plan)
 
@@ -29,7 +29,7 @@ __all__ = [
     "slab_xgvals", "ObjectiveAux", "AX_MODES",
     "Maximizer", "maximize", "gamma_at", "max_step_at",
     "row_normalize", "primal_scale", "precondition", "row_norms",
-    "undo_row_scaling", "gram_condition_number",
+    "undo_row_scaling", "undo_primal_scaling", "gram_condition_number",
     "InstanceSpec", "generate", "pack_slabs", "build_ax_plan",
     "build_sharded_ax_plan",
 ]

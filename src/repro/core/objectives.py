@@ -25,6 +25,7 @@ Step 4 is the only non-local stage, and `ax_mode` selects how it runs
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import NamedTuple, Optional, Tuple
 
@@ -63,11 +64,14 @@ def slab_xgvals(slab: Slab, lam: jax.Array, gamma: jax.Array,
                 use_pallas: bool = False, shift=None):
     """Fused per-slab forward pass: (x*, gvals, cᵀx, ‖x‖²).
 
-    `shift` is a scalar added uniformly inside u — the global count row of
-    GlobalCountObjective (its A-row is all-ones on real edges), folded into
-    c so the jnp and Pallas paths share one implementation.  With
-    `use_pallas` the fused dual_grad kernel's gvals/c_x/x_sq outputs are
-    consumed directly instead of being discarded and recomputed outside.
+    `shift` is the contribution of coupling (non-destination-keyed) dual
+    rows to u, folded into c so the jnp and Pallas paths share one
+    implementation.  A scalar shift is the uniform all-ones row of
+    GlobalCountObjective; an (n, w) array shift carries per-edge-weighted
+    global rows (formulations subsystem, DESIGN.md §5) — zero on padding by
+    construction.  With `use_pallas` the fused dual_grad kernel's
+    gvals/c_x/x_sq outputs are consumed directly instead of being discarded
+    and recomputed outside.
     """
     if use_pallas:
         from repro.kernels import ops as kops
@@ -76,8 +80,12 @@ def slab_xgvals(slab: Slab, lam: jax.Array, gamma: jax.Array,
         x, gvals, c_x, x_sq = kops.dual_grad_full(
             kslab, lam, gamma, proj_kind, proj_iters)
         if shift is not None:
-            # kernel saw c+μ, so its cᵀx includes μ·Σx (x is 0 on padding)
-            c_x = c_x - shift * jnp.sum(x)
+            # kernel saw c+μ, so its cᵀx includes the shift term (x is 0 on
+            # padding); subtract it back out
+            if jnp.ndim(shift):
+                c_x = c_x - jnp.vdot(shift, x)
+            else:
+                c_x = c_x - shift * jnp.sum(x)
         return x, gvals, c_x, x_sq
     lam_e = lam[:, slab.dest_idx]
     atl = jnp.einsum("nwm,mnw->nw", slab.a_vals, lam_e)
@@ -158,6 +166,11 @@ class MatchingObjective:
     destination-major `AxPlan` gather-reduce, scatter-free).  The
     deprecated `sorted_scatter=True` flag is an alias for
     `ax_mode="sorted"`.
+
+    Re-registered as the declarative formulation "matching"
+    (repro.formulations, DESIGN.md §5): the compiled ComposedObjective is
+    operation-for-operation this class, and new formulations compose this
+    sweep rather than subclassing it.
     """
 
     def __init__(self, lp: LPData, projection_map=None, proj_kind: str = "boxcut",
@@ -182,6 +195,10 @@ class MatchingObjective:
                 (proj_kind, proj_iters) for _ in range(len(lp.slabs)))
         self.use_pallas = use_pallas
         self.ax_reducer = ax_reducer
+        if sorted_scatter:
+            warnings.warn(
+                "MatchingObjective(sorted_scatter=True) is deprecated; use "
+                "ax_mode='sorted' instead", DeprecationWarning, stacklevel=2)
         if ax_mode is None:
             ax_mode = "sorted" if sorted_scatter else "scatter"
         if ax_mode not in AX_MODES:
@@ -269,6 +286,10 @@ class GlobalCountObjective(MatchingObjective):
     across the code base' in Scala DuaLip — and, because it rides the shared
     `_forward` sweep, it inherits every `ax_mode` and the Pallas path for
     free.
+
+    Re-registered as the declarative formulation "global_count"
+    (repro.formulations, DESIGN.md §5), which generalizes the single
+    all-ones row to any number of weighted global budget rows.
     """
 
     def __init__(self, lp: LPData, count: float, **kw):

@@ -96,6 +96,14 @@ def primal_scale(lp: LPData, scaling: PrimalScaling = None) -> Tuple[LPData, Pri
     return LPData(slabs=tuple(slabs), b=lp.b), scaling
 
 
+def undo_primal_scaling(xs, scaling: PrimalScaling):
+    """Map a per-slab primal solution z of the scaled problem back: x = z/v.
+
+    `xs` is the list returned by `ObjectiveFunction.primal` on the scaled
+    problem (one (n, w) array per slab)."""
+    return [z / v[:, None] for z, v in zip(xs, scaling.v)]
+
+
 def precondition(lp: LPData, row_norm: bool = True, primal: bool = False):
     """Convenience: apply the §5.1 transforms; returns (lp', undo_info)."""
     row_scaling = None

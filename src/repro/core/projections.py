@@ -148,8 +148,13 @@ def project(
         big = jnp.asarray(jnp.finfo(v.dtype).max / 4, v.dtype)
         return project_boxcut(v, big, s, mask, iters=iters)
     if kind == "simplex_eq":
-        big = jnp.asarray(jnp.finfo(v.dtype).max / 4, v.dtype)
-        return project_boxcut(v, big, s, mask, iters=iters, equality=True)
+        # on {x >= 0, Σx = s} every coordinate is bounded by s, so s itself
+        # is an exact box bound — unlike a pseudo-infinite ub it keeps the
+        # equality bracket [min(v - ub) - 1, max(v)] at data scale, which the
+        # fixed-sweep bisection can actually resolve (a finfo.max/4 bound
+        # leaves τ with ~1e19 error after 60 halvings and overflows ‖x‖²)
+        ub_eq = jnp.broadcast_to(jnp.asarray(s, v.dtype)[..., None], v.shape)
+        return project_boxcut(v, ub_eq, s, mask, iters=iters, equality=True)
     if kind == "boxcut":
         return project_boxcut(v, ub, s, mask, iters=iters)
     if kind == "boxcut_newton":

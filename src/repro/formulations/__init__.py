@@ -1,0 +1,35 @@
+"""Operator-centric formulation subsystem (DESIGN.md §5).
+
+The specification half of the paper's §2 decoupling claim: declarative
+`Formulation` specs (objective + blockwise constraint set + constraint
+families) are compiled onto the existing optimization engine — slab
+packing, AxPlan, ProjectionMap, SolveEngine — so new LP formulations are
+local modules that reuse one solve loop.
+
+    from repro.formulations import make_objective
+    obj = make_objective("multi_budget", lp, ax_mode="aligned")
+    res = Maximizer(cfg).maximize(obj, criteria=crit)
+
+Built-ins: `matching`, `global_count` (the legacy classes re-registered),
+`multi_budget` (capacity + simultaneous global count/value caps),
+`assignment_eq` (simplex-equality full assignment).  Register your own
+with `@register(name)` — see formulations/multi_budget.py for the shape.
+"""
+from .spec import (BlockConstraint, DestCapacityFamily, Formulation,
+                   GlobalBudgetFamily, WEIGHT_KINDS)
+from .registry import build, get, make_objective, names, register
+from .compiler import ComposedObjective, compile_formulation
+
+# importing a builtin module registers it (side-effect registration is the
+# plug-in convention: a new formulation module only needs an import here —
+# or in user code — to become reachable by name)
+from . import matching as _matching            # noqa: F401  (matching, global_count)
+from . import multi_budget as _multi_budget    # noqa: F401
+from . import assignment as _assignment        # noqa: F401
+
+__all__ = [
+    "BlockConstraint", "DestCapacityFamily", "Formulation",
+    "GlobalBudgetFamily", "WEIGHT_KINDS",
+    "build", "get", "make_objective", "names", "register",
+    "ComposedObjective", "compile_formulation",
+]

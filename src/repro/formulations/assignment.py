@@ -1,0 +1,81 @@
+"""assignment_eq — simplex-EQUALITY per-source assignment (DuaLip's
+matching schema with required full assignment).
+
+Every source must allocate its entire budget:  Σ_j x_ij = s_i  (versus the
+default matching formulation's Σ_j x_ij <= s_i), with destinations
+capacitated by the usual A x <= b dual rows.  This is the classic
+assignment/delivery shape — each request IS served somewhere, the solver
+only chooses where — and it exercises a different blockwise projection
+(`simplex_eq`, the equality boxcut of core.projections) through the same
+compiled pipeline: the family list is identical to `matching`, only the
+BlockConstraint and the rhs change.  No engine code knows this formulation
+exists.
+
+Two practicalities the spec encodes:
+
+  * **Feasible capacities.**  The equality forces the total allocation
+    mass Σ_i s_i onto the destinations no matter what, while the
+    Appendix-B rhs is calibrated for the <= formulation (≈ half the greedy
+    load) — a bare kind-swap leaves the LP primal-infeasible and the dual
+    unbounded (a fixed multiplier does not fix it either: on test
+    instances the minimum feasible uniform boost exceeds 50x).  The
+    builder instead derives capacities from the **even-spread load**: the
+    assignment x_ij = s_i/deg_i is always block-feasible, so
+    b' = max(b, headroom · even_spread_load) is feasible *by
+    construction*, while `headroom` close to 1 keeps the contested
+    destinations binding (the value-maximizing solution concentrates mass
+    far from even-spread).
+  * the equality projection has no Pallas kernel (the fused dual_grad
+    kernel covers boxcut/simplex/box); the compiler rejects
+    use_pallas=True for this block kind, and the jnp path — including
+    every ax_mode — is the supported one.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import LPData
+
+from .registry import register
+from .spec import BlockConstraint, DestCapacityFamily, Formulation
+
+
+def even_spread_load(lp: LPData) -> np.ndarray:
+    """(m, J) per-destination load of the even-spread assignment
+    x_ij = s_i / deg_i — a certificate of feasibility for any rhs >= it."""
+    m, J = lp.b.shape
+    load = np.zeros((m, J))
+    for slab in lp.slabs:
+        a = np.asarray(slab.a_vals, dtype=np.float64)        # (n, w, m)
+        dest = np.asarray(slab.dest_idx).reshape(-1)
+        mk = np.asarray(slab.mask).astype(bool)
+        deg = np.maximum(mk.sum(axis=-1), 1)
+        per_edge = (np.asarray(slab.s, dtype=np.float64) / deg)[:, None] * mk
+        for k in range(m):
+            np.add.at(load[k], dest, (a[..., k] * per_edge).reshape(-1))
+    return load
+
+
+@register("assignment_eq")
+def assignment_eq(lp: LPData, *, headroom: float = 1.25,
+                  proj_iters: int = 60) -> Formulation:
+    """Full-assignment matching: Σ_j x_ij = s_i blocks against capacities
+    b' = max(b, headroom · even_spread_load) (module docstring).
+
+    `proj_iters` defaults higher than the inequality formulations: the
+    equality threshold τ may be negative and its bisection bracket is
+    wider (core.projections.project_boxcut equality=True), so a few more
+    sweeps buy back the same τ precision.
+    """
+    if headroom < 1.0:
+        raise ValueError(
+            f"headroom must be >= 1 (feasibility certificate), got "
+            f"{headroom!r}")
+    rhs = np.maximum(np.asarray(lp.b, dtype=np.float64),
+                     headroom * even_spread_load(lp))
+    return Formulation(
+        name="assignment_eq",
+        families=(DestCapacityFamily(rhs=rhs.astype(np.float32)),),
+        block=BlockConstraint(kind="simplex_eq", iters=proj_iters),
+        description="per-source FULL assignment (Σ_j x_ij = s_i); "
+                    "capacities floored at headroom x even-spread load")

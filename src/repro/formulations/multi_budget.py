@@ -1,0 +1,73 @@
+"""multi_budget — per-destination capacity AND multiple global budget rows
+active simultaneously.
+
+The scenario (ad-delivery flavored): destinations are capacitated resources
+(the usual A x <= b rows), while the campaign as a whole also carries
+
+  * a global *count* cap      Σ_ij x_ij        <= count_cap   (impressions)
+  * a global *value* cap      Σ_ij value_ij·x_ij <= value_cap (spend, with
+    the edge's objective value doubling as its unit spend)
+
+Before this subsystem, that combination was impossible to express:
+`MatchingObjective` has no global rows and `GlobalCountObjective`
+hard-codes exactly one all-ones row.  Here it is a declarative spec —
+DestCapacityFamily + two GlobalBudgetFamily rows — and the compiler lowers
+both coupling rows through the weighted-shift hook of the shared slab
+sweep, so the formulation inherits every ax_mode, the Pallas path, and the
+unchanged SolveEngine.
+
+Default caps are derived from the instance so the rows genuinely bind:
+the count cap is a fraction of the total per-source simplex budget
+Σ_i s_i (the most mass any feasible x can carry), and the value cap is a
+fraction of the greedy value upper bound Σ_i s_i · max_j value_ij.
+x = 0 is always feasible, so the dual stays well-posed for any caps >= 0.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import LPData
+
+from .registry import register
+from .spec import (BlockConstraint, DestCapacityFamily, Formulation,
+                   GlobalBudgetFamily)
+
+
+def _budget_defaults(lp: LPData) -> tuple:
+    """(Σ_i s_i, Σ_i s_i · max_j value_ij) from the packed slabs."""
+    total_s = 0.0
+    value_ub = 0.0
+    for slab in lp.slabs:
+        s = np.asarray(slab.s, dtype=np.float64)
+        total_s += float(s.sum())
+        # c = −value on real edges, 0 on padding: max(−c) is the best value
+        vmax = np.maximum(-np.asarray(slab.c_vals, dtype=np.float64),
+                          0.0).max(axis=-1)
+        value_ub += float((s * vmax).sum())
+    return total_s, value_ub
+
+
+@register("multi_budget")
+def multi_budget(lp: LPData, *, count_cap: float = None,
+                 value_cap: float = None, count_frac: float = 0.4,
+                 value_frac: float = 0.4, proj_kind: str = "boxcut",
+                 proj_iters: int = 40) -> Formulation:
+    """Matching + simultaneous global count and value caps (module doc)."""
+    if count_cap is None or value_cap is None:
+        total_s, value_ub = _budget_defaults(lp)
+        if count_cap is None:
+            count_cap = count_frac * total_s
+        if value_cap is None:
+            value_cap = value_frac * value_ub
+    return Formulation(
+        name="multi_budget",
+        families=(
+            DestCapacityFamily(),
+            GlobalBudgetFamily(limit=float(count_cap), weight="count",
+                               label="count_cap"),
+            GlobalBudgetFamily(limit=float(value_cap), weight="value",
+                               label="value_cap"),
+        ),
+        block=BlockConstraint(kind=proj_kind, iters=proj_iters),
+        description="per-destination capacity + global count cap + global "
+                    "value (spend) cap, all active simultaneously")

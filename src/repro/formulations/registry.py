@@ -1,0 +1,55 @@
+"""Formulation registry — name -> builder (DESIGN.md §5).
+
+A builder is a callable `(lp: LPData, **params) -> Formulation`: it
+inspects the instance (to derive default budgets, pick projections) and
+returns the declarative spec.  Registration is how a formulation becomes
+reachable from `launch/solve.py --formulation`, the benchmarks, and the
+examples tour — adding one is a local module ending in `@register(name)`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from .spec import Formulation
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register(name: str) -> Callable:
+    """Decorator: register a formulation builder under `name`."""
+
+    def deco(builder: Callable) -> Callable:
+        if name in _REGISTRY:
+            raise ValueError(f"formulation {name!r} already registered")
+        _REGISTRY[name] = builder
+        return builder
+
+    return deco
+
+
+def get(name: str) -> Callable:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown formulation {name!r}; registered: {names()}") from None
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def build(name: str, lp, **params) -> Formulation:
+    """Build the named formulation's spec for this instance."""
+    form = get(name)(lp, **params)
+    form.validate(lp.m)
+    return form
+
+
+def make_objective(name: str, lp, params: dict = None, **runtime):
+    """One-call convenience: build the spec, then compile it onto the
+    engine.  `params` go to the builder; `runtime` kwargs (ax_mode,
+    use_pallas, row_norm, ...) go to `compile_formulation`."""
+    from .compiler import compile_formulation
+    return compile_formulation(build(name, lp, **(params or {})), lp,
+                               **runtime)

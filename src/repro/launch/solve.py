@@ -1,9 +1,14 @@
 """LP solve launcher: `python -m repro.launch.solve [--sources N ...]`.
 
 The production entry point for the paper's workload: generate (or load) a
-matching LP, apply the §5.1 enhancements, and run distributed dual ascent on
-the local mesh.  `--lambda-sharded` enables the beyond-paper λ-sharding for
-very large destination counts.
+matching LP, apply the §5.1 enhancements, and run dual ascent.
+`--formulation` selects any registered formulation (DESIGN.md §5):
+`matching` (default) runs the distributed path on the local mesh;
+other formulations compile through `repro.formulations` onto the same
+SolveEngine.  `--lambda-sharded` enables the beyond-paper λ-sharding for
+very large destination counts.  `--save-duals`/`--warm-start` dump/load λ
+as .npz for the repeated-solve workflow (re-solve after an rhs/budget
+nudge starts from the previous optimum and stops in far fewer iterations).
 """
 from __future__ import annotations
 
@@ -14,10 +19,27 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (InstanceSpec, SolveConfig, StoppingCriteria, generate,
-                        precondition)
+from repro.core import (InstanceSpec, Maximizer, SolveConfig,
+                        StoppingCriteria, generate, precondition)
 from repro.core.distributed import solve_distributed
 from repro.launch.mesh import make_mesh
+from repro import formulations
+
+
+def save_duals(path: str, lam: jax.Array) -> None:
+    """Dump a dual solution to .npz (key 'lam')."""
+    np.savez(path, lam=np.asarray(lam))
+
+
+def load_duals(path: str, expected_shape=None) -> jax.Array:
+    """Load a dual vector saved by `save_duals`, checking the shape."""
+    lam = np.load(path)["lam"]
+    if expected_shape is not None and tuple(lam.shape) != tuple(expected_shape):
+        raise ValueError(
+            f"warm-start duals at {path} have shape {lam.shape}, but this "
+            f"solve needs {tuple(expected_shape)} (different instance or "
+            f"formulation?)")
+    return jnp.asarray(lam)
 
 
 def main():
@@ -25,6 +47,15 @@ def main():
     ap.add_argument("--sources", type=int, default=100_000)
     ap.add_argument("--destinations", type=int, default=1_000)
     ap.add_argument("--nnz-per-row", type=float, default=None)
+    ap.add_argument("--formulation", default="matching",
+                    choices=formulations.names(),
+                    help="registered LP formulation (DESIGN.md §5); "
+                         "'matching' uses the distributed path, others "
+                         "compile onto the local SolveEngine")
+    ap.add_argument("--ax-mode", default=None,
+                    choices=["scatter", "sorted", "aligned"],
+                    help="Ax reduction layout for compiled formulations "
+                         "(default: aligned)")
     ap.add_argument("--iterations", type=int, default=200,
                     help="iteration cap (exact count when no tolerance is set)")
     ap.add_argument("--gamma", type=float, default=0.01)
@@ -36,6 +67,13 @@ def main():
     ap.add_argument("--lambda-sharded", action="store_true")
     ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument("--seed", type=int, default=42)
+    # repeated-solve workflow: dump/load the dual vector
+    ap.add_argument("--save-duals", default=None, metavar="PATH",
+                    help="write the final λ to PATH (.npz) after the solve")
+    ap.add_argument("--warm-start", default=None, metavar="PATH",
+                    help="initialize λ from a previous --save-duals dump "
+                         "(omit --continuation: re-running the γ schedule "
+                         "from gamma_init would forfeit the head start)")
     # convergence-controlled termination (DESIGN.md §4); any of these flags
     # switches the solve from fixed-length to tolerance-terminated
     ap.add_argument("--tol-infeas", type=float, default=None,
@@ -59,8 +97,6 @@ def main():
     lp = jax.tree.map(jnp.asarray, generate(spec))
     print(f"generated {args.sources}x{args.destinations} in "
           f"{time.perf_counter() - t0:.1f}s")
-    if not args.no_precondition:
-        lp, _ = precondition(lp, row_norm=True)
     continuation = args.continuation or args.adaptive_continuation
     cfg = SolveConfig(
         iterations=args.iterations, gamma=args.gamma,
@@ -83,13 +119,43 @@ def main():
                   f"rel_dual {rec.rel_dual:.2e}  infeas {rec.infeas:.2e}  "
                   f"gamma {rec.gamma:.4f}  {rec.elapsed:.1f}s")
 
-    n = jax.device_count()
-    mesh = make_mesh((n, 1), ("data", "model"))
+    if args.lambda_sharded and args.formulation != "matching":
+        ap.error("--lambda-sharded is only supported with "
+                 "--formulation matching (composed formulations solve on "
+                 "a single replicated λ)")
+    if args.warm_start and continuation:
+        print("WARNING: --warm-start with --continuation re-runs the γ "
+              "schedule from gamma_init and will march the loaded λ away "
+              "from its optimum, forfeiting the head start")
+
     t0 = time.perf_counter()
-    res = solve_distributed(lp, cfg, mesh,
-                            lambda_axis="model" if args.lambda_sharded
-                            else None,
-                            criteria=criteria, diagnostics_fn=on_check)
+    if args.formulation == "matching":
+        if not args.no_precondition:
+            lp, _ = precondition(lp, row_norm=True)
+        lam0 = None
+        if args.warm_start:
+            lam0 = load_duals(args.warm_start,
+                              (lp.m, lp.num_destinations))
+        n = jax.device_count()
+        mesh = make_mesh((n, 1), ("data", "model"))
+        res = solve_distributed(lp, cfg, mesh,
+                                lambda_axis="model" if args.lambda_sharded
+                                else None, lam0=lam0,
+                                criteria=criteria, diagnostics_fn=on_check)
+    else:
+        obj = formulations.make_objective(
+            args.formulation, lp,
+            ax_mode=args.ax_mode or "aligned",
+            use_pallas=args.use_pallas,
+            row_norm=not args.no_precondition)
+        print(f"formulation '{args.formulation}': "
+              f"{obj.dual_shape[0]} dual rows "
+              f"({ {k: f'{v.start}:{v.stop}' for k, v in obj.row_slices().items()} })")
+        lam0 = (load_duals(args.warm_start, obj.dual_shape)
+                if args.warm_start else None)
+        res = Maximizer(cfg).maximize(obj, initial_value=lam0,
+                                      criteria=criteria,
+                                      diagnostics_fn=on_check)
     jax.block_until_ready(res.lam)
     dt = time.perf_counter() - t0
     d = np.asarray(res.stats.dual_obj)
@@ -100,6 +166,9 @@ def main():
     print(f"dual {d[0]:.3f} -> {d[-1]:.3f}; "
           f"infeas {float(res.stats.infeas[-1]):.3e}; "
           f"gamma {float(res.stats.gamma[-1]):.4f}")
+    if args.save_duals:
+        save_duals(args.save_duals, res.lam)
+        print(f"saved duals -> {args.save_duals}")
 
 
 if __name__ == "__main__":

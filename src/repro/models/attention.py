@@ -1,5 +1,5 @@
 """Attention: GQA/MQA with RoPE (+partial), qk_norm, q-chunk-streamed causal
-attention for train/prefill, and sequence-sharded flash-decode (DESIGN.md §6).
+attention for train/prefill, and sequence-sharded flash-decode (DESIGN.md §7).
 
 Memory policy:
   * train/prefill never materialize (B, H, S, S): a lax.scan over query

@@ -168,5 +168,5 @@ def cell_applicable(cfg: ModelConfig, shape: ShapeCell) -> Tuple[bool, str]:
     """Assignment rules: long_500k only for sub-quadratic (ssm/hybrid)."""
     if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
         return False, ("full-attention arch: 500k decode needs sub-quadratic "
-                       "attention (skip per assignment; see DESIGN.md §5)")
+                       "attention (skip per assignment)")
     return True, ""

@@ -4,7 +4,7 @@ Model code annotates arrays with *logical* axis names; the mapping to mesh
 axes lives here, in one table, so changing the parallelism strategy is a
 one-line rule edit (and a §Perf iteration, not a model rewrite).
 
-Key choices (DESIGN.md §6):
+Key choices (DESIGN.md §7):
   batch      -> ("pod", "data")   data parallelism, hierarchical across pods
   seq        -> "model"           sequence parallelism for activations between
                                   layers: the per-layer remat checkpoint is

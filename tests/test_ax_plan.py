@@ -95,6 +95,20 @@ class TestPlanPacking:
                 assert sorted(seen.get(j, [])) == truth.get(j, []), (k, j)
 
 
+class TestSortedScatterAlias:
+    def test_sorted_scatter_warns_and_maps_to_sorted(self, lp):
+        with pytest.warns(DeprecationWarning, match="sorted_scatter"):
+            obj = MatchingObjective(lp, sorted_scatter=True)
+        assert obj.ax_mode == "sorted"
+
+    def test_ax_mode_does_not_warn(self, lp):
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            obj = MatchingObjective(lp, ax_mode="sorted")
+        assert obj.ax_mode == "sorted"
+
+
 class TestAlignedReduction:
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     def test_matches_segment_sum(self, lp, dtype):

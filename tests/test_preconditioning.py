@@ -1,0 +1,132 @@
+"""§5.1 preconditioning: primal (per-block) scaling and conditioning.
+
+The row_norm=True path is exercised throughout the suite; this file covers
+the other half of `precondition()`:
+
+  - `primal_scale` round-trip: solve the scaled problem, map the primal
+    back with `undo_primal_scaling`, and check it against the unscaled
+    solve — the LINEAR objective and feasibility must agree (the ridge
+    term deliberately changes geometry, so the comparison runs at small γ
+    under tolerance termination);
+  - `precondition(primal=True)` returns both scalings and composes with
+    row normalization;
+  - `gram_condition_number` does not increase under row normalization
+    (Lemma 5.1 direction) on instances with heavy coefficient spread.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (InstanceSpec, MatchingObjective, Maximizer,
+                        SolveConfig, StoppingCriteria, generate,
+                        gram_condition_number, precondition, primal_scale,
+                        row_normalize, undo_primal_scaling)
+
+
+@pytest.fixture(scope="module")
+def lp_raw():
+    spec = InstanceSpec(num_sources=70, num_destinations=11,
+                        avg_nnz_per_row=8, seed=33, scale_sigma=1.5)
+    return jax.tree.map(jnp.asarray, generate(spec))
+
+
+CFG = SolveConfig(iterations=3000, gamma=0.005, gamma_init=0.8,
+                  gamma_decay_every=25, max_step=50.0, initial_step=1e-3)
+CRIT = StoppingCriteria(tol_rel_dual=1e-7, check_every=100)
+
+
+def _solve(lp):
+    obj = MatchingObjective(lp)
+    res = Maximizer(CFG).maximize(obj, criteria=CRIT)
+    return obj, res
+
+
+class TestPrimalScaleRoundTrip:
+    def test_unscale_recovers_comparable_solution(self, lp_raw):
+        """scale -> solve -> unscale lands on the same LP solution as the
+        direct solve: same linear objective, feasible in ORIGINAL units.
+
+        Both sides are row-normalized (the production flow; row-norm
+        rescales dual space only, so primal units are unchanged) — without
+        it neither solve gets near the LP optimum on this heavy-spread
+        instance and the comparison measures conditioning, not the
+        round-trip."""
+        lp_s, scaling = primal_scale(lp_raw)
+        obj_s, res_s = _solve(precondition(lp_s, row_norm=True)[0])
+        obj_d, res_d = _solve(precondition(lp_raw, row_norm=True)[0])
+        gamma = jnp.float32(CFG.gamma)
+        xs = undo_primal_scaling(obj_s.primal(res_s.lam, gamma), scaling)
+        xd = obj_d.primal(res_d.lam, gamma)
+        # linear objective parity (c'ᵀz == cᵀx by construction of c' = c/v,
+        # but here we recompute cᵀx from the UNSCALED tensors and x = z/v)
+        def lin(xs, lp):
+            return sum(float(jnp.vdot(s.c_vals, x))
+                       for s, x in zip(lp.slabs, xs))
+        a, b = lin(xs, lp_raw), lin(xd, lp_raw)
+        assert abs(a - b) < 0.03 * abs(b), (a, b)
+        # the unscaled solution satisfies the original simple constraints
+        for x, slab in zip(xs, lp_raw.slabs):
+            x = np.asarray(jnp.where(slab.mask, x, 0.0))
+            assert (x >= -1e-5).all()
+            assert (x <= np.asarray(slab.ub) * 1.001 + 1e-5).all()
+            assert (x.sum(-1) <= np.asarray(slab.s) * 1.001).all()
+
+    def test_scaled_budgets_map_back(self, lp_raw):
+        """ub' = v·ub and s' = v·s: z respecting the scaled polytope maps
+        to x respecting the original one (polytope stays in-family)."""
+        lp_s, scaling = primal_scale(lp_raw)
+        for slab_s, slab_o, v in zip(lp_s.slabs, lp_raw.slabs, scaling.v):
+            np.testing.assert_allclose(
+                np.asarray(slab_s.ub),
+                np.asarray(slab_o.ub) * np.asarray(v)[:, None], rtol=1e-6)
+            np.testing.assert_allclose(
+                np.asarray(slab_s.s),
+                np.asarray(slab_o.s) * np.asarray(v), rtol=1e-6)
+
+    def test_precondition_primal_flag(self, lp_raw):
+        """precondition(primal=True) applies block scaling before row-norm
+        and returns both undo infos."""
+        lp_pc, (row_scaling, p_scaling) = precondition(
+            lp_raw, row_norm=True, primal=True)
+        assert row_scaling is not None and p_scaling is not None
+        ref, _ = primal_scale(lp_raw)
+        ref, _ = row_normalize(ref)
+        for a, b in zip(jax.tree.leaves(lp_pc), jax.tree.leaves(ref)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6)
+
+    def test_round_trip_after_both_transforms(self, lp_raw):
+        """The full precondition(primal=True, row_norm=True) stack still
+        yields a feasible, comparable solution after primal unscaling
+        (duals differ by the row scaling; the primal path is what we map
+        back)."""
+        lp_pc, (_, p_scaling) = precondition(lp_raw, row_norm=True,
+                                             primal=True)
+        obj, res = _solve(lp_pc)
+        xs = undo_primal_scaling(
+            obj.primal(res.lam, jnp.float32(CFG.gamma)), p_scaling)
+        _, res_d = _solve(precondition(lp_raw, row_norm=True)[0])
+        lin = sum(float(jnp.vdot(s.c_vals, x))
+                  for s, x in zip(lp_raw.slabs, xs))
+        # compare against the direct solve's linear objective (c unchanged
+        # by row normalization, so primal_obj is in original units)
+        assert abs(lin - float(res_d.stats.primal_obj[-1])) \
+            < 0.03 * abs(lin), (lin, float(res_d.stats.primal_obj[-1]))
+
+
+class TestGramConditioning:
+    @pytest.mark.parametrize("seed", [1, 7])
+    def test_row_norm_never_degrades_conditioning(self, seed):
+        spec = InstanceSpec(num_sources=50, num_destinations=8,
+                            avg_nnz_per_row=6, seed=seed, scale_sigma=2.0)
+        lp = jax.tree.map(jnp.asarray, generate(spec))
+        k0 = gram_condition_number(lp)
+        k1 = gram_condition_number(precondition(lp, row_norm=True)[0])
+        assert k1 <= k0 * (1.0 + 1e-6), (k0, k1)
+
+    def test_primal_plus_row_norm_conditioning(self, lp_raw):
+        k0 = gram_condition_number(lp_raw)
+        k1 = gram_condition_number(
+            precondition(lp_raw, row_norm=True, primal=True)[0])
+        assert k1 <= k0 * (1.0 + 1e-6), (k0, k1)
