@@ -24,17 +24,38 @@ unchanged).  Iterations:
        scatter on CPU/GPU backends; the destination-major AxPlan companion
        layout (paper §6 "constraint-aligned sparse layouts") replaces it
        with dense masked gather row-sums — fixed shapes, no write
-       contention.  change: ax_mode="aligned" (keeps it1's bisect20).
+       contention.  change: ax_mode="aligned_gvals" (keeps it1's bisect20;
+       the gvals-consuming aligned lowering, pre-value-carrying).
   it5  same aligned reduction routed through the Pallas gather-reduce
        kernel (kernels/ax_reduce.py; interpret-mode on CPU — the row
        documents TPU-kernel correctness + CPU cost, as the kernels suite
        does for dual_grad).
+  it6  hypothesis: it4 still pays HBM round-trips of the (E, m) per-edge
+       gradient tensor (gvals write, concat copy, gather read) to multiply
+       by weights that are *static*; packing a destination-major weight
+       copy a_dm into the plan makes the reduction x-only — the only
+       dynamic per-edge array is the (E,) x vector.
+       change: ax_mode="aligned" (the value-carrying x-carry path).
+  it7  the x-carry reduction through the Pallas kernels: gvals-free fused
+       dual_x + ax_reduce_x (interpret-mode on CPU, as it5).
 
 Each row reports: us/iter, speedup vs baseline, and |Δdual| of the converged
 objective vs baseline (dual_drift_rel must be ~0 for accepted changes —
-the it4/it5 guards in run.py's emitted JSON).
+the it4..it7 guards in run.py's emitted JSON; it6/it7 additionally report
+drift vs the it4 gvals-aligned lowering).
 
-`run_tolerance` additionally carries a formulation-subsystem row
+`run_bytes` is the analytic companion (launch/hlo_cost.py over the
+compiled calculate): total / dynamic / edge-space bytes per iteration for
+the scatter, gvals-aligned, and x-carry lowerings, plus the
+(E, m)-tensor census — the "no gvals materialization" acceptance check
+and the ≥2x dynamic edge-traffic claim, measured on a multi-family
+(m=4) instance where the per-edge gradient tensor is genuinely wider
+than x (at m=1 XLA already collapses the three logical round-trips into
+one E-sized materialization, and the two layouts tie).
+
+`run_tolerance` additionally carries an x-carry row (`tol_xcarry`, same
+matched stopping criteria; its dual_drift_rel vs the gvals-aligned row is
+the CI convergence gate) and a formulation-subsystem row
 (`tol_multi_budget_aligned`): the multi_budget spec compiled through
 repro.formulations and solved to the same tolerances — the new subsystem
 stays on the perf trajectory from the day it lands.
@@ -110,8 +131,9 @@ def run(quick: bool = False):
                  "us_per_call": t3 * 1e6,
                  "derived": {"dual": d3, "speedup": t0 / t3,
                              "dual_drift_rel": abs(d3 - d0) / abs(d0)}})
-    # it4: scatter-free constraint-aligned gather reduction (AxPlan)
-    t4, d4 = _time_solve(lp, "boxcut", 20, ax_mode="aligned",
+    # it4: scatter-free constraint-aligned gather reduction (AxPlan) over a
+    # materialized (E, m) gvals tensor — the pre-value-carrying lowering
+    t4, d4 = _time_solve(lp, "boxcut", 20, ax_mode="aligned_gvals",
                          iterations=iters, repeats=reps)
     rows.append({"name": "perf_lp/it4_aligned_ax",
                  "us_per_call": t4 * 1e6,
@@ -119,14 +141,88 @@ def run(quick: bool = False):
                              "speedup_vs_it3": t3 / t4,
                              "dual_drift_rel": abs(d4 - d0) / abs(d0)}})
     # it5: same reduction through the Pallas gather-reduce kernel
-    t5, d5 = _time_solve(lp, "boxcut", 20, ax_mode="aligned",
+    t5, d5 = _time_solve(lp, "boxcut", 20, ax_mode="aligned_gvals",
                          use_pallas=True, iterations=iters, repeats=reps)
     rows.append({"name": "perf_lp/it5_aligned_ax_pallas",
                  "us_per_call": t5 * 1e6,
                  "derived": {"dual": d5, "speedup": t0 / t5,
                              "speedup_vs_it3": t3 / t5,
                              "dual_drift_rel": abs(d5 - d0) / abs(d0)}})
+    # it6: value-carrying x-only reduction (a_dm packed into the plan,
+    # gvals never materialized)
+    t6, d6 = _time_solve(lp, "boxcut", 20, ax_mode="aligned",
+                         iterations=iters, repeats=reps)
+    rows.append({"name": "perf_lp/it6_xcarry",
+                 "us_per_call": t6 * 1e6,
+                 "derived": {"dual": d6, "speedup": t0 / t6,
+                             "speedup_vs_it4": t4 / t6,
+                             "dual_drift_rel": abs(d6 - d0) / abs(d0),
+                             "dual_drift_rel_vs_aligned":
+                                 abs(d6 - d4) / abs(d4)}})
+    # it7: x-carry through the gvals-free Pallas kernels
+    t7, d7 = _time_solve(lp, "boxcut", 20, ax_mode="aligned",
+                         use_pallas=True, iterations=iters, repeats=reps)
+    rows.append({"name": "perf_lp/it7_xcarry_pallas",
+                 "us_per_call": t7 * 1e6,
+                 "derived": {"dual": d7, "speedup": t0 / t7,
+                             "speedup_vs_it5": t5 / t7,
+                             "dual_drift_rel": abs(d7 - d0) / abs(d0),
+                             "dual_drift_rel_vs_aligned":
+                                 abs(d7 - d5) / abs(d5)}})
     return rows
+
+
+def run_bytes(quick: bool = False):
+    """Analytic bytes-per-iteration of the three Ax lowerings (module doc).
+
+    Lowers `MatchingObjective.calculate` for scatter / aligned_gvals /
+    aligned (x-carry) on a multi-family Appendix-B instance and walks the
+    compiled HLO with launch/hlo_cost.py.  Reported per lowering:
+      bytes        total operand+result HBM bytes (hlo_cost convention)
+      dyn_bytes    the same excluding static parameter/constant reads
+      edge_bytes   dynamic edge-space materializations (leading dim == E)
+      gvals_em     number of (E, m)-shaped tensors anywhere in the module
+    The acceptance claims ride on the aligned rows: gvals_em == 0 for
+    x-carry, and edge-space dynamic traffic reduced >= 2x (== m, here 4x,
+    up to XLA copy elision) vs the gvals-based aligned lowering."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import InstanceSpec, generate
+    from repro.launch import hlo_cost
+
+    I = 2_000 if quick else 10_000
+    spec = InstanceSpec(num_sources=I, num_destinations=100,
+                        avg_nnz_per_row=max(0.001 * I, 4.0), seed=42,
+                        num_families=4)
+    lp = jax.tree.map(jnp.asarray, generate(spec))
+    lp, _ = precondition(lp, row_norm=True)
+    E = sum(s.n * s.width for s in lp.slabs)
+    m = lp.m
+    lam = jnp.zeros((m, lp.num_destinations), jnp.float32)
+    gamma = jnp.float32(0.01)
+    stats = {}
+    for mode in ("scatter", "aligned_gvals", "aligned"):
+        obj = MatchingObjective(lp, proj_kind="boxcut", proj_iters=20,
+                                ax_mode=mode)
+        txt = jax.jit(obj.calculate).lower(lam, gamma).compile().as_text()
+        stats[mode] = {
+            "bytes": hlo_cost.analyze(txt)["bytes_per_device"],
+            "dyn_bytes": hlo_cost.analyze(
+                txt, dynamic_only=True)["bytes_per_device"],
+            "edge_bytes": hlo_cost.edge_space_result_bytes(txt, E),
+            "gvals_em": hlo_cost.count_result_shape(txt, (E, m)),
+        }
+    gv, xc = stats["aligned_gvals"], stats["aligned"]
+    # XLA may elide the x concat entirely (edge_bytes == 0); floor the
+    # denominator at one (E,) f32 write so the ratio stays meaningful
+    ratio = gv["edge_bytes"] / max(xc["edge_bytes"], 4.0 * E)
+    derived = {"instance": f"I{I}_J100_m{m}", "num_edges_padded": int(E)}
+    for mode, s in stats.items():
+        derived.update({f"{k}_{mode}": v for k, v in s.items()})
+    derived["edge_traffic_ratio_gvals_over_xcarry"] = ratio
+    derived["xcarry_materializes_gvals"] = bool(xc["gvals_em"])
+    return [{"name": "perf_lp/bytes_per_iteration", "us_per_call": 0.0,
+             "derived": derived}]
 
 
 def run_tolerance(quick: bool = False):
@@ -151,7 +247,10 @@ def run_tolerance(quick: bool = False):
                             check_every=25,
                             max_seconds=60.0 if quick else 300.0)
     rows, secs = [], {}
-    for tag, ax_mode in [("scatter", "scatter"), ("aligned", "aligned")]:
+    by_name = {}
+    for tag, ax_mode in [("scatter", "scatter"),
+                         ("aligned", "aligned_gvals"),
+                         ("xcarry", "aligned")]:
         obj = MatchingObjective(lp, proj_kind="boxcut", proj_iters=20,
                                 ax_mode=ax_mode)
         mx = Maximizer(cfg)
@@ -161,12 +260,17 @@ def run_tolerance(quick: bool = False):
         warm = mx.maximize(obj, criteria=StoppingCriteria(
             max_iterations=crit.check_every))
         jax.block_until_ready(warm.lam)
-        t0 = time.perf_counter()
-        res = mx.maximize(obj, criteria=crit)
-        jax.block_until_ready(res.lam)
-        dt = time.perf_counter() - t0
+        # best-of-3: this host's effective CPU speed drifts ~2x over
+        # minutes, so a single timed solve can misattribute a slow window
+        # to a layout; the trajectory is deterministic, only dt varies
+        dt = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            res = mx.maximize(obj, criteria=crit)
+            jax.block_until_ready(res.lam)
+            dt = min(dt, time.perf_counter() - t0)
         secs[tag] = (dt, res)
-        rows.append({
+        row = {
             "name": f"perf_lp/tol_{tag}",
             "us_per_call": dt / max(res.iterations_run, 1) * 1e6,
             "derived": {
@@ -177,15 +281,30 @@ def run_tolerance(quick: bool = False):
                 "dual": float(res.stats.dual_obj[-1]),
                 "infeas": float(res.stats.infeas[-1]),
                 "checks": len(res.diagnostics),
-            }})
+            }}
+        rows.append(row)
+        by_name[tag] = row
     dt_sc, res_sc = secs["scatter"]
     dt_al, res_al = secs["aligned"]
-    rows[-1]["derived"]["wallclock_speedup_vs_scatter"] = dt_sc / dt_al
+    dt_xc, res_xc = secs["xcarry"]
+    d_al = by_name["aligned"]["derived"]
+    d_al["wallclock_speedup_vs_scatter"] = dt_sc / dt_al
     if res_sc.converged and res_al.converged:
-        rows[-1]["derived"]["dual_drift_rel"] = (
+        d_al["dual_drift_rel"] = (
             abs(float(res_al.stats.dual_obj[-1])
                 - float(res_sc.stats.dual_obj[-1]))
             / abs(float(res_sc.stats.dual_obj[-1])))
+    # the x-carry acceptance pair: same matched criteria as the gvals-
+    # aligned row; its drift vs that row is the CI convergence gate, and
+    # wall-clock-to-tolerance must not regress (it does strictly less work)
+    d_xc = by_name["xcarry"]["derived"]
+    d_xc["wallclock_speedup_vs_scatter"] = dt_sc / dt_xc
+    d_xc["wallclock_speedup_vs_aligned"] = dt_al / dt_xc
+    if res_al.converged and res_xc.converged:
+        d_xc["dual_drift_rel_vs_aligned"] = (
+            abs(float(res_xc.stats.dual_obj[-1])
+                - float(res_al.stats.dual_obj[-1]))
+            / abs(float(res_al.stats.dual_obj[-1])))
 
     # the formulation-subsystem row: multi_budget (capacity + global count
     # + global value caps, DESIGN.md §5) compiled onto the same engine with
@@ -204,10 +323,12 @@ def run_tolerance(quick: bool = False):
     warm = mx.maximize(obj, criteria=StoppingCriteria(
         max_iterations=crit.check_every))
     jax.block_until_ready(warm.lam)
-    t0 = time.perf_counter()
-    res = mx.maximize(obj, criteria=crit_mb)
-    jax.block_until_ready(res.lam)
-    dt = time.perf_counter() - t0
+    dt = float("inf")
+    for _ in range(3):   # best-of-3, same rationale as the rows above
+        t0 = time.perf_counter()
+        res = mx.maximize(obj, criteria=crit_mb)
+        jax.block_until_ready(res.lam)
+        dt = min(dt, time.perf_counter() - t0)
     rows.append({
         "name": "perf_lp/tol_multi_budget_aligned",
         "us_per_call": dt / max(res.iterations_run, 1) * 1e6,

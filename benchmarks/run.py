@@ -13,11 +13,17 @@ rest of the artifact; ``--fresh`` replaces the file wholesale).
   lemmaA1  primal-infeasibility bound                      (Lemma A.1)
   kernels  Pallas dual-grad + ax-reduce kernels vs pure-jnp hot path
   roofline aggregated dry-run roofline terms               (§Roofline)
-  perf_lp  solver §Perf hillclimb it0..it5 (it4/it5: constraint-aligned
-           scatter-free Ax, guarded by dual_drift_rel in each row)
+  perf_lp  solver §Perf hillclimb it0..it7 (it4/it5: constraint-aligned
+           scatter-free Ax over materialized gvals; it6/it7: value-carrying
+           x-only reduction — all guarded by dual_drift_rel in each row)
   perf_lp_tol  wall-clock-to-tolerance under matched stopping criteria —
-           the paper's actual speedup metric (scatter vs aligned rows share
-           one StoppingCriteria; each reports seconds/iterations/stop_reason)
+           the paper's actual speedup metric (scatter vs aligned vs x-carry
+           rows share one StoppingCriteria; each reports
+           seconds/iterations/stop_reason; tol_xcarry's drift vs
+           tol_aligned is the CI gate)
+  perf_lp_bytes  analytic HBM bytes/iteration of the three Ax lowerings
+           from compiled HLO (launch/hlo_cost.py): the no-gvals and
+           ≥2x dynamic edge-traffic acceptance checks
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 """
@@ -68,6 +74,11 @@ def _kernel_bench(quick: bool = False):
                      .normal(size=(E, lp.m)).astype(np.float32))
     ax_k = ops.ax_aligned(plan, gv, use_pallas=True)
     ax_r = kref.ax_plan_ref(plan, gv)
+    # value-carrying x-only gather-reduce kernel vs oracle
+    xv = jnp.asarray(np.random.default_rng(1)
+                     .normal(size=(E,)).astype(np.float32))
+    axx_k = ops.ax_aligned_x(plan, xv, use_pallas=True)
+    axx_r = kref.ax_plan_x_ref(plan, xv)
     return [
         {"name": "kernels/dual_grad_jnp_hotpath", "us_per_call": dt * 1e6,
          "derived": {"edges": int(sum(int(np.asarray(s.mask).sum())
@@ -78,6 +89,10 @@ def _kernel_bench(quick: bool = False):
         {"name": "kernels/ax_reduce_pallas_vs_oracle", "us_per_call": 0.0,
          "derived": {"max_abs_err_ax":
                      float(jnp.abs(ax_k - ax_r.astype(ax_k.dtype)).max()),
+                     "plan_rows": int(sum(b.rows for b in plan.buckets))}},
+        {"name": "kernels/ax_reduce_x_pallas_vs_oracle", "us_per_call": 0.0,
+         "derived": {"max_abs_err_ax":
+                     float(jnp.abs(axx_k - axx_r.astype(axx_k.dtype)).max()),
                      "plan_rows": int(sum(b.rows for b in plan.buckets))}},
     ]
 
@@ -100,6 +115,7 @@ def _register():
         "roofline": lambda q: roofline_report.run(q),
         "perf_lp": lambda q: perf_lp.run(q),
         "perf_lp_tol": lambda q: perf_lp.run_tolerance(q),
+        "perf_lp_bytes": lambda q: perf_lp.run_bytes(q),
     })
 
 

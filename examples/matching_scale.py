@@ -28,9 +28,11 @@ def main():
     ap.add_argument("--destinations", type=int, default=2_000)
     ap.add_argument("--iterations", type=int, default=300)
     ap.add_argument("--ax-mode", default="aligned",
-                    choices=["scatter", "sorted", "aligned"],
+                    choices=["scatter", "sorted", "aligned",
+                             "aligned_gvals"],
                     help="Ax reduction layout (DESIGN.md §3); 'aligned' is "
-                         "the scatter-free companion-layout path")
+                         "the scatter-free value-carrying x-only path, "
+                         "'aligned_gvals' its gvals-based predecessor")
     args = ap.parse_args()
 
     spec = InstanceSpec(num_sources=args.sources,

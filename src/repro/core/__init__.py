@@ -10,8 +10,8 @@ from .types import (AxBucket, AxPlan, ConvergenceCheck, LPData, Slab,
                     StopReason, StoppingCriteria)
 from .projections import ProjectionMap, project, project_boxcut, project_box
 from .objectives import (MatchingObjective, GlobalCountObjective,
-                         dual_value_and_grad, slab_xgvals, ObjectiveAux,
-                         AX_MODES)
+                         dual_value_and_grad, slab_xgvals, slab_xcarry,
+                         ObjectiveAux, AX_MODES)
 from .maximizer import (Maximizer, SolveEngine, maximize, gamma_at,
                         max_step_at)
 from .preconditioning import (row_normalize, primal_scale, precondition,
@@ -26,7 +26,7 @@ __all__ = [
     "StopReason", "StoppingCriteria", "ConvergenceCheck", "SolveEngine",
     "ProjectionMap", "project", "project_boxcut", "project_box",
     "MatchingObjective", "GlobalCountObjective", "dual_value_and_grad",
-    "slab_xgvals", "ObjectiveAux", "AX_MODES",
+    "slab_xgvals", "slab_xcarry", "ObjectiveAux", "AX_MODES",
     "Maximizer", "maximize", "gamma_at", "max_step_at",
     "row_normalize", "primal_scale", "precondition", "row_norms",
     "undo_row_scaling", "undo_primal_scaling", "gram_condition_number",

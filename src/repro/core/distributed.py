@@ -99,25 +99,30 @@ class DistributedMatchingObjective:
     proj_iters: int = 40
     use_pallas: bool = False
     lambda_axis: Optional[str] = None   # beyond-paper λ sharding
-    # "scatter" (paper-faithful segment-sum) or "aligned" (destination-major
-    # AxPlan gather-reduce, scatter-free — DESIGN.md §3).  With "aligned" a
-    # per-shard plan over each device's local slab-edge space is built once
-    # and its leading shard axis is partitioned over source_axes — row-wise
-    # over the λ axis too when lambda_sharding="model" makes it one.
+    # "scatter" (paper-faithful segment-sum), "aligned" (value-carrying
+    # destination-major AxPlan: x-only reduce through the static a_dm copy,
+    # no gvals materialization — DESIGN.md §3), or "aligned_gvals" (the
+    # index-only aligned gather-reduce over materialized gvals).  With the
+    # aligned modes a per-shard plan over each device's local slab-edge
+    # space is built once — a_dm stacked alongside edge_idx/mask for
+    # "aligned" — and its leading shard axis is partitioned over
+    # source_axes — row-wise over the λ axis too when
+    # lambda_sharding="model" makes it one.
     ax_mode: str = "scatter"
     _plan: Optional[AxPlan] = dataclasses.field(
         default=None, init=False, repr=False)
 
     def __post_init__(self):
-        if self.ax_mode not in ("scatter", "aligned"):
+        if self.ax_mode not in ("scatter", "aligned", "aligned_gvals"):
             raise ValueError(
-                f"distributed ax_mode is 'scatter' or 'aligned', got "
-                f"{self.ax_mode!r}")
-        if self.ax_mode == "aligned":
+                f"distributed ax_mode is 'scatter', 'aligned' or "
+                f"'aligned_gvals', got {self.ax_mode!r}")
+        if self.ax_mode in ("aligned", "aligned_gvals"):
             from .instance import build_sharded_ax_plan
             n_shards = int(np.prod([self.mesh.shape[a]
                                     for a in self.source_axes]))
-            plan = build_sharded_ax_plan(self.lp, n_shards)
+            plan = build_sharded_ax_plan(
+                self.lp, n_shards, carry_values=(self.ax_mode == "aligned"))
             row = NamedSharding(self.mesh, P(self.source_axes))
             self._plan = jax.tree.map(
                 lambda a: jax.device_put(jnp.asarray(a), row), plan)
@@ -155,7 +160,22 @@ class DistributedMatchingObjective:
             else:
                 lam_full = lam
             if ax_mode == "aligned":
-                # shard-local scatter-free reduce over the local edge space
+                # shard-local x-carry reduce: only the (E_local,) x vector
+                # is dynamic; the plan's a_dm carries the static weights
+                from repro.kernels import ops as kops
+                parts, c_x, x_sq = [], jnp.zeros((), lam_full.dtype), \
+                    jnp.zeros((), lam_full.dtype)
+                for slab in slabs:
+                    x, c_s, sq_s = objectives.slab_xcarry(
+                        slab, lam_full, gamma, kind, iters, pallas)
+                    parts.append(x.reshape(-1))
+                    c_x, x_sq = c_x + c_s, x_sq + sq_s
+                local_plan = jax.tree.map(lambda a: a[0], plan)
+                ax = kops.ax_aligned_x(local_plan, jnp.concatenate(parts),
+                                       use_pallas=pallas,
+                                       out_dtype=lam_full.dtype)
+            elif ax_mode == "aligned_gvals":
+                # shard-local scatter-free reduce over materialized gvals
                 from repro.kernels import ops as kops
                 parts, c_x, x_sq = [], jnp.zeros((), lam_full.dtype), \
                     jnp.zeros((), lam_full.dtype)

@@ -190,11 +190,30 @@ def _pow2_widths(indeg: np.ndarray, min_width: int) -> np.ndarray:
                       .astype(np.int64))
 
 
-def _pack_ax_rows(dest, idx, J: int, widths: np.ndarray):
+def _flat_a(slabs, row_slice: Optional[Tuple[int, int]] = None) -> np.ndarray:
+    """(E, m) constraint weights in the concatenated slab-edge space (the
+    same flattening order as `_flat_edges`; 0 on padded positions), with the
+    same optional per-slab row-block restriction."""
+    parts = []
+    for s in slabs:
+        a = np.asarray(s.a_vals)
+        if row_slice is not None:
+            k, n = row_slice
+            nl = a.shape[0] // n
+            a = a[k * nl:(k + 1) * nl]
+        parts.append(a.reshape(-1, a.shape[-1]))
+    if not parts:
+        return np.zeros((0, 1), np.float32)
+    return np.concatenate(parts, axis=0)
+
+
+def _pack_ax_rows(dest, idx, J: int, widths: np.ndarray,
+                  a_flat: Optional[np.ndarray] = None):
     """Pack per-destination gather rows under a fixed width assignment.
 
-    Returns ([(edge_idx, mask, dest_ids)] per distinct width, row_pos) with
-    row_pos[j] = position of destination j in the bucket-concatenated rows.
+    Returns ([(edge_idx, mask, dest_ids, a_dm)] per distinct width, row_pos)
+    with row_pos[j] = position of destination j in the bucket-concatenated
+    rows; a_dm is None when `a_flat` is not supplied (index-only plan).
     """
     order = np.argsort(dest, kind="stable")
     dest_s, idx_s = dest[order], idx[order]
@@ -210,14 +229,22 @@ def _pack_ax_rows(dest, idx, J: int, widths: np.ndarray):
         safe = np.where(msk, gather, 0)
         eidx = (np.where(msk, idx_s[safe], 0) if idx_s.size
                 else np.zeros((r, w), np.int64))
+        a_dm = None
+        if a_flat is not None:
+            # value-carrying layout: destination-major static weight copy
+            # a_dm[r, q] = a_flat[edge_idx[r, q]], zero on padding
+            a_dm = (np.where(msk[..., None], a_flat[eidx], 0.0)
+                    .astype(a_flat.dtype) if a_flat.size
+                    else np.zeros((r, w, a_flat.shape[-1]), a_flat.dtype))
         buckets.append((eidx.astype(np.int32), msk,
-                        rows.astype(np.int32)))
+                        rows.astype(np.int32), a_dm))
         row_pos[rows] = pos + np.arange(r)
         pos += r
     return buckets, row_pos
 
 
-def build_ax_plan(lp: LPData, min_width: int = 4) -> AxPlan:
+def build_ax_plan(lp: LPData, min_width: int = 4,
+                  carry_values: bool = True) -> AxPlan:
     """Pack the destination-major companion layout (DESIGN.md §3), host-side,
     once per instance.
 
@@ -225,19 +252,26 @@ def build_ax_plan(lp: LPData, min_width: int = 4) -> AxPlan:
     rows, mirroring `pack_slabs`' source-side bucketing; every destination
     (including in-degree 0) occupies exactly one row, so the dense (m, J)
     `Ax` assembles by the `inv_perm` gather with no scatter anywhere.
+
+    `carry_values=True` (default) additionally packs each bucket's static
+    destination-major weight copy `a_dm` so the reduction can consume the
+    (E,) x vector directly (`ops.ax_aligned_x`) — the per-edge gradient
+    tensor never exists.  `carry_values=False` packs the index-only legacy
+    plan consumed by the gvals-based `ops.ax_aligned`.
     """
     J = lp.num_destinations
     dest, idx, _ = _flat_edges(lp.slabs)
     widths = _pow2_widths(np.bincount(dest, minlength=J)[:J], min_width)
-    buckets, row_pos = _pack_ax_rows(dest, idx, J, widths)
+    a_flat = _flat_a(lp.slabs) if carry_values else None
+    buckets, row_pos = _pack_ax_rows(dest, idx, J, widths, a_flat)
     return AxPlan(
-        buckets=tuple(AxBucket(edge_idx=e, mask=m, dest_ids=d)
-                      for e, m, d in buckets),
+        buckets=tuple(AxBucket(edge_idx=e, mask=m, dest_ids=d, a_dm=a)
+                      for e, m, d, a in buckets),
         inv_perm=row_pos.astype(np.int32))
 
 
-def build_sharded_ax_plan(lp: LPData, num_shards: int,
-                          min_width: int = 4) -> AxPlan:
+def build_sharded_ax_plan(lp: LPData, num_shards: int, min_width: int = 4,
+                          carry_values: bool = True) -> AxPlan:
     """Per-shard AxPlans over the block row-partition of an (already padded)
     LP, stacked on a leading shard axis.
 
@@ -246,7 +280,8 @@ def build_sharded_ax_plan(lp: LPData, num_shards: int,
     shards (max local in-degree) so all leaves have uniform shapes and the
     stack is a single pytree whose leading axis shards over the mesh source
     axes — in particular row-wise over the λ axis when
-    `lambda_sharding="model"` makes it a source axis.
+    `lambda_sharding="model"` makes it a source axis.  With `carry_values`
+    each shard packs `a_dm` over its local edge space, stacked the same way.
     """
     J = lp.num_destinations
     shard_edges = [_flat_edges(lp.slabs, row_slice=(k, num_shards))[:2]
@@ -254,13 +289,18 @@ def build_sharded_ax_plan(lp: LPData, num_shards: int,
     indeg = np.stack([np.bincount(d, minlength=J)[:J]
                       for d, _ in shard_edges])
     widths = _pow2_widths(indeg.max(axis=0), min_width)
-    packed = [_pack_ax_rows(d, i, J, widths) for d, i in shard_edges]
+    packed = [_pack_ax_rows(d, i, J, widths,
+                            _flat_a(lp.slabs, row_slice=(k, num_shards))
+                            if carry_values else None)
+              for k, (d, i) in enumerate(shard_edges)]
     buckets = []
     for bi in range(len(packed[0][0])):
         buckets.append(AxBucket(
             edge_idx=np.stack([p[0][bi][0] for p in packed]),
             mask=np.stack([p[0][bi][1] for p in packed]),
-            dest_ids=np.stack([p[0][bi][2] for p in packed])))
+            dest_ids=np.stack([p[0][bi][2] for p in packed]),
+            a_dm=(np.stack([p[0][bi][3] for p in packed])
+                  if carry_values else None)))
     inv = np.stack([p[1] for p in packed]).astype(np.int32)
     return AxPlan(buckets=tuple(buckets), inv_perm=inv)
 

@@ -144,9 +144,18 @@ def _make_chunk_runner(calculate: Callable, config: SolveConfig,
     in the state, so chunking does not perturb the schedule).
     `gamma_override=True`: γ is a traced scalar argument, constant within the
     chunk — the host controller drives it (adaptive stall-decay).
+
+    The incoming SolveState is *donated*: XLA aliases the carry buffers
+    (λ, momentum, Lipschitz bookkeeping) into the outgoing state instead of
+    double-buffering the dual state across chunk boundaries.  Donation is
+    pure memory plumbing — the chunked trajectory stays bit-identical
+    (tests/test_stopping.py).  Callers must not reuse a state they passed
+    in; `SolveEngine.solve` therefore hands the runner a private copy of
+    the initial state (whose leaves also alias each other — λ0 appears as
+    lam/y/lam_prev/y_prev — and duplicate donation of one buffer is an
+    error).
     """
     if gamma_override:
-        @jax.jit
         def run(state, gamma):
             gamma = jnp.asarray(gamma, jnp.float32)
             step_fn = partial(_STEPS[algorithm], calculate, config,
@@ -156,11 +165,10 @@ def _make_chunk_runner(calculate: Callable, config: SolveConfig,
         step_fn = partial(_STEPS[algorithm], calculate, config,
                           lambda st: gamma_at(config, st.it))
 
-        @jax.jit
         def run(state, gamma):
             del gamma  # scheduled mode: γ comes from the carried counter
             return jax.lax.scan(step_fn, state, None, length=length)
-    return run
+    return jax.jit(run, donate_argnums=(0,))
 
 
 class SolveEngine:
@@ -210,7 +218,12 @@ class SolveEngine:
         chunked = (total > 0 and
                    (adaptive
                     or (criteria is not None and criteria.needs_checks)))
-        state = initial_state(lam0, config)
+        # The chunk runners donate the state argument (buffer reuse across
+        # chunks — no double-buffered dual state).  The fresh initial state
+        # aliases lam0 into four leaves, and the caller may hold lam0 (warm
+        # starts): copy every leaf so donation never invalidates a caller
+        # buffer nor donates one buffer twice.
+        state = jax.tree.map(jnp.copy, initial_state(lam0, config))
         gamma_dev = jnp.asarray(config.gamma, jnp.float32)
 
         if not chunked:

@@ -14,14 +14,26 @@ On the bucketed-slab layout every step is a dense masked row-op:
 
 Step 4 is the only non-local stage, and `ax_mode` selects how it runs
 (DESIGN.md §3):
-  "scatter"  per-slab `segment_sum` keyed by destination (random
-             scatter-add — the paper-faithful baseline);
-  "sorted"   edges pre-sorted by destination at construction so the
-             segmented sum takes the `indices_are_sorted` fast path;
-  "aligned"  destination-major companion layout (`AxPlan`): Ax is a dense
-             masked gather row-sum over padded in-degree buckets — no
-             scatter, no atomics, fixed shapes (the constraint-aligned
-             sparse layout of paper §6).
+  "scatter"        per-slab `segment_sum` keyed by destination (random
+                   scatter-add — the paper-faithful baseline);
+  "sorted"         edges pre-sorted by destination at construction so the
+                   segmented sum takes the `indices_are_sorted` fast path;
+  "aligned"        value-carrying destination-major companion layout
+                   (`AxPlan` with `a_dm`): the plan packs a static copy of
+                   the constraint weights per dual row, so the reduction
+                   consumes the (E,) x vector directly —
+                   `ax[r,k] = Σ_q mask · a_dm[r,q,k] · x[edge_idx[r,q]]` —
+                   and the per-edge gradient tensor (gvals) is never
+                   materialized.  No scatter, no atomics, fixed shapes,
+                   and the only dynamic per-edge HBM traffic is x.
+  "aligned_gvals"  the index-only aligned layout: gvals are materialized
+                   per slab, concatenated to (E, m), and gather-row-summed
+                   (the pre-value-carrying lowering, kept as the measured
+                   baseline for the x-carry traffic claim).
+
+The legacy gvals-producing sweep survives untouched for
+scatter/sorted/aligned_gvals; "aligned" routes through the gvals-free
+`slab_xcarry` + `ops.ax_aligned_x`.
 """
 from __future__ import annotations
 
@@ -35,7 +47,7 @@ import jax.numpy as jnp
 from . import projections
 from .types import AxPlan, LPData, Slab
 
-AX_MODES = ("scatter", "sorted", "aligned")
+AX_MODES = ("scatter", "sorted", "aligned", "aligned_gvals")
 
 
 class ObjectiveAux(NamedTuple):
@@ -96,6 +108,42 @@ def slab_xgvals(slab: Slab, lam: jax.Array, gamma: jax.Array,
                             iters=proj_iters)
     gvals = slab.a_vals * x[..., None]                  # (n, w, m)
     return x, gvals, jnp.vdot(slab.c_vals, x), jnp.vdot(x, x)
+
+
+def slab_xcarry(slab: Slab, lam: jax.Array, gamma: jax.Array,
+                proj_kind: str, proj_iters: int = 40,
+                use_pallas: bool = False, shift=None):
+    """Gvals-free per-slab forward pass: (x*, cᵀx, ‖x‖²).
+
+    The x-carry twin of `slab_xgvals` for the value-carrying aligned
+    layout (DESIGN.md §3): the per-edge gradient tensor is never formed —
+    the Ax reduction multiplies by the plan's static `a_dm` copy instead.
+    Identical math for x/cᵀx/‖x‖² (same `shift` hook, same Pallas c-fold);
+    keep the two in lockstep when editing either.  On the Pallas path this
+    consumes the gvals-free `dual_x` kernel, dropping the fused kernel's
+    largest output — the (n, w, m) HBM write and its VMEM tile.
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+        kslab = (slab if shift is None
+                 else slab._replace(c_vals=slab.c_vals + shift))
+        x, c_x, x_sq = kops.dual_x_full(kslab, lam, gamma, proj_kind,
+                                        proj_iters)
+        if shift is not None:
+            # kernel saw c+μ: subtract the shift term back out of cᵀx
+            if jnp.ndim(shift):
+                c_x = c_x - jnp.vdot(shift, x)
+            else:
+                c_x = c_x - shift * jnp.sum(x)
+        return x, c_x, x_sq
+    lam_e = lam[:, slab.dest_idx]
+    atl = jnp.einsum("nwm,mnw->nw", slab.a_vals, lam_e)
+    if shift is not None:
+        atl = atl + shift
+    u = -(atl + slab.c_vals) / gamma
+    x = projections.project(proj_kind, u, slab.ub, slab.s, slab.mask,
+                            iters=proj_iters)
+    return x, jnp.vdot(slab.c_vals, x), jnp.vdot(x, x)
 
 
 def _segment_ax(gvals_flat: jax.Array, flat_dest: jax.Array,
@@ -162,8 +210,10 @@ class MatchingObjective:
     `ax_mode` selects the Ax reduction (module docstring): "scatter"
     (paper-faithful segment-sum), "sorted" (§Perf it3: edges pre-sorted by
     destination at construction so the segmented sum takes the
-    `indices_are_sorted` fast path), or "aligned" (§Perf it4/it5: the
-    destination-major `AxPlan` gather-reduce, scatter-free).  The
+    `indices_are_sorted` fast path), "aligned" (§Perf it6/it7: the
+    value-carrying destination-major `AxPlan` — x-only hot path, no gvals
+    materialization), or "aligned_gvals" (§Perf it4/it5: the index-only
+    aligned gather-reduce over a materialized (E, m) gvals tensor).  The
     deprecated `sorted_scatter=True` flag is an alias for
     `ax_mode="sorted"`.
 
@@ -211,46 +261,81 @@ class MatchingObjective:
                                     for s in lp.slabs])
             self._perm = jnp.asarray(np.argsort(dests, kind="stable"))
             self._sorted_dest = jnp.asarray(np.sort(dests, kind="stable"))
-        elif ax_mode == "aligned":
+        elif ax_mode in ("aligned", "aligned_gvals"):
             if ax_plan is None:
                 from .instance import build_ax_plan
-                ax_plan = build_ax_plan(lp)
+                ax_plan = build_ax_plan(lp,
+                                        carry_values=(ax_mode == "aligned"))
+            if ax_mode == "aligned" and any(b.a_dm is None
+                                            for b in ax_plan.buckets):
+                raise ValueError(
+                    "ax_mode='aligned' (x-carry) needs a value-carrying "
+                    "plan; rebuild with build_ax_plan(lp, "
+                    "carry_values=True) or use ax_mode='aligned_gvals'")
             self._plan = jax.tree.map(jnp.asarray, ax_plan)
 
     @property
     def dual_shape(self) -> Tuple[int, int]:
         return (self.lp.m, self.lp.num_destinations)
 
-    def _reduce_ax(self, gval_parts, dtype):
-        """(m, J) Ax from per-slab flattened gvals, per the selected mode."""
+    @property
+    def _carry_x(self) -> bool:
+        """True when the sweep is x-only (value-carrying aligned mode):
+        slabs emit (E,)-flattened x parts instead of (E, m) gvals."""
+        return self.ax_mode == "aligned"
+
+    def _reduce_ax(self, parts, dtype):
+        """(m, J) Ax from per-slab flattened parts, per the selected mode.
+
+        For the x-carry "aligned" mode `parts` are (n·w,) x vectors (the
+        only dynamic per-edge array — concatenating them is O(E), not
+        O(E·m)); for every gvals mode they are (n·w, m) per-edge gradient
+        values.
+        """
         lp = self.lp
         J = lp.num_destinations
         if self.ax_mode == "aligned":
             from repro.kernels import ops as kops
+            return kops.ax_aligned_x(self._plan, jnp.concatenate(parts),
+                                     use_pallas=self.use_pallas,
+                                     out_dtype=dtype)
+        if self.ax_mode == "aligned_gvals":
+            from repro.kernels import ops as kops
             return kops.ax_aligned(self._plan,
-                                   jnp.concatenate(gval_parts, axis=0),
+                                   jnp.concatenate(parts, axis=0),
                                    use_pallas=self.use_pallas,
                                    out_dtype=dtype)
         if self.ax_mode == "sorted":
-            gvals = jnp.concatenate(gval_parts, axis=0)[self._perm]
+            gvals = jnp.concatenate(parts, axis=0)[self._perm]
             return _segment_ax(gvals, self._sorted_dest, J,
                                indices_are_sorted=True)
         ax = jnp.zeros((lp.m, J), dtype)
-        for slab, part in zip(lp.slabs, gval_parts):
+        for slab, part in zip(lp.slabs, parts):
             ax = ax + _segment_ax(part, slab.dest_idx.reshape(-1), J)
         return ax
 
     def _forward(self, lam: jax.Array, gamma: jax.Array, shift=None,
                  with_xsum: bool = False):
-        """Shared slab sweep: (Ax, cᵀx, ‖x‖², Σx) for any ax_mode."""
+        """Shared slab sweep: (Ax, cᵀx, ‖x‖², Σx) for any ax_mode.
+
+        The x-carry aligned mode runs the gvals-free `slab_xcarry` sweep;
+        every other mode keeps the legacy gvals-producing `slab_xgvals`
+        sweep untouched (the paper-faithful baselines).
+        """
         parts = []
         c_x = jnp.zeros((), lam.dtype)
         x_sq = jnp.zeros((), lam.dtype)
         x_sum = jnp.zeros((), lam.dtype)
+        carry = self._carry_x
         for slab, (kind, iters) in zip(self.lp.slabs, self._slab_proj):
-            x, gvals, c_s, sq_s = slab_xgvals(
-                slab, lam, gamma, kind, iters, self.use_pallas, shift)
-            parts.append(gvals.reshape(-1, slab.m))
+            if carry:
+                x, c_s, sq_s = slab_xcarry(
+                    slab, lam, gamma, kind, iters, self.use_pallas, shift)
+                parts.append(x.reshape(-1))
+            else:
+                x, gvals, c_s, sq_s = slab_xgvals(
+                    slab, lam, gamma, kind, iters, self.use_pallas, shift)
+                parts.append(gvals.reshape(-1, slab.m))
             c_x = c_x + c_s
             x_sq = x_sq + sq_s
             if with_xsum:
@@ -317,3 +402,20 @@ class GlobalCountObjective(MatchingObjective):
         infeas = jnp.linalg.norm(jnp.maximum(grad, 0.0))
         aux = ObjectiveAux(primal_obj=c_x, x_sq=x_sq, ax=ax, infeas=infeas)
         return g, grad, aux
+
+    def primal(self, lam_flat: jax.Array, gamma: jax.Array):
+        """Recover x*(λ) slab by slab from the flat (m·J+1,) dual vector.
+
+        The inherited `MatchingObjective.primal` would index λ_flat as if
+        it were the (m, J) block — reading garbage destinations — and drop
+        the global row's μ shift from u entirely.  Reshape the dest block
+        and thread μ through the shift hook, exactly as `calculate` does.
+        """
+        m, J = self.lp.m, self.lp.num_destinations
+        lam = lam_flat[:-1].reshape(m, J)
+        mu = lam_flat[-1]
+        return [
+            slab_xcarry(s, lam, gamma, kind, iters, self.use_pallas,
+                        shift=mu)[0]
+            for s, (kind, iters) in zip(self.lp.slabs, self._slab_proj)
+        ]

@@ -64,10 +64,19 @@ class AxBucket(NamedTuple):
     concatenated slab-edge space, padded to a common power-of-two width.
 
     Shapes (r = #destinations in bucket, w = padded width = bucket power
-    of two):
-      edge_idx: (r, w)  int32  flat edge positions (0 on padding)
-      mask:     (r, w)  bool   True for real incident edges
-      dest_ids: (r,)    int32  destination id j of each row
+    of two, m = #constraint families):
+      edge_idx: (r, w)     int32  flat edge positions (0 on padding)
+      mask:     (r, w)     bool   True for real incident edges
+      dest_ids: (r,)       int32  destination id j of each row
+      a_dm:     (r, w, m)  destination-major copy of the constraint
+                           weights, `a_dm[r, q] = a_flat[edge_idx[r, q]]`
+                           (0 on padding) — the *value-carrying* layout
+                           (DESIGN.md §3).  The weights are static, so
+                           packing them alongside the indices lets the
+                           aligned reduction consume the (E,) x vector
+                           directly instead of a materialized (E, m)
+                           gvals tensor.  None on plans packed with
+                           `carry_values=False` (index-only legacy plans).
 
     A leading shard axis may be prepended to every field (see
     `instance.build_sharded_ax_plan`); the per-row semantics are unchanged.
@@ -76,6 +85,7 @@ class AxBucket(NamedTuple):
     edge_idx: jax.Array
     mask: jax.Array
     dest_ids: jax.Array
+    a_dm: Optional[jax.Array] = None
 
     @property
     def rows(self) -> int:
@@ -95,6 +105,12 @@ class AxPlan(NamedTuple):
     flatten the per-edge gradient values gvals (edge order = slab
     concatenation order), gather each destination's incident values, and
     masked-row-sum — no scatter, no atomics, fixed shapes.
+
+    With `carry_values=True` (the default) each bucket additionally packs
+    the destination-major weight copy `a_dm`, and the reduction becomes
+    x-only: `ax[r, k] = Σ_q mask · a_dm[r, q, k] · x[edge_idx[r, q]]` —
+    the per-edge gradient tensor is never materialized at all
+    (`ops.ax_aligned_x`, DESIGN.md §3).
 
     buckets:  one AxBucket per ⌈log2 in-degree⌉ class; together the rows
               cover every destination exactly once (zero in-degree

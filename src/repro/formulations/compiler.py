@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.objectives import (AX_MODES, MatchingObjective, ObjectiveAux,
-                                   slab_xgvals)
+                                   slab_xcarry, slab_xgvals)
 from repro.core.preconditioning import row_normalize
 from repro.core.projections import ProjectionMap
 from repro.core.types import AxPlan, LPData
@@ -148,18 +148,28 @@ class ComposedObjective(MatchingObjective):
         Mirrors MatchingObjective._forward (which must stay untouched for
         the bitwise legacy-parity guarantees) with two generalizations:
         the per-slab shift from the coupling rows, and one weighted-sum
-        accumulator per row.  Keep the two sweeps in lockstep when editing
+        accumulator per row.  The coupling rows already consume x, so the
+        x-carry aligned mode is free here: collect the (E,) x parts
+        (gvals-free `slab_xcarry` sweep) and reduce through the
+        value-carrying plan.  Keep the sweeps in lockstep when editing
         either."""
         parts = []
         c_x = jnp.zeros((), lam.dtype)
         x_sq = jnp.zeros((), lam.dtype)
         wx = [jnp.zeros((), lam.dtype) for _ in self._global_rows]
+        carry = self._carry_x
         for si, (slab, (kind, iters)) in enumerate(
                 zip(self.lp.slabs, self._slab_proj)):
-            x, gvals, c_s, sq_s = slab_xgvals(
-                slab, lam, gamma, kind, iters, self.use_pallas,
-                self._shift_for(si, mus))
-            parts.append(gvals.reshape(-1, slab.m))
+            if carry:
+                x, c_s, sq_s = slab_xcarry(
+                    slab, lam, gamma, kind, iters, self.use_pallas,
+                    self._shift_for(si, mus))
+                parts.append(x.reshape(-1))
+            else:
+                x, gvals, c_s, sq_s = slab_xgvals(
+                    slab, lam, gamma, kind, iters, self.use_pallas,
+                    self._shift_for(si, mus))
+                parts.append(gvals.reshape(-1, slab.m))
             c_x = c_x + c_s
             x_sq = x_sq + sq_s
             for r, (w, s) in enumerate(zip(self._global_weights,
@@ -214,9 +224,9 @@ class ComposedObjective(MatchingObjective):
         xs = []
         for si, (slab, (kind, iters)) in enumerate(
                 zip(self.lp.slabs, self._slab_proj)):
-            x, _, _, _ = slab_xgvals(slab, lam, gamma, kind, iters,
-                                     self.use_pallas,
-                                     self._shift_for(si, mus))
+            x, _, _ = slab_xcarry(slab, lam, gamma, kind, iters,
+                                  self.use_pallas,
+                                  self._shift_for(si, mus))
             xs.append(x)
         return xs
 

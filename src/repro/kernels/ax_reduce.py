@@ -1,11 +1,25 @@
-"""Pallas TPU kernel: constraint-aligned gather-reduce for Ax (paper §6).
+"""Pallas TPU kernels: constraint-aligned gather-reduce for Ax (paper §6).
 
 The companion layout (`core.types.AxPlan`) turns the dual-gradient's
 `Ax` reduction from a destination-keyed scatter-add into a dense masked
-row-sum: each dual row owns a padded (width,) list of edge positions in
-the concatenated slab-edge space, so its Ax entry is
+row-sum.  Two variants:
+
+`ax_reduce_bucket` (gvals-consuming, legacy): each dual row gathers its
+incident per-edge gradient values from a materialized (E, m) tensor,
 
     ax[row, k] = Σ_q mask[row, q] · gvals[edge_idx[row, q], k].
+
+`ax_reduce_bucket_x` (value-carrying, DESIGN.md §3): the plan packs a
+static destination-major weight copy `a_dm`, so the reduction consumes
+the (E,) x vector alone,
+
+    ax[row, k] = Σ_q mask[row, q] · a_dm[row, q, k] · x[edge_idx[row, q]],
+
+and the (E, m) per-edge gradient tensor never exists — the only dynamic
+per-edge array crossing HBM is x.  `a_dm` tiles block-locally through an
+ordinary BlockSpec (it is bucket-shaped, not edge-space-shaped), so the
+staged-whole operand shrinks from (E, m) gvals to the (E,) x vector: a
+m·4x (f32) / m·2x (bf16→f32-idx) smaller VMEM residency.
 
 That is exactly the gather-based formulation cuPDLP-class GPU solvers use
 to retire atomics from the transpose product — every lane does independent
@@ -13,15 +27,16 @@ loads, the sum is a fixed-shape VPU reduction, and there is no write
 contention at all.
 
 Tiling mirrors proj.py: grid over row-blocks of one in-degree bucket; each
-kernel instance owns a (BLOCK_ROWS, width) tile of indices/mask.  The
-flattened per-edge gradient values are staged whole per instance (BlockSpec
-constant index map, like λ in dual_grad.py) because gather indices are
-global — fine at matching-workload sizes where gvals is the slab-edge
-space of one shard; production TPU deployments would chunk the edge space
-per slab and accumulate (see DESIGN.md §3).
+kernel instance owns a (BLOCK_ROWS, width) tile of indices/mask (+ the
+matching a_dm tile in the x variant).  The staged-whole operand (gvals or
+x) uses a BlockSpec constant index map, like λ in dual_grad.py, because
+gather indices are global — fine at matching-workload sizes where it is
+the slab-edge space of one shard; production TPU deployments would chunk
+the edge space per slab and accumulate (see DESIGN.md §3).
 
-Accumulation is always f32 (bf16 gvals included), matching dual_grad.py's
-scalar partials.
+Accumulation is always f32 (bf16 inputs included), matching dual_grad.py's
+scalar partials; products are formed in the input dtype — bit-matching the
+gvals = a ⊙ x the legacy path materializes.
 """
 from __future__ import annotations
 
@@ -82,4 +97,62 @@ def ax_reduce_bucket(gvals: jax.Array, edge_idx: jax.Array, mask: jax.Array,
         out_shape=jax.ShapeDtypeStruct((r_pad, m), jnp.float32),
         interpret=interpret,
     )(gvals, edge_idx, mask.astype(jnp.int32))
+    return out[:r]
+
+
+def _ax_reduce_x_kernel(x_ref, a_ref, idx_ref, mask_ref, out_ref):
+    x = x_ref[...]                           # (E,) whole edge space
+    a = a_ref[...]                           # (br, w, m) block-local
+    idx = idx_ref[...]                       # (br, w) int32
+    mask = mask_ref[...] != 0                # (br, w)
+    br, w, m = a.shape
+    xe = jnp.take(x, idx.reshape(-1), axis=0).reshape(br, w)
+    # m is tiny (1-4 constraint families): unrolled, one FMA row per family.
+    # Product in input dtype (== the gvals the legacy path materializes),
+    # accumulation in f32.
+    cols = []
+    for k in range(m):
+        prod = (a[:, :, k] * xe).astype(jnp.float32)
+        cols.append(jnp.sum(jnp.where(mask, prod, 0.0), axis=-1))
+    out_ref[...] = jnp.stack(cols, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def ax_reduce_bucket_x(x: jax.Array, a_dm: jax.Array, edge_idx: jax.Array,
+                       mask: jax.Array, interpret: bool = False,
+                       block_rows: int | None = None) -> jax.Array:
+    """Value-carrying masked gather row-sum of one AxBucket (module doc).
+
+    x: (E,) flattened x*(λ); a_dm: (r, w, m) static destination-major
+    weights; edge_idx/mask: (r, w).  Returns (r, m) float32 partial Ax
+    rows (bucket row order).  Only x is dynamic — the gathered operand is
+    m·times smaller than the gvals the legacy kernel stages.
+    """
+    r, w = edge_idx.shape
+    (E,) = x.shape
+    m = a_dm.shape[-1]
+    if E == 0 or r == 0:
+        return jnp.zeros((r, m), jnp.float32)
+    # idx + mask + a_dm tile + one gathered x tile resident at once
+    br = block_rows or min(_block_rows((m + 3) * w), max(r, 8))
+    r_pad = -(-r // br) * br
+    if r_pad != r:
+        pad = [(0, r_pad - r), (0, 0)]
+        edge_idx = jnp.pad(edge_idx, pad)
+        mask = jnp.pad(mask, pad)
+        a_dm = jnp.pad(a_dm, pad + [(0, 0)])
+    grid = (r_pad // br,)
+    out = pl.pallas_call(
+        _ax_reduce_x_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((E,), lambda i: (0,)),         # x: whole edge space
+            pl.BlockSpec((br, w, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, m), jnp.float32),
+        interpret=interpret,
+    )(x, a_dm, edge_idx, mask.astype(jnp.int32))
     return out[:r]

@@ -77,6 +77,112 @@ def _dual_grad_kernel(lam_ref, gamma_ref, a_ref, c_ref, d_ref, mask_ref,
     xsq_ref[0] = jnp.sum((x * x).astype(jnp.float32))
 
 
+def _dual_x_kernel(lam_ref, gamma_ref, a_ref, c_ref, d_ref, mask_ref,
+                   ub_ref, s_ref, x_ref, cx_ref, xsq_ref, *, iters: int):
+    """Gvals-free twin of `_dual_grad_kernel` (stages 1-3 + scalars).
+
+    Drops the kernel's largest output — the (br, w, m) per-edge gradient
+    tile and its HBM write — for the value-carrying aligned path
+    (DESIGN.md §3), where the Ax reduction consumes x directly via the
+    plan's static a_dm copy.  Keep the projection math in lockstep with
+    `_dual_grad_kernel` / proj.py / ref.boxcut_bisect_ref.
+    """
+    lam = lam_ref[...]                       # (m, J)
+    gamma = gamma_ref[0]
+    a = a_ref[...]                           # (br, w, m)
+    c = c_ref[...]                           # (br, w)
+    d = d_ref[...]                           # (br, w) int32
+    mask = mask_ref[...] != 0
+    ub = ub_ref[...]
+    s = s_ref[...]
+    br, w, m = a.shape
+
+    atl = jnp.zeros((br, w), a.dtype)
+    for k in range(m):
+        lam_k = jnp.take(lam[k], d.reshape(-1), axis=0).reshape(br, w)
+        atl = atl + a[:, :, k] * lam_k
+    u = -(atl + c) / gamma
+
+    neg = jnp.asarray(-1e30, u.dtype)
+    v = jnp.where(mask, u, neg)
+    f0 = jnp.sum(jnp.where(mask, jnp.clip(v, 0.0, ub), 0.0), axis=-1)
+    need = f0 > s
+    hi = jnp.max(v, axis=-1)
+    lo = jnp.minimum(jnp.zeros_like(hi), hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        xm = jnp.clip(v - mid[:, None], 0.0, ub)
+        f = jnp.sum(jnp.where(mask, xm, 0.0), axis=-1)
+        big = f > s
+        return jnp.where(big, mid, lo), jnp.where(big, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    tau = jnp.where(need, 0.5 * (lo + hi), 0.0)
+    x = jnp.where(mask, jnp.clip(v - tau[:, None], 0.0, ub), 0.0)
+
+    x_ref[...] = x.astype(x_ref.dtype)
+    cx_ref[0] = jnp.sum((c * x).astype(jnp.float32))
+    xsq_ref[0] = jnp.sum((x * x).astype(jnp.float32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("iters", "interpret", "block_rows"))
+def dual_x_slab(a_vals: jax.Array, c_vals: jax.Array, dest_idx: jax.Array,
+                mask: jax.Array, ub: jax.Array, s: jax.Array,
+                lam: jax.Array, gamma: jax.Array,
+                iters: int = DEFAULT_ITERS, interpret: bool = False,
+                block_rows: int | None = None):
+    """Fused x*(λ) + scalars for one slab, NO per-edge gradient output.
+
+    Returns (x (n,w), c_x scalar, x_sq scalar).  The (n, w, m) gvals HBM
+    write (and its VMEM tile) of `dual_grad_slab` is gone — the x-carry
+    aligned reduction never needs it.
+    """
+    n, w, m = a_vals.shape
+    J = lam.shape[1]
+    br = block_rows or _block_rows(w * (m + 2))
+    n_pad = -(-n // br) * br
+    if n_pad != n:
+        p2 = [(0, n_pad - n), (0, 0)]
+        a_vals = jnp.pad(a_vals, p2 + [(0, 0)])
+        c_vals = jnp.pad(c_vals, p2)
+        dest_idx = jnp.pad(dest_idx, p2)
+        mask = jnp.pad(mask, p2)
+        ub = jnp.pad(ub, p2)
+        s = jnp.pad(s, [(0, n_pad - n)], constant_values=1.0)
+    grid = (n_pad // br,)
+    nb = grid[0]
+    x, cx, xsq = pl.pallas_call(
+        functools.partial(_dual_x_kernel, iters=iters),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((lam.shape[0], J), lambda i: (0, 0)),   # λ: whole block
+            pl.BlockSpec((1,), lambda i: (0,)),                  # γ
+            pl.BlockSpec((br, w, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),                  # per-block c_x
+            pl.BlockSpec((1,), lambda i: (i,)),                  # per-block x_sq
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, w), c_vals.dtype),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lam, jnp.reshape(gamma, (1,)).astype(c_vals.dtype),
+      a_vals, c_vals, dest_idx, mask.astype(jnp.int32), ub, s)
+    return x[:n], jnp.sum(cx), jnp.sum(xsq)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("iters", "interpret", "block_rows"))
 def dual_grad_slab(a_vals: jax.Array, c_vals: jax.Array, dest_idx: jax.Array,

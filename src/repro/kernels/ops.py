@@ -63,6 +63,29 @@ def dual_xstar(slab: Slab, lam, gamma, proj_kind: str = "boxcut",
     return dual_grad_full(slab, lam, gamma, proj_kind, iters, interpret)[0]
 
 
+def dual_x_full(slab: Slab, lam, gamma, proj_kind: str = "boxcut",
+                iters: int = _proj.DEFAULT_ITERS,
+                interpret: bool | None = None):
+    """Gvals-free fused (x*, cᵀx, ‖x‖²) for one slab (kernel: dual_x_slab).
+
+    Entry point for the value-carrying aligned path
+    (`core.objectives.slab_xcarry(use_pallas=True)`): the kernel's largest
+    output — the (n, w, m) per-edge gradient tile — is dropped entirely;
+    the x-carry Ax reduction (`ax_aligned_x`) consumes x directly.
+    """
+    if proj_kind == "simplex":
+        big = jnp.full_like(slab.ub, 1e30)
+        slab = slab._replace(ub=big)
+    elif proj_kind not in ("boxcut", "box"):
+        raise NotImplementedError(
+            f"pallas path supports boxcut/simplex/box, got {proj_kind}")
+    if interpret is None:
+        interpret = _interpret_default()
+    return _dual_grad.dual_x_slab(
+        slab.a_vals, slab.c_vals, slab.dest_idx, slab.mask, slab.ub, slab.s,
+        lam, gamma, iters=iters, interpret=interpret)
+
+
 def ax_reduce_bucket(gvals, edge_idx, mask, interpret: bool | None = None):
     if interpret is None:
         interpret = _interpret_default()
@@ -98,3 +121,46 @@ def ax_aligned(plan: AxPlan, gvals: jax.Array, use_pallas: bool = False,
     ax = rows.at[plan.inv_perm].get(                   # (m, J)
         mode="promise_in_bounds").T
     return ax.astype(out_dtype or gvals.dtype)
+
+
+def ax_reduce_bucket_x(x, a_dm, edge_idx, mask, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _ax_reduce.ax_reduce_bucket_x(x, a_dm, edge_idx, mask,
+                                         interpret=interpret)
+
+
+def ax_aligned_x(plan: AxPlan, x: jax.Array, use_pallas: bool = False,
+                 interpret: bool | None = None, out_dtype=None) -> jax.Array:
+    """Value-carrying scatter-free (m, J) Ax: the x-only hot path.
+
+    x: (E,) x*(λ) values, flattened in slab concatenation order (the
+    plan's edge space).  The plan must be packed with `carry_values=True`
+    so every bucket carries its static destination-major weight copy
+    `a_dm`; the per-bucket reduction is then
+    `Σ_q mask · a_dm[r, q] · x[edge_idx[r, q]]` — the (E, m) per-edge
+    gradient tensor of `ax_aligned` never exists, and the only dynamic
+    per-edge array read is x itself.  Products form in the input dtype
+    (bit-matching the legacy gvals), accumulation is f32, assembly into
+    destination order is the same inv_perm gather.
+    """
+    rows = []
+    for b in plan.buckets:
+        if b.a_dm is None:
+            raise ValueError(
+                "ax_aligned_x needs a value-carrying plan; rebuild with "
+                "build_ax_plan(lp, carry_values=True)")
+        if use_pallas:
+            rows.append(ax_reduce_bucket_x(x, b.a_dm, b.edge_idx, b.mask,
+                                           interpret=interpret))
+        else:  # XLA fallback: identical math, plain take+multiply+sum
+            r, w = b.edge_idx.shape
+            xe = x.at[b.edge_idx.reshape(-1)].get(
+                mode="promise_in_bounds").reshape(r, w)
+            prod = (b.a_dm * xe[..., None]).astype(jnp.float32)
+            rows.append(jnp.sum(jnp.where(b.mask[..., None], prod, 0.0),
+                                axis=1))
+    rows = jnp.concatenate(rows, axis=0)               # (R, m) f32
+    ax = rows.at[plan.inv_perm].get(                   # (m, J)
+        mode="promise_in_bounds").T
+    return ax.astype(out_dtype or x.dtype)

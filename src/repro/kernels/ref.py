@@ -65,6 +65,31 @@ def ax_plan_ref(plan, gvals):
     return jnp.take(rows, plan.inv_perm, axis=0).T
 
 
+def ax_reduce_x_ref(x, a_dm, edge_idx, mask):
+    """Oracle for the value-carrying bucket reduction (ax_reduce.py):
+
+      out[r, k] = Σ_q mask[r, q] · a_dm[r, q, k] · x[edge_idx[r, q]]
+
+    x: (E,) flattened x*(λ); a_dm: (r, w, m); edge_idx/mask: (r, w).
+    The product is formed in the input dtype (matching the gvals = a ⊙ x
+    the legacy path materializes) and accumulated in float32.
+    Returns (r, m) float32.
+    """
+    r, w = edge_idx.shape
+    xe = jnp.take(x, edge_idx.reshape(-1), axis=0).reshape(r, w)
+    prod = (a_dm * xe[..., None]).astype(jnp.float32)
+    return jnp.sum(jnp.where(mask[..., None], prod, 0.0), axis=1)
+
+
+def ax_plan_x_ref(plan, x):
+    """Oracle for the full x-carry aligned reduction: (m, J) Ax from a
+    value-carrying plan and the (E,) x vector alone."""
+    rows = jnp.concatenate(
+        [ax_reduce_x_ref(x, b.a_dm, b.edge_idx, b.mask)
+         for b in plan.buckets], axis=0)
+    return jnp.take(rows, plan.inv_perm, axis=0).T
+
+
 def dual_xstar_ref(a_vals, c_vals, dest_idx, mask, ub, s, lam, gamma,
                    iters: int = 40):
     """Fused dual-gradient inner step, slab form (oracle for dual_grad.py):

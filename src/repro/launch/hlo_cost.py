@@ -166,8 +166,31 @@ def _trip_count(instr: Instr, comps) -> int:
     return 1
 
 
-def _comp_cost(comp: Computation, comps, memo, inside_fusion=False) -> Cost:
-    key = (comp.name, inside_fusion)
+def _comp_cost(comp: Computation, comps, memo, inside_fusion=False,
+               dynamic_only=False, is_entry=True) -> Cost:
+    def io_bytes(ins: Instr) -> float:
+        """operand + result bytes of one top-level instruction.
+
+        `dynamic_only` drops operands produced by constant / iota
+        instructions anywhere, and by `parameter` instructions of the
+        ENTRY computation only: entry parameters are the static problem
+        data (packed plans, coefficients) re-read identically every
+        iteration.  Parameters of sub-computations (while bodies,
+        called computations) are the loop-carried dynamic values and
+        stay counted.  What remains is the traffic the iteration itself
+        generates — the "dynamic HBM traffic" of DESIGN.md §3's
+        accounting.
+        """
+        def static(o: str) -> bool:
+            op = comp.instrs[o].op
+            return op in ("constant", "iota") or (op == "parameter"
+                                                  and is_entry)
+        ops_b = sum(
+            _type_bytes(comp.instrs[o].type_str) for o in ins.operands
+            if o in comp.instrs and not (dynamic_only and static(o)))
+        return _type_bytes(ins.type_str) + ops_b
+
+    key = (comp.name, inside_fusion, dynamic_only, is_entry)
     if key in memo:
         return memo[key]
     total = Cost()
@@ -177,9 +200,7 @@ def _comp_cost(comp: Computation, comps, memo, inside_fusion=False) -> Cost:
         if op == "dot":
             total.flops += _dot_flops(ins, comp)
             if not inside_fusion:
-                total.bytes += _type_bytes(ins.type_str) + sum(
-                    _type_bytes(comp.instrs[o].type_str)
-                    for o in ins.operands if o in comp.instrs)
+                total.bytes += io_bytes(ins)
         elif op in _COLLECTIVES or any(
                 op == f"{c}-start" for c in _COLLECTIVES):
             kind = op.replace("-start", "")
@@ -191,52 +212,61 @@ def _comp_cost(comp: Computation, comps, memo, inside_fusion=False) -> Cost:
             m = _CALLS_RE.search(ins.raw)
             if m and m.group(1) in comps:
                 sub = _comp_cost(comps[m.group(1)], comps, memo,
-                                 inside_fusion=True)
+                                 inside_fusion=True,
+                                 dynamic_only=dynamic_only,
+                                 is_entry=False)
                 total.add(Cost(flops=sub.flops, coll=sub.coll,
                                coll_count=sub.coll_count))
             if not inside_fusion:
-                total.bytes += _type_bytes(ins.type_str) + sum(
-                    _type_bytes(comp.instrs[o].type_str)
-                    for o in ins.operands if o in comp.instrs)
+                total.bytes += io_bytes(ins)
         elif op == "while":
             trips = _trip_count(ins, comps)
             mb, mc_ = _BODY_RE.search(ins.raw), _COND_RE.search(ins.raw)
             if mb and mb.group(1) in comps:
-                total.add(_comp_cost(comps[mb.group(1)], comps, memo), trips)
+                total.add(_comp_cost(comps[mb.group(1)], comps, memo,
+                                     dynamic_only=dynamic_only,
+                                     is_entry=False), trips)
             if mc_ and mc_.group(1) in comps:
-                total.add(_comp_cost(comps[mc_.group(1)], comps, memo), trips)
+                total.add(_comp_cost(comps[mc_.group(1)], comps, memo,
+                                     dynamic_only=dynamic_only,
+                                     is_entry=False), trips)
         elif op in ("call", "conditional", "async-start"):
             for m in (_TO_APPLY_RE.findall(ins.raw)
                       + _CALLS_RE.findall(ins.raw)):
                 if m in comps:
-                    total.add(_comp_cost(comps[m], comps, memo))
+                    total.add(_comp_cost(comps[m], comps, memo,
+                                         dynamic_only=dynamic_only,
+                                         is_entry=False))
         elif op in ("reduce", "sort", "scatter", "select-and-scatter",
                     "reduce-window", "map"):
             # tiny applied computations: ignore flops, count memory
             if not inside_fusion:
-                total.bytes += _type_bytes(ins.type_str) + sum(
-                    _type_bytes(comp.instrs[o].type_str)
-                    for o in ins.operands if o in comp.instrs)
+                total.bytes += io_bytes(ins)
         elif op in ("parameter", "constant", "tuple", "get-tuple-element",
                     "bitcast"):
             pass
         else:
             if not inside_fusion:
-                total.bytes += _type_bytes(ins.type_str) + sum(
-                    _type_bytes(comp.instrs[o].type_str)
-                    for o in ins.operands if o in comp.instrs)
+                total.bytes += io_bytes(ins)
     memo[key] = total
     return total
 
 
-def analyze(hlo_text: str) -> Dict[str, float]:
-    """Trip-count-aware per-device totals from compiled HLO text."""
+def analyze(hlo_text: str, dynamic_only: bool = False) -> Dict[str, float]:
+    """Trip-count-aware per-device totals from compiled HLO text.
+
+    `dynamic_only=True` excludes operand bytes that come straight from
+    parameters / constants (static problem data) — the remainder is the
+    traffic generated by the computation itself, the right denominator for
+    layout comparisons where the static side (a_vals, packed plans) is
+    identical-magnitude by construction.
+    """
     comps, entry = parse_module(hlo_text)
     if entry is None:
         return {"flops_per_device": 0.0, "bytes_per_device": 0.0,
                 "collective_bytes_per_device": 0.0, "collectives": {}}
     memo: Dict = {}
-    cost = _comp_cost(comps[entry], comps, memo)
+    cost = _comp_cost(comps[entry], comps, memo, dynamic_only=dynamic_only)
     return {
         "flops_per_device": cost.flops,
         "bytes_per_device": cost.bytes,
@@ -244,3 +274,61 @@ def analyze(hlo_text: str) -> Dict[str, float]:
         "collectives": dict(cost.coll),
         "collective_count": cost.coll_count,
     }
+
+
+def edge_space_result_bytes(hlo_text: str, leading_dim: int,
+                            dtypes: Tuple[str, ...] = ("f32", "bf16", "f16"),
+                            ) -> float:
+    """Bytes of entry-level materializations whose leading dimension equals
+    `leading_dim` (for the LP iteration: the concatenated slab-edge count E
+    — i.e. the (E, m) gvals tensor and/or the (E,) x vector).
+
+    Parameters / constants / tuple plumbing are excluded, so this is the
+    *dynamic* per-edge traffic the value-carrying layout targets
+    (DESIGN.md §3; consumed by benchmarks/perf_lp.run_bytes).
+    """
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        return 0.0
+    total = 0.0
+    for nm in comps[entry].order:
+        ins = comps[entry].instrs[nm]
+        if ins.op in ("parameter", "constant", "tuple",
+                      "get-tuple-element", "bitcast"):
+            continue
+        for dt, dd in _SHAPE_RE.findall(ins.type_str):
+            if dt not in dtypes:
+                continue
+            dims = [int(d) for d in dd.split(",")] if dd else []
+            if dims and dims[0] == leading_dim:
+                n = 1
+                for d in dims:
+                    n *= d
+                total += float(n) * _DTYPE_BYTES[dt]
+    return total
+
+
+def count_result_shape(hlo_text: str, dims: Tuple[int, ...],
+                       dtypes: Tuple[str, ...] = ("f32", "bf16", "f16"),
+                       ) -> int:
+    """Number of non-parameter instructions (any computation, fusion bodies
+    included) whose result contains an array of exactly `dims`.
+
+    The x-carry acceptance check: a lowering that never materializes the
+    (E, m) per-edge gradient tensor has count 0 for dims=(E, m) — if the
+    shape appears nowhere in the module text, it cannot be staged, fused,
+    or spilled anywhere.
+    """
+    comps, _ = parse_module(hlo_text)
+    want = ",".join(str(int(d)) for d in dims)
+    n = 0
+    for comp in comps.values():
+        for nm in comp.order:
+            ins = comp.instrs[nm]
+            if ins.op == "parameter":
+                continue
+            for dt, dd in _SHAPE_RE.findall(ins.type_str):
+                if dt in dtypes and dd == want:
+                    n += 1
+                    break
+    return n

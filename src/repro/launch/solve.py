@@ -53,9 +53,12 @@ def main():
                          "'matching' uses the distributed path, others "
                          "compile onto the local SolveEngine")
     ap.add_argument("--ax-mode", default=None,
-                    choices=["scatter", "sorted", "aligned"],
-                    help="Ax reduction layout for compiled formulations "
-                         "(default: aligned)")
+                    choices=["scatter", "sorted", "aligned",
+                             "aligned_gvals"],
+                    help="Ax reduction layout (default: aligned — the "
+                         "value-carrying x-only path; aligned_gvals is "
+                         "the legacy gvals-based aligned lowering; the "
+                         "distributed matching path maps sorted→scatter)")
     ap.add_argument("--iterations", type=int, default=200,
                     help="iteration cap (exact count when no tolerance is set)")
     ap.add_argument("--gamma", type=float, default=0.01)
@@ -138,9 +141,14 @@ def main():
                               (lp.m, lp.num_destinations))
         n = jax.device_count()
         mesh = make_mesh((n, 1), ("data", "model"))
+        # the distributed objective has no "sorted" mode (the perm would
+        # cross shard boundaries); fall back to the scatter baseline there
+        ax_mode = args.ax_mode or "aligned"
         res = solve_distributed(lp, cfg, mesh,
                                 lambda_axis="model" if args.lambda_sharded
                                 else None, lam0=lam0,
+                                ax_mode=("scatter" if ax_mode == "sorted"
+                                         else ax_mode),
                                 criteria=criteria, diagnostics_fn=on_check)
     else:
         obj = formulations.make_objective(

@@ -153,7 +153,8 @@ class TestLegacyParity:
         assert float(g0) == float(g1)
         np.testing.assert_array_equal(np.asarray(gr0), np.asarray(gr1))
 
-    @pytest.mark.parametrize("ax_mode", ["scatter", "sorted", "aligned"])
+    @pytest.mark.parametrize("ax_mode", ["scatter", "sorted", "aligned",
+                                         "aligned_gvals"])
     def test_matching_solve_trajectory_bitwise(self, lp_pc, ax_mode):
         legacy = Maximizer(CFG).maximize(
             MatchingObjective(lp_pc, ax_mode=ax_mode))
@@ -172,6 +173,36 @@ class TestLegacyParity:
                                       np.asarray(comp.stats.dual_obj))
         np.testing.assert_array_equal(np.asarray(legacy.lam),
                                       np.asarray(comp.lam))
+
+    def test_global_count_primal_matches_composed(self, lp):
+        """Regression for the inherited-primal bug: the legacy class used
+        MatchingObjective.primal, which indexed the flat (m·J+1,) λ as if
+        it were (m, J) — reading garbage — and dropped the μ shift from u
+        entirely.  The override must agree with ComposedObjective.primal
+        slab for slab."""
+        legacy = GlobalCountObjective(lp, count=8.0)
+        comp = make_objective("global_count", lp, params=dict(count=8.0))
+        rng = np.random.default_rng(7)
+        lam = jnp.asarray(rng.uniform(0, 0.5, legacy.dual_shape)
+                          .astype(np.float32))
+        gamma = jnp.float32(0.1)
+        xs_legacy = legacy.primal(lam, gamma)
+        xs_comp = comp.primal(lam, gamma)
+        assert len(xs_legacy) == len(xs_comp)
+        for a, b in zip(xs_legacy, xs_comp):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_global_count_primal_uses_mu(self, lp):
+        """μ must actually shift u: a large μ suppresses x (the bug made
+        primal μ-invariant)."""
+        obj = GlobalCountObjective(lp, count=8.0)
+        m, J = lp.m, lp.num_destinations
+        lam0 = jnp.zeros(m * J + 1, jnp.float32)
+        lam_mu = lam0.at[-1].set(1e3)
+        gamma = jnp.float32(0.1)
+        x0 = sum(float(jnp.sum(x)) for x in obj.primal(lam0, gamma))
+        x1 = sum(float(jnp.sum(x)) for x in obj.primal(lam_mu, gamma))
+        assert x0 > 0.0 and x1 < x0
 
 
 DEEP_CFG = SolveConfig(iterations=4000, gamma=0.05, gamma_init=0.8,

@@ -101,3 +101,71 @@ ENTRY %main (p: f32[8]) -> f32[8] {
 """
         res = hlo_cost.analyze(txt)
         assert res["collectives"]["all-reduce"] == 8 * 4 * 5  # 5 trips
+
+
+class TestShapeCensusAndDynamic:
+    def test_count_result_shape(self):
+        def f(a, b):
+            return jnp.sum(a @ b, axis=1)
+        A = jax.ShapeDtypeStruct((32, 16), jnp.float32)
+        B = jax.ShapeDtypeStruct((16, 24), jnp.float32)
+        txt = jax.jit(f).lower(A, B).compile().as_text()
+        assert hlo_cost.count_result_shape(txt, (32, 24)) >= 1  # the dot
+        assert hlo_cost.count_result_shape(txt, (999, 7)) == 0
+
+    def test_dynamic_only_excludes_static_reads(self):
+        def f(x):
+            return x * 2.0 + 1.0
+        X = jax.ShapeDtypeStruct((4096,), jnp.float32)
+        txt = jax.jit(f).lower(X).compile().as_text()
+        total = hlo_cost.analyze(txt)["bytes_per_device"]
+        dyn = hlo_cost.analyze(txt, dynamic_only=True)["bytes_per_device"]
+        # the parameter read disappears, the result write stays
+        assert 0 < dyn < total
+
+    def test_dynamic_only_counts_loop_carried_values(self):
+        """Sub-computation parameters are the dynamic loop carry, not
+        static problem data — a scan's carried reads must survive the
+        dynamic_only filter (multiplied by the trip count)."""
+        def f(x):
+            def body(c, _):
+                return c * 1.5 + 1.0, None
+            return jax.lax.scan(body, x, None, length=9)[0]
+        X = jax.ShapeDtypeStruct((4096,), jnp.float32)
+        txt = jax.jit(f).lower(X).compile().as_text()
+        dyn = hlo_cost.analyze(txt, dynamic_only=True)["bytes_per_device"]
+        # each of the 9 trips at least reads + writes the (4096,) carry
+        assert dyn >= 9 * 2 * 4096 * 4
+
+    def test_edge_space_result_bytes(self):
+        def f(x, a):
+            return jnp.concatenate([x * a, x + a])       # (2E,) dynamic
+        E = 1024
+        X = jax.ShapeDtypeStruct((E,), jnp.float32)
+        txt = jax.jit(f).lower(X, X).compile().as_text()
+        # the (2E,) concat result is an edge-space materialization; the
+        # (E,) parameters are not counted
+        assert hlo_cost.edge_space_result_bytes(txt, 2 * E) >= 2 * E * 4
+        assert hlo_cost.edge_space_result_bytes(txt, E) == 0.0
+
+    def test_xcarry_lowering_never_materializes_gvals(self):
+        """The tentpole acceptance check: the ax_mode='aligned' x-carry
+        lowering contains NO (E, m)-shaped tensor anywhere in the compiled
+        module, while the gvals-based aligned lowering does."""
+        import numpy as np
+        from repro.core import (InstanceSpec, MatchingObjective, generate,
+                                precondition)
+        spec = InstanceSpec(num_sources=300, num_destinations=40,
+                            avg_nnz_per_row=8, seed=5, num_families=2)
+        lp = jax.tree.map(jnp.asarray, generate(spec))
+        lp, _ = precondition(lp, row_norm=True)
+        E = sum(s.n * s.width for s in lp.slabs)
+        lam = jnp.zeros((lp.m, lp.num_destinations), jnp.float32)
+        gamma = jnp.float32(0.05)
+        counts = {}
+        for mode in ("aligned", "aligned_gvals"):
+            obj = MatchingObjective(lp, ax_mode=mode)
+            txt = jax.jit(obj.calculate).lower(lam, gamma).compile().as_text()
+            counts[mode] = hlo_cost.count_result_shape(txt, (E, lp.m))
+        assert counts["aligned_gvals"] >= 1     # gvals concat materialized
+        assert counts["aligned"] == 0           # x-carry: gvals never exists

@@ -197,6 +197,37 @@ class TestAllPathsShareEngine:
             assert engine._runners[k] is v
 
 
+class TestDonationSafety:
+    """The chunk runners donate the SolveState (no double-buffered dual
+    state).  The engine must still (a) keep the no-criteria/chunked
+    bit-identity (TestChunkingIdentity above runs against the donating
+    runners) and (b) never invalidate a caller-held λ0 — solve() copies
+    the initial state before the first donated call."""
+
+    def test_caller_lam0_survives_and_solves_repeat(self, lp):
+        cfg = SolveConfig(iterations=60, **CFG)
+        obj = MatchingObjective(lp)
+        lam0 = jnp.full(obj.dual_shape, 0.1, jnp.float32)
+        mx = Maximizer(cfg)
+        crit = StoppingCriteria(tol_grad_norm=0.0, check_every=7)
+        r1 = mx.maximize(obj, initial_value=lam0, criteria=crit)
+        # lam0 was aliased into 4 leaves of the initial state; donation
+        # must not have consumed the caller's buffer
+        assert float(jnp.sum(lam0)) == pytest.approx(0.1 * lam0.size)
+        r2 = mx.maximize(obj, initial_value=lam0, criteria=crit)
+        np.testing.assert_array_equal(np.asarray(r1.lam),
+                                      np.asarray(r2.lam))
+
+    def test_fixed_length_path_donates_safely_too(self, lp):
+        cfg = SolveConfig(iterations=40, **CFG)
+        obj = MatchingObjective(lp)
+        lam0 = jnp.zeros(obj.dual_shape, jnp.float32)
+        r1 = maximize(obj.calculate, lam0, cfg)
+        r2 = maximize(obj.calculate, lam0, cfg)   # lam0 reusable
+        np.testing.assert_array_equal(np.asarray(r1.lam),
+                                      np.asarray(r2.lam))
+
+
 class TestAdaptiveContinuation:
     def test_stall_decay_reaches_fixed_gamma_optimum(self, lp):
         obj = MatchingObjective(lp)
