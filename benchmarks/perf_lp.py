@@ -59,6 +59,12 @@ the CI convergence gate) and a formulation-subsystem row
 (`tol_multi_budget_aligned`): the multi_budget spec compiled through
 repro.formulations and solved to the same tolerances — the new subsystem
 stays on the perf trajectory from the day it lands.
+
+`run_serve` measures the primal serving subsystem (DESIGN.md §8) on a
+solved instance: streaming-extraction throughput in sources/sec (compile
+excluded via a warm-up pass) and microbatch query latency / sources-per-
+second through the λ-resident AllocationServer, plus the certificate the
+serve path is gated on (gap_rel, feasible).
 """
 from __future__ import annotations
 
@@ -343,3 +349,68 @@ def run_tolerance(quick: bool = False):
             "dual_rows": int(obj.dual_shape[0]),
         }})
     return rows
+
+
+def run_serve(quick: bool = False):
+    """Primal serving: extraction throughput + microbatch query latency
+    (module doc).  One solved instance; both measurements exclude compile
+    via a warm-up pass, matching the suite's timing protocol."""
+    import numpy as np
+    from repro import primal as primal_sub
+
+    I = 2_000 if quick else 10_000
+    spec, lp_host = bench_instance(I)
+    lp = jax.tree.map(jnp.asarray, lp_host)
+    lp, _ = precondition(lp, row_norm=True)
+    cfg = SolveConfig(iterations=4000, gamma=0.01, max_step=1e-1,
+                      initial_step=1e-5)
+    crit = StoppingCriteria(tol_rel_dual=1e-6, check_every=25,
+                            max_seconds=60.0 if quick else 300.0)
+    obj = MatchingObjective(lp, proj_kind="boxcut", proj_iters=20,
+                            ax_mode="aligned")
+    res = Maximizer(cfg).maximize(obj, criteria=crit)
+    jax.block_until_ready(res.lam)
+    gamma = jnp.float32(cfg.gamma)
+    chunk = 1024
+
+    # extraction throughput: warm-up compiles the per-(slab, chunk) row
+    # kernels, then one timed full pass
+    n_src = sum(s.n for s in lp.slabs)
+    primal_sub.extract_primal(obj, res.lam, gamma, chunk_rows=chunk)
+    t0 = time.perf_counter()
+    xs = primal_sub.extract_primal(obj, res.lam, gamma, chunk_rows=chunk)
+    dt_extract = time.perf_counter() - t0
+
+    # microbatch query latency through the λ-resident server
+    srv = primal_sub.AllocationServer(obj, res.lam, gamma, max_batch=64)
+    all_ids = srv.source_ids()
+    batch = 32
+    rng = np.random.default_rng(0)
+    kernels = srv.warmup()      # compile every (slab, pad-length) kernel
+    srv.reset_stats()
+    n_queries = 30 if quick else 100
+    for _ in range(n_queries):
+        srv.query(rng.choice(all_ids, size=batch, replace=False).tolist())
+    st = srv.stats()
+
+    cert = primal_sub.certify(obj, res.lam, gamma, xs=primal_sub.repair_witness(obj, xs))
+    return [{
+        "name": "perf_lp/serve",
+        "us_per_call": st.mean_ms * 1e3,
+        "derived": {
+            "instance": f"I{I}_J1000",
+            "solve_iterations": res.iterations_run,
+            "solve_converged": res.converged,
+            "extract_seconds": dt_extract,
+            "extract_sources_per_s": n_src / max(dt_extract, 1e-9),
+            "chunk_rows": chunk,
+            "query_batch": batch,
+            "query_p50_ms": st.p50_ms,
+            "query_p95_ms": st.p95_ms,
+            "query_sources_per_s": st.sources_per_s,
+            "queries": st.queries,
+            "warmup_kernels": kernels,
+            "certificate_gap_rel": cert.gap_rel,
+            "certificate_feasible": cert.feasible,
+            "certificate_valid": cert.valid,
+        }}]

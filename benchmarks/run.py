@@ -24,6 +24,9 @@ rest of the artifact; ``--fresh`` replaces the file wholesale).
   perf_lp_bytes  analytic HBM bytes/iteration of the three Ax lowerings
            from compiled HLO (launch/hlo_cost.py): the no-gvals and
            ≥2x dynamic edge-traffic acceptance checks
+  perf_lp_serve  primal serving (DESIGN.md §8): streaming-extraction
+           throughput (sources/sec) + λ-resident microbatch query
+           latency, gated on a valid duality-gap certificate
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 """
@@ -116,6 +119,7 @@ def _register():
         "perf_lp": lambda q: perf_lp.run(q),
         "perf_lp_tol": lambda q: perf_lp.run_tolerance(q),
         "perf_lp_bytes": lambda q: perf_lp.run_bytes(q),
+        "perf_lp_serve": lambda q: perf_lp.run_serve(q),
     })
 
 

@@ -1,0 +1,136 @@
+"""Allocation-server tour: solve → certify → serve → warm re-solve.
+
+    PYTHONPATH=src python examples/allocation_server.py [--quick]
+
+The production loop of the duals-to-decisions story (DESIGN.md §8) on one
+Appendix-B instance with the multi_budget formulation (capacity + global
+count/value caps):
+
+  1. solve to tolerance through the shared engine;
+  2. stream-extract the primal, round + repair it, and CERTIFY: a finite
+     nonnegative duality gap over a feasible witness, every constraint
+     family's slack within tolerance;
+  3. stand up the λ-resident AllocationServer and serve random microbatch
+     queries — decisions must be BITWISE equal to batch extraction;
+  4. nudge the instance (tighten the count cap) and warm re-solve from
+     the resident λ (γ-continuation skipped per the warm-start rule),
+     then re-certify the updated duals.
+
+Exit code is non-zero on an invalid certificate, a serving mismatch, or a
+non-converged solve — this file doubles as the CI serving smoke (--quick).
+"""
+import argparse
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (InstanceSpec, Maximizer, SolveConfig,
+                        StoppingCriteria, generate)
+from repro import formulations
+from repro import primal
+
+
+def fail(msg):
+    print(f"FAIL: {msg}")
+    sys.exit(1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small instance + looser tolerance (CI smoke)")
+    ap.add_argument("--sources", type=int, default=None)
+    ap.add_argument("--destinations", type=int, default=None)
+    ap.add_argument("--queries", type=int, default=None)
+    args = ap.parse_args()
+
+    I = args.sources or (600 if args.quick else 5_000)
+    J = args.destinations or (30 if args.quick else 200)
+    n_queries = args.queries or (25 if args.quick else 200)
+    spec = InstanceSpec(num_sources=I, num_destinations=J,
+                        avg_nnz_per_row=10, seed=11, num_families=2)
+    lp = jax.tree.map(jnp.asarray, generate(spec))
+    print(f"instance: {I} sources x {J} destinations x {lp.m} families")
+
+    cfg = SolveConfig(iterations=2000 if args.quick else 4000, gamma=0.05,
+                      gamma_init=0.8, gamma_decay_every=25,
+                      max_step=20.0, initial_step=1e-3)
+    crit = StoppingCriteria(tol_rel_dual=1e-5 if args.quick else 1e-6,
+                            check_every=50)
+    obj = formulations.make_objective("multi_budget", lp,
+                                      ax_mode="aligned", row_norm=True)
+    t0 = time.perf_counter()
+    res = Maximizer(cfg).maximize(obj, criteria=crit)
+    jax.block_until_ready(res.lam)
+    print(f"solved in {res.iterations_run} iters / "
+          f"{time.perf_counter() - t0:.1f}s ({res.stop_reason.value})\n")
+    if not res.converged:
+        fail("solve did not converge")
+    gamma = jnp.float32(cfg.gamma)
+
+    # -- 2. extract, round, certify ------------------------------------
+    xs = primal.extract_primal(obj, res.lam, gamma, chunk_rows=256)
+    cert = primal.certify(obj, res.lam, gamma)
+    print("fractional witness certificate:")
+    print(primal.format_certificate(cert))
+    if not cert.valid:
+        fail("fractional certificate invalid")
+    xhat = primal.greedy_repair(primal.threshold_round(xs, obj.lp), obj.lp,
+                                xs_frac=xs,
+                                global_rows=primal.global_row_caps(obj))
+    cert_int = primal.certify(obj, res.lam, gamma, xs=xhat)
+    print(f"\nintegral witness: value {cert_int.primal_value:.3f}, "
+          f"gap {cert_int.gap:.3f}, valid={cert_int.valid}")
+    if not cert_int.valid:
+        fail("integral certificate invalid")
+
+    # -- 3. serve microbatches, check bitwise parity -------------------
+    srv = primal.AllocationServer(obj, res.lam, gamma, config=cfg,
+                                  max_batch=64)
+    rng = np.random.default_rng(0)
+    all_ids = srv.source_ids()
+    batch = min(32, len(all_ids))
+    srv.warmup()                # cold-start control: compile query kernels
+    srv.reset_stats()
+    for _ in range(n_queries):
+        ids = rng.choice(all_ids, size=batch, replace=False).tolist()
+        decisions = srv.query(ids)
+        for sid in ids:
+            d = decisions[sid]
+            if not np.array_equal(d.x, xs[d.slab_index][d.row]):
+                fail(f"served decision for source {sid} != batch extraction")
+    st = srv.stats()
+    print(f"\nserved {st.sources} sources in {st.queries} microbatch "
+          f"queries: p50 {st.p50_ms:.2f} ms, p95 {st.p95_ms:.2f} ms, "
+          f"{st.sources_per_s:.0f} sources/s — bitwise equal to batch "
+          f"extraction")
+
+    # -- 4. instance update + warm re-solve from the resident λ --------
+    count_used = cert.slacks["count_cap"].used
+    tight = formulations.make_objective(
+        "multi_budget", lp,
+        params=dict(count_cap=0.8 * count_used,
+                    value_cap=cert.slacks["value_cap"].limit),
+        ax_mode="aligned", row_norm=True)
+    res_w = srv.warm_resolve(criteria=crit, obj=tight)
+    print(f"\nwarm re-solve after tightening count cap to "
+          f"{0.8 * count_used:.1f}: {res_w.iterations_run} iters "
+          f"({res_w.stop_reason.value}, vs {res.iterations_run} cold), "
+          f"gamma[0]={float(res_w.stats.gamma[0]):.3f} (no continuation)")
+    if not res_w.converged:
+        fail("warm re-solve did not converge")
+    cert_w = primal.certify(tight, srv.lam, gamma)
+    print("updated certificate: "
+          f"gap {cert_w.gap:.3f} (rel {cert_w.gap_rel:.2e}), "
+          f"count used {cert_w.slacks['count_cap'].used:.1f} / "
+          f"{cert_w.slacks['count_cap'].limit:.1f}, valid={cert_w.valid}")
+    if not cert_w.valid:
+        fail("post-update certificate invalid")
+    print("\nallocation server tour OK")
+
+
+if __name__ == "__main__":
+    main()

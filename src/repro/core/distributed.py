@@ -131,6 +131,28 @@ class DistributedMatchingObjective:
     def dual_shape(self):
         return (self.lp.m, self.lp.num_destinations)
 
+    def primal(self, lam: jax.Array, gamma: jax.Array):
+        """Recover the (padded) primal x*(λ) slab by slab.
+
+        The latent gap this closes: the distributed objective previously
+        had NO primal surface at all, so duals solved distributed could
+        not be turned into decisions without rebuilding a single-device
+        objective by hand (the same bug class as the
+        GlobalCountObjective.primal misindex fixed earlier — a dual layout
+        with no matching primal path).  x*(λ) is row-local, so no
+        collective is needed: each shard projects its own slab rows; rows
+        added by `pad_for_sharding` come back fully masked (source_id −1).
+        λ must be full: in λ-sharded mode it is re-replicated first.
+        """
+        if self.lambda_axis is not None:
+            lam = jax.device_put(
+                jax.device_get(lam), NamedSharding(self.mesh, P()))
+        return [
+            objectives.slab_xstar(s, lam, gamma, self.proj_kind,
+                                  self.proj_iters, self.use_pallas)
+            for s in self.lp.slabs
+        ]
+
     def calculate(self, lam: jax.Array, gamma: jax.Array):
         source_axes = self.source_axes
         lam_axis = self.lambda_axis

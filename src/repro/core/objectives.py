@@ -359,6 +359,41 @@ class MatchingObjective:
             for s, (kind, iters) in zip(self.lp.slabs, self._slab_proj)
         ]
 
+    def _dual_parts(self, lam: jax.Array):
+        """Decompose a dual vector into (dest-block λ, per-slab shift fn).
+
+        The uniform hook behind every primal-recovery surface: subclasses
+        with extra dual rows (GlobalCountObjective's μ, ComposedObjective's
+        coupling rows) override it so `primal_rows` — and with it the whole
+        serving/extraction subsystem (DESIGN.md §8) — works unchanged on
+        any formulation.  The shift fn maps a slab index to the coupling
+        contribution consumed by `slab_xcarry`'s shift hook (None, scalar,
+        or a per-slab (n, w) array)."""
+        return lam, lambda si: None
+
+    def primal_rows(self, lam: jax.Array, gamma: jax.Array,
+                    slab_index: int, rows: jax.Array) -> jax.Array:
+        """x*(λ) for a subset of one slab's source rows — the serving path.
+
+        Gathers the requested rows of slab `slab_index` (and, for array
+        shifts, the matching shift rows) and runs the same per-row sweep as
+        the batch `primal()`: every operation is row-local (einsum over the
+        family axis, per-row projection), so the result is BITWISE equal to
+        the corresponding rows of the full-slab recovery — asserted in
+        tests/test_primal_serving.py.  `rows` is a 1-D int array of row
+        indices into the slab; duplicates are allowed (the extraction tail
+        chunk clamps its window).
+        """
+        lam_block, shift_fn = self._dual_parts(lam)
+        slab = self.lp.slabs[slab_index]
+        kind, iters = self._slab_proj[slab_index]
+        sub = Slab(*(leaf[rows] for leaf in slab))
+        shift = shift_fn(slab_index)
+        if shift is not None and jnp.ndim(shift):
+            shift = shift[rows]
+        return slab_xcarry(sub, lam_block, gamma, kind, iters,
+                           self.use_pallas, shift)[0]
+
 
 class GlobalCountObjective(MatchingObjective):
     """The paper's §4 motivating extension: add a global count constraint
@@ -419,3 +454,10 @@ class GlobalCountObjective(MatchingObjective):
                         shift=mu)[0]
             for s, (kind, iters) in zip(self.lp.slabs, self._slab_proj)
         ]
+
+    def _dual_parts(self, lam_flat: jax.Array):
+        """Dest block + the uniform μ shift of the global count row, so the
+        row-subset serving path recovers the same x* as `primal`."""
+        m, J = self.lp.m, self.lp.num_destinations
+        mu = lam_flat[-1]
+        return lam_flat[:-1].reshape(m, J), lambda si: mu

@@ -230,6 +230,70 @@ class ComposedObjective(MatchingObjective):
             xs.append(x)
         return xs
 
+    def _dual_parts(self, lam_flat: jax.Array):
+        """Dest block + the composed per-slab coupling shift, so the
+        row-subset serving path (`primal_rows`, DESIGN.md §8) recovers
+        exactly the same x* as the batch `primal` above."""
+        m, J = self.lp.m, self.lp.num_destinations
+        k = m * J
+        lam = lam_flat[:k].reshape(m, J)
+        mus = [lam_flat[k + r] for r in range(len(self._global_rows))]
+        return lam, lambda si: self._shift_for(si, mus)
+
+    def _row_usage(self, xs, r: int) -> float:
+        """Σ w_r·x over all slabs at a candidate primal point, in ORIGINAL
+        (un-normalized) row units (count rows keep raw all-ones weights;
+        weighted tensors carry σ folded in — undo it)."""
+        w = self._global_weights[r]
+        return sum(float(jnp.sum(x)) if w is None
+                   else float(jnp.vdot(w[si], jnp.asarray(x)))
+                   / self._scales[r]
+                   for si, x in enumerate(xs))
+
+    def family_report(self, xs):
+        """Per-family primal slack report at a candidate point xs — the
+        certification hook (DESIGN.md §8).
+
+        `xs` is a list of per-slab (n, w) primal values (padding entries
+        ignored via the slab masks).  Each constraint family reports its
+        own residual through the spec hooks (`DestCapacityFamily.residual`,
+        `GlobalBudgetFamily.residual`): the dest-capacity block in the
+        compiled (possibly row-normalized) units, coupling rows in original
+        units (matching `global_usage`).  Returns plain dicts so the primal
+        subsystem can wrap them without a layering cycle:
+        {label: {kind, used, limit, max_violation, norm_violation}}.
+        """
+        import numpy as np
+        # lazy import: primal is the serving layer above formulations, but
+        # rounding.primal_ax is its dependency-free numpy accumulation —
+        # the certification-critical computation must exist exactly once
+        from repro.primal.rounding import primal_ax
+        lp = self.lp
+        ax = primal_ax(lp, xs)
+        dest = self.formulation.dest
+        res = np.asarray(dest.residual(ax, np.asarray(lp.b)))
+        out = {dest.label: {
+            "kind": "dest_capacity",
+            "used": float(np.linalg.norm(np.maximum(res, 0.0))),
+            "limit": 0.0,
+            "max_violation": float(res.max()) if res.size else 0.0,
+            "norm_violation": float(np.linalg.norm(np.maximum(res, 0.0))),
+            "scale": 1.0 + float(np.abs(np.asarray(lp.b)).max()
+                                 if np.asarray(lp.b).size else 0.0),
+        }}
+        for r, row in enumerate(self._global_rows):
+            used = self._row_usage(xs, r)
+            viol = float(row.residual(used))
+            out[row.label] = {
+                "kind": "global",
+                "used": used,
+                "limit": self._limits_raw[r],
+                "max_violation": viol,
+                "norm_violation": max(viol, 0.0),
+                "scale": 1.0 + abs(self._limits_raw[r]),
+            }
+        return out
+
     def global_usage(self, lam_flat: jax.Array, gamma: jax.Array):
         """{row label: (Σ w·x at x*(λ), limit)} in ORIGINAL (un-normalized)
         row units — the constraint audit."""

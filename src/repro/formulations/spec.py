@@ -56,6 +56,14 @@ class DestCapacityFamily:
     rhs_scale: float = 1.0
     label: str = "dest_capacity"
 
+    def residual(self, ax, b):
+        """Primal residual Ax − b of this family's rows at a candidate x —
+        the certification hook (DESIGN.md §8): positive entries are
+        violations, non-positive entries are slack.  `ax`/`b` are the
+        (m_sel, J) arrays of the compiled LP (i.e. in the row-normalized
+        units when the compiler's row_norm hook is on)."""
+        return ax - b
+
 
 @dataclasses.dataclass(frozen=True)
 class GlobalBudgetFamily:
@@ -70,6 +78,12 @@ class GlobalBudgetFamily:
     limit: float
     weight: Union[str, Tuple[str, int]] = "count"
     label: str = "global"
+
+    def residual(self, used: float) -> float:
+        """Primal residual Σw·x − limit at a candidate x, in ORIGINAL
+        (un-normalized) row units — the certification hook (DESIGN.md §8):
+        positive means the coupling row is violated."""
+        return used - self.limit
 
     def validate(self, num_lp_families: int) -> None:
         w = self.weight

@@ -142,7 +142,10 @@ def dual_x_slab(a_vals: jax.Array, c_vals: jax.Array, dest_idx: jax.Array,
     """
     n, w, m = a_vals.shape
     J = lam.shape[1]
-    br = block_rows or _block_rows(w * (m + 2))
+    # batch-aware tile pick: a serve-path microbatch (DESIGN.md §8) must
+    # not be padded up to the full VMEM tile (per-row results don't depend
+    # on the grid split)
+    br = block_rows or _block_rows(w * (m + 2), n=n)
     n_pad = -(-n // br) * br
     if n_pad != n:
         p2 = [(0, n_pad - n), (0, 0)]
@@ -196,7 +199,7 @@ def dual_grad_slab(a_vals: jax.Array, c_vals: jax.Array, dest_idx: jax.Array,
     """
     n, w, m = a_vals.shape
     J = lam.shape[1]
-    br = block_rows or _block_rows(w * (m + 3))
+    br = block_rows or _block_rows(w * (m + 3), n=n)
     n_pad = -(-n // br) * br
     if n_pad != n:
         p2 = [(0, n_pad - n), (0, 0)]

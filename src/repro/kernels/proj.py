@@ -26,9 +26,22 @@ DEFAULT_ITERS = 40
 _VMEM_TILE_BYTES = 2 * 1024 * 1024
 
 
-def _block_rows(width: int, dtype_bytes: int = 4) -> int:
+def _block_rows(width: int, dtype_bytes: int = 4,
+                n: int | None = None) -> int:
+    """Rows per kernel instance: VMEM-capped, and — when the batch row
+    count `n` is known — never larger than the batch needs.
+
+    The cap matters on the serving path (DESIGN.md §8): a microbatch query
+    projects a handful of gathered rows, and without the `n` cap it would
+    be padded up to the full VMEM tile (512 rows at small widths — 10-100×
+    wasted work per query).  Batch-aware picks change only the grid/padding
+    split, never the per-row results (each row's bisection is independent).
+    """
     rows = _VMEM_TILE_BYTES // max(width * dtype_bytes, 1)
     rows = max(8, min(512, rows))
+    if n is not None:
+        # smallest power of two covering the batch, floored at 8 rows
+        rows = min(rows, max(8, 1 << (max(n - 1, 1)).bit_length()))
     # power of two for clean grid math
     return 1 << (rows.bit_length() - 1)
 
@@ -71,7 +84,7 @@ def proj_boxcut(v: jax.Array, ub: jax.Array, s: jax.Array, mask: jax.Array,
     validation in this container); on TPU the same code lowers via Mosaic.
     """
     n, w = v.shape
-    br = block_rows or _block_rows(w)
+    br = block_rows or _block_rows(w, n=n)
     n_pad = -(-n // br) * br
     if n_pad != n:
         pad = lambda a, fill: jnp.pad(a, [(0, n_pad - n)] + [(0, 0)] * (a.ndim - 1),

@@ -13,6 +13,8 @@ nudge starts from the previous optimum and stops in far fewer iterations).
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import hashlib
 import time
 
 import numpy as np
@@ -26,20 +28,91 @@ from repro.launch.mesh import make_mesh
 from repro import formulations
 
 
-def save_duals(path: str, lam: jax.Array) -> None:
-    """Dump a dual solution to .npz (key 'lam')."""
-    np.savez(path, lam=np.asarray(lam))
+def instance_fingerprint(lp) -> str:
+    """Deterministic digest of an LP instance (shapes + rhs + objective).
+
+    Stored alongside saved duals so a warm re-solve can verify it is
+    resuming the SAME instance before trusting the dump's achieved-γ
+    metadata.  Hashes the slab geometry, b, and every slab's c_vals —
+    cheap (one pass over O(E) bytes) and collision-proof for the purpose
+    (distinguishing re-generated instances, not adversaries).
+    """
+    h = hashlib.sha256()
+    h.update(repr((int(lp.m), int(lp.num_destinations),
+                   tuple((int(s.n), int(s.width))
+                         for s in lp.slabs))).encode())
+    h.update(np.ascontiguousarray(np.asarray(lp.b)).tobytes())
+    for s in lp.slabs:
+        h.update(np.ascontiguousarray(np.asarray(s.c_vals)).tobytes())
+    return h.hexdigest()
 
 
-def load_duals(path: str, expected_shape=None) -> jax.Array:
-    """Load a dual vector saved by `save_duals`, checking the shape."""
-    lam = np.load(path)["lam"]
+def save_duals(path: str, lam: jax.Array, gamma: float = None,
+               fingerprint: str = None) -> None:
+    """Dump a dual solution to .npz (key 'lam'), with optional metadata:
+    the γ the solve achieved and the instance fingerprint — what a warm
+    re-solve needs to decide, by itself, that continuation can be skipped.
+    """
+    extra = {}
+    if gamma is not None:
+        extra["achieved_gamma"] = np.float64(gamma)
+    if fingerprint is not None:
+        extra["fingerprint"] = np.asarray(fingerprint)
+    np.savez(path, lam=np.asarray(lam), **extra)
+
+
+def load_duals(path: str, expected_shape=None, with_meta: bool = False):
+    """Load a dual vector saved by `save_duals`, checking the shape.
+
+    `with_meta=True` additionally returns the metadata dict (possibly
+    empty for dumps written before metadata existed): keys
+    `achieved_gamma` (float) and `fingerprint` (str) when present.
+    """
+    with np.load(path) as z:
+        lam = z["lam"]
+        meta = {}
+        if "achieved_gamma" in z:
+            meta["achieved_gamma"] = float(z["achieved_gamma"])
+        if "fingerprint" in z:
+            meta["fingerprint"] = str(z["fingerprint"])
     if expected_shape is not None and tuple(lam.shape) != tuple(expected_shape):
         raise ValueError(
             f"warm-start duals at {path} have shape {lam.shape}, but this "
             f"solve needs {tuple(expected_shape)} (different instance or "
             f"formulation?)")
-    return jnp.asarray(lam)
+    lam = jnp.asarray(lam)
+    return (lam, meta) if with_meta else lam
+
+
+def apply_warm_start_policy(cfg: SolveConfig, meta: dict,
+                            fingerprint: str):
+    """Decide whether a warm start may skip γ-continuation (and do it).
+
+    The dump's metadata is the authority: when it shows the duals were
+    achieved at (or below) this solve's target γ on the SAME instance,
+    re-running continuation from gamma_init would only march the loaded λ
+    away from its optimum — so it is stripped automatically instead of
+    relying on the caller to remember the rule.  Returns
+    (possibly-modified cfg, skipped: bool, reason: str); without matching
+    metadata the cfg passes through untouched and `reason` says why.
+    """
+    continuation = (cfg.gamma_init is not None
+                    and cfg.gamma_init > cfg.gamma)
+    if not continuation:
+        return cfg, False, "no continuation configured"
+    g = meta.get("achieved_gamma")
+    if g is None:
+        return cfg, False, "dump has no achieved-gamma metadata"
+    fp = meta.get("fingerprint")
+    if fp is not None and fp != fingerprint:
+        return cfg, False, "instance fingerprint mismatch"
+    if g > cfg.gamma * (1.0 + 1e-6):
+        return (cfg, False,
+                f"dump stopped at gamma={g:.4g} > target {cfg.gamma:.4g}")
+    cfg = dataclasses.replace(cfg, gamma_init=None,
+                              adaptive_continuation=False)
+    return cfg, True, (f"duals already at gamma={g:.4g} on this instance; "
+                       f"continuation skipped")
 
 
 def main():
@@ -74,9 +147,20 @@ def main():
     ap.add_argument("--save-duals", default=None, metavar="PATH",
                     help="write the final λ to PATH (.npz) after the solve")
     ap.add_argument("--warm-start", default=None, metavar="PATH",
-                    help="initialize λ from a previous --save-duals dump "
-                         "(omit --continuation: re-running the γ schedule "
-                         "from gamma_init would forfeit the head start)")
+                    help="initialize λ from a previous --save-duals dump; "
+                         "when the dump's metadata shows the duals already "
+                         "reached the target γ on this instance, "
+                         "γ-continuation is skipped automatically")
+    # primal serving & certification (DESIGN.md §8)
+    ap.add_argument("--export-primal", default=None, metavar="DIR",
+                    help="stream-extract x*(λ) after the solve and write "
+                         ".npz decision shards to DIR")
+    ap.add_argument("--certify", action="store_true",
+                    help="after the solve, extract+repair a feasible primal "
+                         "witness and print the duality-gap certificate")
+    ap.add_argument("--chunk-rows", type=int, default=4096,
+                    help="source rows per extraction chunk for "
+                         "--export-primal/--certify")
     # convergence-controlled termination (DESIGN.md §4); any of these flags
     # switches the solve from fixed-length to tolerance-terminated
     ap.add_argument("--tol-infeas", type=float, default=None,
@@ -126,10 +210,22 @@ def main():
         ap.error("--lambda-sharded is only supported with "
                  "--formulation matching (composed formulations solve on "
                  "a single replicated λ)")
-    if args.warm_start and continuation:
-        print("WARNING: --warm-start with --continuation re-runs the γ "
-              "schedule from gamma_init and will march the loaded λ away "
-              "from its optimum, forfeiting the head start")
+    fingerprint = instance_fingerprint(lp)
+
+    def load_warm(path, expected_shape):
+        """Load warm-start duals and apply the continuation-skip policy."""
+        nonlocal cfg, continuation
+        lam0, meta = load_duals(path, expected_shape, with_meta=True)
+        cfg, skipped, reason = apply_warm_start_policy(cfg, meta,
+                                                       fingerprint)
+        if skipped:
+            continuation = False
+            print(f"warm start: {reason}")
+        elif continuation:
+            print(f"WARNING: --warm-start with --continuation re-runs the "
+                  f"γ schedule from gamma_init and will march the loaded λ "
+                  f"away from its optimum ({reason})")
+        return lam0
 
     t0 = time.perf_counter()
     if args.formulation == "matching":
@@ -137,8 +233,8 @@ def main():
             lp, _ = precondition(lp, row_norm=True)
         lam0 = None
         if args.warm_start:
-            lam0 = load_duals(args.warm_start,
-                              (lp.m, lp.num_destinations))
+            lam0 = load_warm(args.warm_start,
+                             (lp.m, lp.num_destinations))
         n = jax.device_count()
         mesh = make_mesh((n, 1), ("data", "model"))
         # the distributed objective has no "sorted" mode (the perm would
@@ -159,7 +255,7 @@ def main():
         print(f"formulation '{args.formulation}': "
               f"{obj.dual_shape[0]} dual rows "
               f"({ {k: f'{v.start}:{v.stop}' for k, v in obj.row_slices().items()} })")
-        lam0 = (load_duals(args.warm_start, obj.dual_shape)
+        lam0 = (load_warm(args.warm_start, obj.dual_shape)
                 if args.warm_start else None)
         res = Maximizer(cfg).maximize(obj, initial_value=lam0,
                                       criteria=criteria,
@@ -175,8 +271,38 @@ def main():
           f"infeas {float(res.stats.infeas[-1]):.3e}; "
           f"gamma {float(res.stats.gamma[-1]):.4f}")
     if args.save_duals:
-        save_duals(args.save_duals, res.lam)
-        print(f"saved duals -> {args.save_duals}")
+        save_duals(args.save_duals, res.lam,
+                   gamma=float(res.stats.gamma[-1]),
+                   fingerprint=fingerprint)
+        print(f"saved duals -> {args.save_duals} "
+              f"(gamma={float(res.stats.gamma[-1]):.4g}, fingerprinted)")
+
+    if args.export_primal or args.certify:
+        from repro import primal as primal_sub
+        gamma_final = jnp.float32(float(res.stats.gamma[-1]))
+        if args.formulation == "matching":
+            # serving/certification run single-host over the same
+            # (preconditioned) LP the distributed solve consumed; λ is in
+            # the same row-normalized space, so x*(λ) matches
+            from repro.core import MatchingObjective
+            serve_obj = MatchingObjective(lp, ax_mode=args.ax_mode
+                                          or "aligned")
+        else:
+            serve_obj = obj
+        if args.export_primal:
+            t0 = time.perf_counter()
+            paths = primal_sub.write_shards(serve_obj, res.lam, gamma_final,
+                                            args.export_primal,
+                                            chunk_rows=args.chunk_rows)
+            dt = time.perf_counter() - t0
+            n_src = sum(s.n for s in serve_obj.lp.slabs)
+            print(f"exported {len(paths)} decision shards "
+                  f"({n_src} sources) -> {args.export_primal} in {dt:.1f}s "
+                  f"({n_src / max(dt, 1e-9):.0f} sources/s)")
+        if args.certify:
+            cert = primal_sub.certify(serve_obj, res.lam, gamma_final,
+                                      chunk_rows=args.chunk_rows)
+            print(primal_sub.format_certificate(cert))
 
 
 if __name__ == "__main__":

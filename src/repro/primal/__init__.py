@@ -1,0 +1,39 @@
+"""Primal serving & certification subsystem (DESIGN.md §8).
+
+The solver's product is the dual vector λ; this package is everything
+downstream of it — the "duals to decisions" layer the production story
+serves traffic from:
+
+  extract    streaming blockwise x*(λ) recovery over source-row chunks
+             (+ .npz shard writer) — never materializes more than a chunk
+  rounding   threshold / top-k integral rounding and capacity-respecting
+             repair (the feasible witness construction)
+  certify    duality-gap certificates: γ-deregularized dual bound vs
+             feasible-witness value, per-family slack reports
+  server     the λ-resident microbatch allocation query engine with a
+             warm-resolve hook for instance updates
+
+    from repro.primal import certify, AllocationServer, extract_primal
+    cert = certify(obj, res.lam, cfg.gamma)       # checkable, not a stop reason
+    srv = AllocationServer(obj, res.lam, cfg.gamma)
+    decisions = srv.query([12, 507, 90210])
+"""
+from .extract import (PrimalChunk, extract_primal, iter_primal_chunks,
+                      primal_rows_fn, read_shards, write_shards)
+from .rounding import (greedy_repair, primal_ax, scale_repair,
+                       threshold_round, topk_round)
+from .certify import (Certificate, FamilySlack, certify, family_slacks,
+                      format_certificate, global_row_caps, primal_value,
+                      repair_witness, x_sq_bound)
+from .server import AllocationServer, DecisionRow, QueryStats
+
+__all__ = [
+    "PrimalChunk", "extract_primal", "iter_primal_chunks", "primal_rows_fn",
+    "read_shards", "write_shards",
+    "greedy_repair", "primal_ax", "scale_repair", "threshold_round",
+    "topk_round",
+    "Certificate", "FamilySlack", "certify", "family_slacks",
+    "format_certificate", "global_row_caps", "primal_value",
+    "repair_witness", "x_sq_bound",
+    "AllocationServer", "DecisionRow", "QueryStats",
+]

@@ -1,0 +1,293 @@
+"""Solution certification: duality-gap bounds and per-family slack reports.
+
+"Converged" as reported by the solve loop is a *stop reason*; serving
+wants a *certificate* — numbers a consumer can check without trusting the
+solver (DESIGN.md §8, after cuPDLP.jl's matched gap/KKT surface).  For the
+minimization LP  min cᵀx  s.t. Ax ≤ b, x ∈ C  and its ridge-perturbed
+dual g_γ(λ) = min_{x∈C} cᵀx + (γ/2)‖x‖² + λᵀ(Ax − b), two facts make the
+certificate:
+
+  * weak duality + γ-deregularization: for any λ ≥ 0,
+        g_γ(λ) − (γ/2)·B  ≤  OPT_LP,
+    where B ≥ max_{x∈C} ‖x‖² is a compile-time bound from the block
+    geometry (`x_sq_bound`); and
+  * any *feasible* x̂ gives  OPT_LP ≤ cᵀx̂.
+
+So  gap = cᵀx̂ − (g_γ(λ) − (γ/2)B)  is a certified optimality gap: finite,
+and nonnegative whenever x̂ is genuinely feasible — which the per-family
+slack report verifies independently (host-side numpy accumulation, not
+the engine's Ax path).  Formulations report each constraint family
+through the spec hooks (`ComposedObjective.family_report`): the
+dest-capacity block in compiled (row-normalized) units, coupling rows in
+original units.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from .extract import extract_primal
+from .rounding import primal_ax, scale_repair
+
+
+class FamilySlack(NamedTuple):
+    """One constraint family's primal residual report at the witness x̂."""
+
+    label: str
+    kind: str               # "dest_capacity" | "global"
+    used: float             # Σw·x̂ (global) / ‖(Ax̂−b)₊‖ (dest block)
+    limit: float            # row limit (global) / 0.0 (dest block)
+    max_violation: float    # worst signed residual (≤ 0 means slack)
+    norm_violation: float   # ‖positive residuals‖₂
+    violation_rel: float    # max_violation / family scale (1 + |rhs|)
+
+
+class Certificate(NamedTuple):
+    """The duals-to-decisions certificate (module doc).
+
+    `dual_bound ≤ OPT ≤ primal_value` whenever `feasible` — so `gap` (their
+    difference) certifies the witness x̂ within `gap` of LP-optimal, with
+    `deregularization = (γ/2)·B` the price of the ridge term.
+    """
+
+    dual_value: float          # g_γ(λ) from the engine's calculate
+    gamma: float
+    x_sq_bound: float          # B: compile-time bound on ‖x‖² over C
+    deregularization: float    # (γ/2)·B
+    dual_bound: float          # g_γ(λ) − (γ/2)·B  ≤ OPT
+    primal_value: float        # cᵀx̂ of the witness
+    gap: float                 # primal_value − dual_bound
+    gap_rel: float             # gap / max(1, |primal_value|)
+    slacks: Dict[str, FamilySlack]
+    max_violation_rel: float   # worst family violation_rel
+    feasible: bool             # every family within `tol`
+    tol: float
+
+    @property
+    def valid(self) -> bool:
+        """A servable certificate: finite nonnegative gap on a feasible
+        witness (tiny negative float noise tolerated at `tol` scale)."""
+        return (self.feasible and np.isfinite(self.gap)
+                and self.gap >= -self.tol * max(1.0, abs(self.primal_value)))
+
+
+def x_sq_bound(lp) -> float:
+    """Compile-time bound B ≥ max ‖x‖² over the blockwise constraint set.
+
+    Per source row, two valid bounds combine: Σ_j x² ≤ Σ_j ub² (box), and —
+    when the simplex budget s is finite — Σ_j x² ≤ max_ub·Σ_j x ≤ max_ub·s
+    as well as ≤ s².  Take the per-row minimum of whichever are finite
+    (equality blocks Σx = s satisfy the same bounds).
+    """
+    total = 0.0
+    for slab in lp.slabs:
+        ub = np.where(np.asarray(slab.mask),
+                      np.asarray(slab.ub, np.float64), 0.0)
+        s = np.asarray(slab.s, np.float64)
+        box = np.sum(ub * ub, axis=1)                       # Σ ub²
+        ubmax = ub.max(axis=1) if ub.shape[1] else np.zeros(len(s))
+        budget = np.where(np.isfinite(s), s * np.minimum(s, ubmax), np.inf)
+        total += float(np.sum(np.minimum(box, budget)))
+    return total
+
+
+def primal_value(lp, xs: Sequence[np.ndarray]) -> float:
+    """cᵀx̂ (minimization convention: c = −value) at a candidate point."""
+    val = 0.0
+    for slab, x in zip(lp.slabs, xs):
+        xv = np.where(np.asarray(slab.mask), np.asarray(x, np.float64), 0.0)
+        val += float(np.sum(np.asarray(slab.c_vals, np.float64) * xv))
+    return val
+
+
+def _fallback_family_report(obj, xs) -> Dict[str, dict]:
+    """Dest-block (+ GlobalCountObjective's count row) report for legacy
+    objectives without the formulations `family_report` hook."""
+    lp = obj.lp
+    ax = primal_ax(lp, xs)
+    res = ax - np.asarray(lp.b, np.float64)
+    b = np.asarray(lp.b)
+    out = {"dest_capacity": {
+        "kind": "dest_capacity",
+        "used": float(np.linalg.norm(np.maximum(res, 0.0))),
+        "limit": 0.0,
+        "max_violation": float(res.max()) if res.size else 0.0,
+        "norm_violation": float(np.linalg.norm(np.maximum(res, 0.0))),
+        "scale": 1.0 + float(np.abs(b).max() if b.size else 0.0),
+    }}
+    count = getattr(obj, "count", None)
+    if count is not None:
+        used = sum(float(np.where(np.asarray(s.mask),
+                                  np.asarray(x, np.float64), 0.0).sum())
+                   for s, x in zip(lp.slabs, xs))
+        out["global_count"] = {
+            "kind": "global", "used": used, "limit": float(count),
+            "max_violation": used - float(count),
+            "norm_violation": max(used - float(count), 0.0),
+            "scale": 1.0 + abs(float(count)),
+        }
+    return out
+
+
+def _block_report(obj, xs) -> dict:
+    """Residual report for the blockwise simple-constraint set C itself.
+
+    The row families above only cover the *complex* rows; a witness must
+    also sit in C — box bounds, per-source budgets (inequality for
+    simplex/boxcut, EQUALITY for simplex_eq blocks).  Without this check a
+    repaired witness that shrank an equality block's row sum below s would
+    certify as feasible while `OPT ≤ cᵀx̂` is unproven.  Projection kinds
+    come from the objective's per-slab table when present.
+    """
+    kinds = getattr(obj, "_slab_proj", None)
+    worst = 0.0     # violation in x units
+    scale = 1.0
+    for si, (slab, x) in enumerate(zip(obj.lp.slabs, xs)):
+        mask = np.asarray(slab.mask)
+        xv = np.where(mask, np.asarray(x, np.float64), 0.0)
+        ub = np.where(mask, np.asarray(slab.ub, np.float64), np.inf)
+        worst = max(worst, float(np.max(-xv, initial=0.0)))      # x ≥ 0
+        box = xv - ub
+        worst = max(worst, float(np.max(box[np.isfinite(box)],
+                                        initial=0.0)))          # x ≤ ub
+        s = np.asarray(slab.s, np.float64)
+        fin = np.isfinite(s)
+        if fin.any():
+            resid = xv.sum(axis=1)[fin] - s[fin]
+            kind = kinds[si][0] if kinds is not None else "boxcut"
+            if kind == "simplex_eq":
+                resid = np.abs(resid)                           # Σx = s
+            worst = max(worst, float(np.max(resid, initial=0.0)))
+            scale = max(scale, 1.0 + float(np.max(s[fin])))
+    return {"kind": "blocks", "used": worst, "limit": 0.0,
+            "max_violation": worst, "norm_violation": worst,
+            "scale": scale}
+
+
+def family_slacks(obj, xs) -> Dict[str, FamilySlack]:
+    """Per-family slack report at a candidate point, as FamilySlack rows:
+    the complex-row families (formulations hook when available, dest-block
+    fallback otherwise) plus the blockwise constraint set C itself."""
+    raw = (obj.family_report(xs) if hasattr(obj, "family_report")
+           else _fallback_family_report(obj, xs))
+    raw = dict(raw, blocks=_block_report(obj, xs))
+    out = {}
+    for label, d in raw.items():
+        scale = d.get("scale", 1.0)
+        out[label] = FamilySlack(
+            label=label, kind=d["kind"], used=d["used"], limit=d["limit"],
+            max_violation=d["max_violation"],
+            norm_violation=d["norm_violation"],
+            violation_rel=d["max_violation"] / scale)
+    return out
+
+
+def global_row_caps(obj):
+    """[(per-slab weight arrays | None, limit)] of every coupling row of
+    `obj`, in ORIGINAL units — the shape `rounding.greedy_repair` consumes.
+
+    Understands compiled formulations (weights with the Jacobi σ un-folded)
+    and the legacy GlobalCountObjective (`count` attr → one all-ones row);
+    plain MatchingObjective yields no rows.
+    """
+    rows = getattr(obj, "_global_rows", None)
+    if not rows:
+        count = getattr(obj, "count", None)
+        return [(None, float(count))] if count is not None else []
+    out = []
+    for r in range(len(rows)):
+        w = obj._global_weights[r]
+        if w is None:
+            out.append((None, obj._limits_raw[r]))
+        else:
+            out.append(([np.asarray(ws, np.float64) / obj._scales[r]
+                         for ws in w], obj._limits_raw[r]))
+    return out
+
+
+def repair_witness(obj, xs: Sequence[np.ndarray],
+                   eps: float = 1e-6) -> Sequence[np.ndarray]:
+    """Make a fractional candidate feasible for EVERY constraint family.
+
+    Two monotone shrinks compose: `scale_repair` fixes the dest-capacity
+    rows per destination, then one uniform factor fixes any still-violated
+    coupling row (global weights are nonnegative by construction — count,
+    value = −c ≥ 0, lp_family a ≥ 0 — so a uniform shrink scales each
+    row's usage linearly).  Shrinking can only loosen dest rows, budgets,
+    and box bounds, so the result is feasible across all families.
+    """
+    xs = scale_repair(xs, obj.lp, eps=eps)
+    f = 1.0
+    for s in family_slacks(obj, xs).values():
+        if s.kind == "global" and s.used > s.limit and s.used > 0:
+            f = min(f, (1.0 - eps) * s.limit / s.used)
+    if f < 1.0:
+        xs = [np.where(np.asarray(slab.mask),
+                       np.asarray(x) * f, 0.0).astype(np.asarray(x).dtype)
+              for slab, x in zip(obj.lp.slabs, xs)]
+    return xs
+
+
+def certify(obj, lam, gamma, xs: Optional[Sequence[np.ndarray]] = None,
+            tol: float = 1e-5, chunk_rows: int = 4096) -> Certificate:
+    """Build the duals-to-decisions certificate (module doc).
+
+    `xs` is the primal witness; when omitted, it is stream-extracted from
+    λ and made feasible across every family by `repair_witness` (the
+    default witness).  Pass a rounded+repaired candidate to certify an
+    integral serving plan instead.  `tol` bounds the per-family relative
+    violation a witness may carry and still count as feasible.
+
+    Equality blocks (simplex_eq): the shrink-based repairs break Σx = s,
+    and the `blocks` family in the slack report will flag that — the
+    certificate comes back INVALID rather than silently claiming a bound
+    an infeasible witness cannot support.  Supply an equality-preserving
+    witness via `xs` to certify such formulations.
+    """
+    g = float(obj.calculate(jnp.asarray(lam),
+                            jnp.asarray(gamma, jnp.float32))[0])
+    if xs is None:
+        xs = repair_witness(obj, extract_primal(obj, lam, gamma,
+                                                chunk_rows=chunk_rows))
+    slacks = family_slacks(obj, xs)
+    worst = max((s.violation_rel for s in slacks.values()), default=0.0)
+    B = x_sq_bound(obj.lp)
+    dereg = 0.5 * float(gamma) * B
+    p_val = primal_value(obj.lp, xs)
+    gap = p_val - (g - dereg)
+    return Certificate(
+        dual_value=g, gamma=float(gamma), x_sq_bound=B,
+        deregularization=dereg, dual_bound=g - dereg,
+        primal_value=p_val, gap=gap,
+        gap_rel=gap / max(1.0, abs(p_val)),
+        slacks=slacks, max_violation_rel=worst,
+        feasible=worst <= tol, tol=tol)
+
+
+def format_certificate(cert: Certificate) -> str:
+    """Human-readable certificate block (the CLI / example report)."""
+    lines = [
+        f"dual value g_γ(λ)        {cert.dual_value:.6f}   (γ = {cert.gamma:.4g})",
+        f"deregularization (γ/2)B  {cert.deregularization:.6f}   "
+        f"(B = {cert.x_sq_bound:.4g})",
+        f"certified dual bound     {cert.dual_bound:.6f}  <=  OPT",
+        f"primal witness value     {cert.primal_value:.6f}  >=  OPT",
+        f"duality gap              {cert.gap:.6f}   "
+        f"(relative {cert.gap_rel:.3e})",
+    ]
+    for s in cert.slacks.values():
+        if s.kind == "global":
+            lines.append(
+                f"family {s.label:<16} used {s.used:.3f} / limit {s.limit:.3f}"
+                f"   violation {max(s.max_violation, 0.0):.2e}")
+        else:
+            lines.append(
+                f"family {s.label:<16} ‖(Ax−b)₊‖ {s.norm_violation:.2e}"
+                f"   worst row {s.max_violation:+.2e}")
+    lines.append(
+        f"certificate: {'VALID' if cert.valid else 'INVALID'} "
+        f"(feasible={cert.feasible}, worst rel violation "
+        f"{cert.max_violation_rel:.2e}, tol {cert.tol:.0e})")
+    return "\n".join(lines)

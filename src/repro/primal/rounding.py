@@ -1,0 +1,187 @@
+"""Integral rounding and capacity-respecting repair of extracted decisions.
+
+The regularized dual optimum yields a *fractional* x*(λ); serving and
+certification both want a point that is actually feasible — and, for
+matching-style blocks, often integral ({0, ub} allocations).  This module
+is deliberately host-side numpy: the repaired point is the independent
+witness the duality-gap certificate rides on (primal.certify), so it must
+not share the engine's code path.
+
+Three candidate constructions:
+
+  threshold_round   x̂ = ub where x ≥ frac·ub (per edge) else 0 — the
+                    classic LP-rounding for box-cut matching blocks.
+  topk_round        keep each source's k largest-x edges at ub, zero the
+                    rest (slate serving: "pick k items per user").
+  scale_repair      fractional: scale every edge by (1−eps)·min over its
+                    families of b/(Ax) at its destination — monotone
+                    shrink, so box and per-source budget constraints are
+                    preserved and every capacity row becomes feasible by
+                    construction.  The default certificate witness.
+
+plus the repair that makes an integral candidate feasible:
+
+  greedy_repair     visit candidate edges in decreasing fractional-x
+                    order; keep an edge at ub only if the source's simplex
+                    budget and every family's destination headroom still
+                    allow the full ub — otherwise drop it.  Output is
+                    integral AND feasible (capacities, budgets, box).
+
+Rounding targets blocks with finite per-edge upper bounds (matching /
+boxcut / box); entries with non-finite ub pass through unrounded.
+Equality blocks (simplex_eq) are out of scope for integral rounding —
+dropping an edge breaks Σx = s; use `scale_repair`-free extraction there.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+def primal_ax(lp, xs: Sequence[np.ndarray]) -> np.ndarray:
+    """(m, J) A·x of a candidate per-slab primal point, host numpy.
+
+    Padded edge positions are masked out, so callers may pass arrays with
+    junk on padding.  This is the certification subsystem's independent
+    accumulation — deliberately NOT the engine's Ax reduction.
+    """
+    m, J = lp.b.shape
+    ax = np.zeros((m, J))
+    for slab, x in zip(lp.slabs, xs):
+        xv = np.where(np.asarray(slab.mask), np.asarray(x, np.float64), 0.0)
+        flat_dest = np.asarray(slab.dest_idx).reshape(-1)
+        av = np.asarray(slab.a_vals, np.float64)
+        for k in range(m):
+            ax[k] += np.bincount(flat_dest,
+                                 weights=(av[..., k] * xv).reshape(-1),
+                                 minlength=J)
+    return ax
+
+
+def threshold_round(xs: Sequence[np.ndarray], lp,
+                    frac: float = 0.5) -> List[np.ndarray]:
+    """Per-edge threshold rounding: x̂ = ub where x ≥ frac·ub, else 0."""
+    out = []
+    for slab, x in zip(lp.slabs, xs):
+        x = np.asarray(x)
+        ub = np.asarray(slab.ub)
+        mask = np.asarray(slab.mask)
+        roundable = mask & np.isfinite(ub) & (ub > 0)
+        xhat = np.where(roundable & (x >= frac * ub), ub, 0.0)
+        out.append(np.where(roundable, xhat,
+                            np.where(mask, x, 0.0)).astype(x.dtype))
+    return out
+
+
+def topk_round(xs: Sequence[np.ndarray], lp, k: int = 1) -> List[np.ndarray]:
+    """Keep each source's k largest-x edges at ub, zero the rest.
+
+    Only edges with x > 0 are eligible (a source with fewer than k active
+    edges keeps just its active ones).  Non-finite-ub entries pass through
+    unrounded, as in `threshold_round`.
+    """
+    out = []
+    for slab, x in zip(lp.slabs, xs):
+        x = np.asarray(x)
+        ub = np.asarray(slab.ub)
+        mask = np.asarray(slab.mask)
+        roundable = mask & np.isfinite(ub) & (ub > 0)
+        score = np.where(roundable & (x > 0), x, -np.inf)
+        keep = np.zeros_like(score, dtype=bool)
+        kk = min(k, score.shape[1])
+        top = np.argpartition(-score, kk - 1, axis=1)[:, :kk]
+        np.put_along_axis(keep, top, True, axis=1)
+        keep &= np.isfinite(score)
+        xhat = np.where(keep, ub, 0.0)
+        out.append(np.where(roundable, xhat,
+                            np.where(mask, x, 0.0)).astype(x.dtype))
+    return out
+
+
+def scale_repair(xs: Sequence[np.ndarray], lp,
+                 eps: float = 1e-6) -> List[np.ndarray]:
+    """Fractional capacity repair (module doc): feasible by construction.
+
+    Every edge is scaled by (1−eps)·min_k b_kj/(Ax)_kj over its families at
+    its destination (clipped at 1).  Scaling is a monotone shrink, so
+    0 ≤ x' ≤ x keeps box bounds and per-source budgets; each capacity row
+    (k, j) ends at Σ a·x·factor ≤ (1−eps)·b_kj < b_kj wherever it was
+    violated.  The eps margin absorbs float rounding so the output passes
+    a strict feasibility check.
+    """
+    ax = primal_ax(lp, xs)
+    b = np.asarray(lp.b, np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        f = np.where(ax > b, (1.0 - eps) * b / np.maximum(ax, 1e-300), 1.0)
+    f = np.minimum(f, 1.0)                      # (m, J) per-row factors
+    f_dest = f.min(axis=0)                      # (J,) min over families
+    out = []
+    for slab, x in zip(lp.slabs, xs):
+        x = np.asarray(x)
+        fac = f_dest[np.asarray(slab.dest_idx)]
+        out.append(np.where(np.asarray(slab.mask),
+                            x * fac, 0.0).astype(x.dtype))
+    return out
+
+
+def greedy_repair(xs_round: Sequence[np.ndarray], lp,
+                  xs_frac: Optional[Sequence[np.ndarray]] = None,
+                  global_rows: Sequence[tuple] = (),
+                  eps: float = 1e-9) -> List[np.ndarray]:
+    """Capacity-respecting repair of an integral candidate (module doc).
+
+    `xs_frac` (default: the candidate itself) orders the greedy pass —
+    pass the fractional x*(λ) so the repair prefers the edges the LP
+    optimum liked most.  Keeps every accepted edge at its full ub, so the
+    output stays integral; drops an edge entirely when the source budget,
+    any family's destination headroom, or any coupling-row headroom cannot
+    take the full ub.  `global_rows` is a list of
+    (per-slab weight arrays | None for all-ones, limit) pairs in original
+    units — `primal.certify.global_row_caps(obj)` builds it from any
+    objective, so the repaired point is feasible for composed formulations
+    (multi_budget's count/value caps) too.
+    """
+    scores = xs_round if xs_frac is None else xs_frac
+    m, J = lp.b.shape
+    cap_left = np.asarray(lp.b, np.float64).copy()
+    g_left = np.asarray([lim for _, lim in global_rows], np.float64)
+    out = [np.zeros_like(np.asarray(x), dtype=np.float64)
+           for x in xs_round]
+    # flatten candidates across slabs: (score, slab, row, col)
+    cand = []
+    for si, (slab, xh, sc) in enumerate(zip(lp.slabs, xs_round, scores)):
+        xh = np.asarray(xh)
+        pos = np.nonzero(np.asarray(slab.mask) & (xh > 0))
+        if len(pos[0]):
+            cand.append((np.asarray(sc)[pos], np.full(len(pos[0]), si),
+                         pos[0], pos[1]))
+    if not cand:
+        return [o.astype(np.float32) for o in out]
+    score = np.concatenate([c[0] for c in cand])
+    order = np.argsort(-score, kind="stable")
+    sis = np.concatenate([c[1] for c in cand])[order]
+    rrs = np.concatenate([c[2] for c in cand])[order]
+    qqs = np.concatenate([c[3] for c in cand])[order]
+    src_left = [np.asarray(s.s, np.float64).copy() for s in lp.slabs]
+    for si, r, q in zip(sis, rrs, qqs):
+        slab = lp.slabs[si]
+        amount = float(np.asarray(slab.ub)[r, q])
+        if not np.isfinite(amount) or amount <= 0:
+            continue
+        if src_left[si][r] < amount - eps:
+            continue
+        j = int(np.asarray(slab.dest_idx)[r, q])
+        a = np.asarray(slab.a_vals, np.float64)[r, q]       # (m,)
+        if np.any(a * amount > cap_left[:, j] + eps):
+            continue
+        contrib = np.asarray(
+            [amount if w is None else float(w[si][r, q]) * amount
+             for w, _ in global_rows], np.float64)
+        if np.any(contrib > g_left + eps):
+            continue
+        out[si][r, q] = amount
+        src_left[si][r] -= amount
+        cap_left[:, j] -= a * amount
+        g_left -= contrib
+    return [o.astype(np.float32) for o in out]

@@ -1,0 +1,225 @@
+"""AllocationServer — the λ-resident online allocation query engine.
+
+The serving half of the duals-to-decisions story (DESIGN.md §8): the dual
+vector λ — m·J + a few floats, regardless of edge count — stays resident
+on device, and each request for a batch of sources is answered by
+recovering exactly those sources' decisions: gather their slab rows,
+run the same per-row projection sweep as the solve loop
+(`MatchingObjective.primal_rows`), return x*(λ).  No precomputed
+allocation table exists anywhere; decisions are a pure function of
+(λ, γ, instance), which is what makes replication trivial — ship λ, not x.
+
+Request path mechanics:
+
+  * routing: a host-side source-id → (slab, row) index built once at
+    construction;
+  * microbatching: each query's rows are grouped per slab and padded to a
+    power-of-two batch length (row 0 repeated; overhang dropped), so the
+    jitted row-subset kernels — shared with the streaming extractor via
+    `extract.primal_rows_fn` — compile once per (slab, batch-length) and
+    are reused across queries *and* across extraction runs;
+  * measurement: every query records wall-clock latency; `stats()`
+    summarizes count / mean / p50 / p95 / sources-per-second.
+
+Served decisions are BITWISE equal to batch extraction at the same λ
+(same compiled per-row sweep, row-independent math) — asserted in
+tests/test_primal_serving.py and the examples/allocation_server.py smoke.
+
+`warm_resolve` is the instance-update hook: when budgets/rhs move, the
+server re-solves *from its resident λ* with γ-continuation disabled (the
+established warm-start rule: re-running the schedule from gamma_init
+would march λ away from the loaded optimum), then swaps the new λ in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, NamedTuple, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import Maximizer, SolveConfig, StoppingCriteria
+from repro.core.types import SolveResult
+
+from .extract import primal_rows_fn
+
+
+class DecisionRow(NamedTuple):
+    """One source's served allocation: its slab row and the decisions."""
+
+    source_id: int
+    slab_index: int
+    row: int
+    dest_idx: np.ndarray   # (w,) destination ids (0 on padding)
+    mask: np.ndarray       # (w,) True on real edges
+    x: np.ndarray          # (w,) allocation per edge (0 on padding)
+
+
+class QueryStats(NamedTuple):
+    queries: int
+    sources: int
+    mean_ms: float
+    p50_ms: float
+    p95_ms: float
+    sources_per_s: float
+
+
+def _pad_pow2(n: int, floor: int = 8) -> int:
+    return max(floor, 1 << (max(n - 1, 1)).bit_length())
+
+
+class AllocationServer:
+    """Microbatch allocation server over a solved objective (module doc).
+
+    obj      any objective exposing `primal_rows` (MatchingObjective and
+             subclasses, compiled formulations);
+    lam      the converged dual vector (device-resident from here on);
+    gamma    the γ the duals were solved at (decisions are x*_γ(λ));
+    config   optional SolveConfig used by `warm_resolve` (its continuation
+             fields are stripped there);
+    max_batch  per-slab microbatch cap — longer queries are chunked.
+    """
+
+    def __init__(self, obj, lam, gamma, config: Optional[SolveConfig] = None,
+                 max_batch: int = 256):
+        self.obj = obj
+        self.lam = jnp.asarray(lam)
+        self.gamma = jnp.asarray(gamma, jnp.float32)
+        self.config = config
+        self.max_batch = int(max_batch)
+        self._latencies = []
+        self._sources_served = 0
+        self._build_routes()
+
+    def _build_routes(self):
+        self._route: Dict[int, tuple] = {}
+        self._dest = []
+        self._mask = []
+        for si, slab in enumerate(self.obj.lp.slabs):
+            ids = np.asarray(slab.source_ids)
+            self._dest.append(np.asarray(slab.dest_idx))
+            self._mask.append(np.asarray(slab.mask))
+            for row, sid in enumerate(ids.tolist()):
+                if sid >= 0:        # padded rows carry source_id −1
+                    self._route[int(sid)] = (si, row)
+
+    def source_ids(self) -> np.ndarray:
+        """All servable source ids, sorted — the public routing surface
+        (callers must not depend on the private `_route` layout)."""
+        return np.asarray(sorted(self._route))
+
+    def warmup(self):
+        """Compile every (slab, microbatch-length) query kernel up front.
+
+        Cold-start control: without it, the first query that routes to a
+        not-yet-seen (slab, power-of-two pad length) pays that kernel's
+        XLA compile in its latency (a 100× p95 outlier on CPU).  Batch
+        lengths are padded to powers of two capped at `max_batch`, so the
+        set is small and enumerable.  Returns the number of kernels
+        compiled.
+        """
+        compiled = 0
+        for si, slab in enumerate(self.obj.lp.slabs):
+            fn = primal_rows_fn(self.obj, si)
+            length = _pad_pow2(1)
+            cap = min(_pad_pow2(self.max_batch), _pad_pow2(slab.n))
+            while True:
+                jax.block_until_ready(
+                    fn(self.lam, self.gamma, jnp.zeros(length, jnp.int32)))
+                compiled += 1
+                if length >= cap:
+                    break
+                length *= 2
+        return compiled
+
+    def query(self, source_ids: Sequence[int]) -> Dict[int, DecisionRow]:
+        """Serve one microbatch: decisions for each requested source.
+
+        Unknown source ids raise KeyError before any device work (a
+        serving 404).  Latency of the whole batch — routing, device
+        compute, readback — is recorded for `stats()`.
+        """
+        t0 = time.perf_counter()
+        groups: Dict[int, list] = {}
+        for sid in source_ids:
+            si, row = self._route[int(sid)]     # KeyError = unknown source
+            groups.setdefault(si, []).append((int(sid), row))
+        out: Dict[int, DecisionRow] = {}
+        for si, pairs in groups.items():
+            fn = primal_rows_fn(self.obj, si)
+            for lo in range(0, len(pairs), self.max_batch):
+                chunk = pairs[lo:lo + self.max_batch]
+                rows = np.asarray([r for _, r in chunk], np.int32)
+                padded = np.zeros(_pad_pow2(len(rows)), np.int32)
+                padded[:len(rows)] = rows
+                x = np.asarray(fn(self.lam, self.gamma,
+                                  jnp.asarray(padded)))[:len(rows)]
+                for (sid, row), xr in zip(chunk, x):
+                    out[sid] = DecisionRow(
+                        source_id=sid, slab_index=si, row=row,
+                        dest_idx=self._dest[si][row],
+                        mask=self._mask[si][row], x=xr)
+        self._latencies.append(time.perf_counter() - t0)
+        self._sources_served += len(out)
+        return out
+
+    def stats(self) -> QueryStats:
+        lat = np.asarray(self._latencies)
+        if not lat.size:
+            return QueryStats(0, 0, 0.0, 0.0, 0.0, 0.0)
+        total = float(lat.sum())
+        return QueryStats(
+            queries=len(lat), sources=self._sources_served,
+            mean_ms=float(lat.mean() * 1e3),
+            p50_ms=float(np.percentile(lat, 50) * 1e3),
+            p95_ms=float(np.percentile(lat, 95) * 1e3),
+            sources_per_s=self._sources_served / total if total else 0.0)
+
+    def reset_stats(self):
+        self._latencies = []
+        self._sources_served = 0
+
+    def update_duals(self, lam):
+        """Swap in a new dual vector (e.g. replicated from a re-solve)."""
+        lam = jnp.asarray(lam)
+        if lam.shape != tuple(self.obj.dual_shape):
+            raise ValueError(
+                f"dual shape {lam.shape} != objective's "
+                f"{tuple(self.obj.dual_shape)}")
+        self.lam = lam
+
+    def warm_resolve(self, criteria: Optional[StoppingCriteria] = None,
+                     obj=None, config: Optional[SolveConfig] = None,
+                     ) -> SolveResult:
+        """Incremental re-solve from the resident λ on an instance update.
+
+        `obj` replaces the served objective (same dual shape — an rhs /
+        budget-cap nudge, not a topology change).  γ-continuation is
+        stripped from the config unconditionally: a warm start must NOT
+        re-run the schedule (it would forfeit the head start — the rule
+        test_warm_start.py pins down).  The server keeps answering from
+        the old λ until the re-solve returns, then swaps.
+        """
+        swapped = obj is not None
+        if swapped:
+            if tuple(obj.dual_shape) != tuple(self.obj.dual_shape):
+                raise ValueError(
+                    f"replacement objective dual shape "
+                    f"{tuple(obj.dual_shape)} != served "
+                    f"{tuple(self.obj.dual_shape)}")
+            self.obj = obj
+        cfg = config or self.config or SolveConfig()
+        cfg = dataclasses.replace(cfg, gamma_init=None,
+                                  adaptive_continuation=False)
+        res = Maximizer(cfg).maximize(self.obj, initial_value=self.lam,
+                                      criteria=criteria)
+        jax.block_until_ready(res.lam)
+        self.update_duals(res.lam)
+        if swapped:
+            # the query kernels are cached per objective identity; re-warm
+            # off the request path so the first post-update queries don't
+            # pay XLA compile in their latency
+            self.warmup()
+        return res

@@ -1,0 +1,226 @@
+"""Certification math: duality-gap bounds, per-family slack reports vs a
+dense-numpy oracle, rounding/repair feasibility, and the end-to-end
+solve → extract → round → certify acceptance path (DESIGN.md §8).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (InstanceSpec, Maximizer, SolveConfig,
+                        StoppingCriteria, generate)
+from repro import formulations
+from repro import primal
+
+
+@pytest.fixture(scope="module")
+def lp():
+    spec = InstanceSpec(num_sources=130, num_destinations=12,
+                        avg_nnz_per_row=8, seed=9, num_families=2)
+    return jax.tree.map(jnp.asarray, generate(spec))
+
+
+CFG = SolveConfig(iterations=6000, gamma=0.05, gamma_init=0.8,
+                  gamma_decay_every=25, max_step=20.0, initial_step=1e-3)
+GAMMA = jnp.float32(CFG.gamma)
+
+
+def _solve(lp, tol):
+    obj = formulations.make_objective("multi_budget", lp,
+                                      ax_mode="aligned", row_norm=True)
+    res = Maximizer(CFG).maximize(
+        obj, criteria=StoppingCriteria(tol_rel_dual=tol, check_every=50))
+    assert res.converged, res.stop_reason
+    return obj, res
+
+
+@pytest.fixture(scope="module")
+def solved(lp):
+    return _solve(lp, 1e-6)
+
+
+def _oracle_ax(lp, xs):
+    """Dense-numpy oracle for A·x: per-edge np.add.at accumulation —
+    deliberately a different algorithm than rounding.primal_ax's
+    bincount."""
+    m, J = lp.b.shape
+    ax = np.zeros((m, J))
+    for slab, x in zip(lp.slabs, xs):
+        mask = np.asarray(slab.mask)
+        dest = np.asarray(slab.dest_idx)
+        a = np.asarray(slab.a_vals, np.float64)
+        xv = np.where(mask, np.asarray(x, np.float64), 0.0)
+        for k in range(m):
+            np.add.at(ax[k], dest.reshape(-1),
+                      (a[..., k] * xv).reshape(-1))
+    return ax
+
+
+class TestGapCertificate:
+    def test_gap_nonnegative_and_finite(self, solved):
+        obj, res = solved
+        cert = primal.certify(obj, res.lam, GAMMA)
+        assert np.isfinite(cert.gap)
+        assert cert.gap >= -1e-6 * max(1.0, abs(cert.primal_value))
+        assert cert.valid and cert.feasible
+        assert cert.dual_bound <= cert.primal_value
+        assert cert.deregularization == pytest.approx(
+            0.5 * float(GAMMA) * cert.x_sq_bound)
+
+    def test_gap_shrinks_with_tighter_tolerance(self, lp):
+        obj_l, res_l = _solve(lp, 1e-3)
+        obj_t, res_t = _solve(lp, 1e-6)
+        cert_l = primal.certify(obj_l, res_l.lam, GAMMA)
+        cert_t = primal.certify(obj_t, res_t.lam, GAMMA)
+        # a better-converged λ certifies at least as tight a gap
+        assert cert_t.gap <= cert_l.gap * (1 + 1e-6) + 1e-8
+        assert cert_t.dual_value >= cert_l.dual_value - 1e-6
+
+    def test_x_sq_bound_dominates_actual(self, solved):
+        obj, res = solved
+        xs = primal.extract_primal(obj, res.lam, GAMMA)
+        actual = sum(float(np.sum(np.where(np.asarray(s.mask),
+                                           np.asarray(x) ** 2, 0.0)))
+                     for s, x in zip(obj.lp.slabs, xs))
+        assert primal.x_sq_bound(obj.lp) >= actual
+
+    def test_infeasible_witness_flagged(self, solved):
+        obj, res = solved
+        # an absurd witness: every edge at its upper bound
+        xs = [np.where(np.asarray(s.mask), np.asarray(s.ub), 0.0)
+              for s in obj.lp.slabs]
+        cert = primal.certify(obj, res.lam, GAMMA, xs=xs)
+        assert not cert.feasible and not cert.valid
+        assert cert.max_violation_rel > 0
+
+
+class TestFamilySlackOracle:
+    def test_coupling_rows_match_dense_oracle(self, solved):
+        obj, res = solved
+        xs = [np.asarray(x) for x in obj.primal(res.lam, GAMMA)]
+        report = obj.family_report(xs)
+        count = sum(float(np.where(np.asarray(s.mask),
+                                   np.asarray(x, np.float64), 0.0).sum())
+                    for s, x in zip(obj.lp.slabs, xs))
+        # value weight = the edge's objective value = −c (minimization)
+        value = sum(float(np.sum(-np.asarray(s.c_vals, np.float64)
+                                 * np.where(np.asarray(s.mask),
+                                            np.asarray(x, np.float64), 0.0)))
+                    for s, x in zip(obj.lp.slabs, xs))
+        assert report["count_cap"]["used"] == pytest.approx(count, rel=1e-5)
+        assert report["value_cap"]["used"] == pytest.approx(value, rel=1e-5)
+        for label in ("count_cap", "value_cap"):
+            d = report[label]
+            assert d["max_violation"] == pytest.approx(
+                d["used"] - d["limit"], rel=1e-6, abs=1e-9)
+
+    def test_dest_block_matches_dense_oracle(self, solved):
+        obj, res = solved
+        xs = [np.asarray(x) for x in obj.primal(res.lam, GAMMA)]
+        report = obj.family_report(xs)["dest_capacity"]
+        res_oracle = _oracle_ax(obj.lp, xs) - np.asarray(obj.lp.b,
+                                                        np.float64)
+        assert report["max_violation"] == pytest.approx(
+            float(res_oracle.max()), rel=1e-5, abs=1e-7)
+        assert report["norm_violation"] == pytest.approx(
+            float(np.linalg.norm(np.maximum(res_oracle, 0.0))),
+            rel=1e-5, abs=1e-7)
+
+    def test_primal_ax_matches_oracle(self, solved):
+        obj, res = solved
+        xs = [np.asarray(x) for x in obj.primal(res.lam, GAMMA)]
+        np.testing.assert_allclose(primal.primal_ax(obj.lp, xs),
+                                   _oracle_ax(obj.lp, xs), rtol=1e-10)
+
+
+def _assert_feasible(obj, xs, tol=1e-5):
+    lp = obj.lp
+    ax = primal.primal_ax(lp, xs)
+    b = np.asarray(lp.b, np.float64)
+    assert (ax <= b + tol * (1 + np.abs(b))).all(), (ax - b).max()
+    for slab, x in zip(lp.slabs, xs):
+        xv = np.where(np.asarray(slab.mask), np.asarray(x, np.float64), 0.0)
+        assert (xv <= np.asarray(slab.ub) + tol).all()
+        assert (xv >= 0).all()
+        assert (xv.sum(axis=1) <= np.asarray(slab.s) + tol).all()
+    worst = max(s.violation_rel
+                for s in primal.family_slacks(obj, xs).values())
+    assert worst <= tol, worst
+
+
+class TestRoundingRepair:
+    def test_threshold_round_is_integral(self, solved):
+        obj, res = solved
+        xs = primal.extract_primal(obj, res.lam, GAMMA)
+        xhat = primal.threshold_round(xs, obj.lp)
+        for slab, xh in zip(obj.lp.slabs, xhat):
+            mask = np.asarray(slab.mask)
+            ub = np.asarray(slab.ub)
+            vals = xh[mask]
+            ubm = ub[mask]
+            assert np.all((vals == 0) | (vals == ubm))
+
+    def test_topk_round_keeps_at_most_k(self, solved):
+        obj, res = solved
+        xs = primal.extract_primal(obj, res.lam, GAMMA)
+        xhat = primal.topk_round(xs, obj.lp, k=2)
+        for slab, xh in zip(obj.lp.slabs, xhat):
+            active = (np.where(np.asarray(slab.mask), xh, 0.0) > 0)
+            assert (active.sum(axis=1) <= 2).all()
+
+    def test_greedy_repair_feasible_all_families(self, solved):
+        obj, res = solved
+        xs = primal.extract_primal(obj, res.lam, GAMMA)
+        xhat = primal.greedy_repair(
+            primal.threshold_round(xs, obj.lp), obj.lp, xs_frac=xs,
+            global_rows=primal.global_row_caps(obj))
+        _assert_feasible(obj, xhat)
+        # still integral
+        for slab, xh in zip(obj.lp.slabs, xhat):
+            mask = np.asarray(slab.mask)
+            vals = xh[mask]
+            assert np.all((vals == 0) | (vals == np.asarray(slab.ub)[mask]))
+
+    def test_scale_repair_feasible(self, solved):
+        obj, res = solved
+        xs = primal.extract_primal(obj, res.lam, GAMMA)
+        # inflate to force violations, then repair the dest block
+        inflated = [np.asarray(x) * 3.0 for x in xs]
+        repaired = primal.scale_repair(inflated, obj.lp)
+        ax = primal.primal_ax(obj.lp, repaired)
+        b = np.asarray(obj.lp.b, np.float64)
+        assert (ax <= b * (1 + 1e-9) + 1e-12).all()
+
+    def test_repair_witness_feasible_all_families(self, solved):
+        obj, res = solved
+        xs = primal.extract_primal(obj, res.lam, GAMMA)
+        inflated = [np.asarray(x) * 2.0 for x in xs]
+        witness = primal.repair_witness(obj, inflated)
+        _assert_feasible(obj, witness)
+
+
+class TestEndToEnd:
+    def test_solve_extract_round_certify(self, solved):
+        """The acceptance path: multi_budget solved to tolerance, primal
+        stream-extracted + rounded, certificate finite with every family
+        slack within tolerance; served queries bitwise equal to batch
+        extraction (the serving half lives in test_primal_serving)."""
+        obj, res = solved
+        xs = primal.extract_primal(obj, res.lam, GAMMA, chunk_rows=31)
+        # fractional witness
+        cert = primal.certify(obj, res.lam, GAMMA)
+        assert cert.valid and np.isfinite(cert.gap)
+        assert cert.max_violation_rel <= cert.tol
+        assert set(cert.slacks) == {"dest_capacity", "count_cap",
+                                    "value_cap", "blocks"}
+        # integral witness
+        xhat = primal.greedy_repair(
+            primal.threshold_round(xs, obj.lp), obj.lp, xs_frac=xs,
+            global_rows=primal.global_row_caps(obj))
+        cert_int = primal.certify(obj, res.lam, GAMMA, xs=xhat)
+        assert cert_int.valid
+        # the integral witness can only be weaker (or equal), never break
+        # the bound ordering
+        assert cert_int.primal_value >= cert.dual_bound
+        # report renders
+        assert "VALID" in primal.format_certificate(cert)

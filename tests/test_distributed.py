@@ -17,7 +17,9 @@ import pytest
 
 from repro.core import (InstanceSpec, generate, MatchingObjective, Maximizer,
                         SolveConfig, precondition)
-from repro.core.distributed import pad_for_sharding, solve_distributed
+from repro.core.distributed import (DistributedMatchingObjective,
+                                    pad_for_sharding, place_lp,
+                                    solve_distributed)
 from repro.launch.mesh import make_mesh
 
 
@@ -49,6 +51,46 @@ class TestSingleDeviceMesh:
         res = solve_distributed(lp, cfg, mesh, lambda_axis="model")
         np.testing.assert_allclose(np.asarray(ref.stats.dual_obj),
                                    np.asarray(res.stats.dual_obj), atol=1e-4)
+
+    def test_primal_parity_vs_single_device(self, lp):
+        """DistributedMatchingObjective.primal must recover the same x*(λ)
+        as the single-device objective — the latent gap was that the
+        distributed objective had NO primal surface at all (same bug class
+        as the GlobalCountObjective.primal misindex: a dual layout without
+        a matching primal path).  The distributed slabs are row-padded by
+        place_lp, so compare the real row prefix of each slab."""
+        cfg = SolveConfig(**CFG)
+        ref_obj = MatchingObjective(lp)
+        res = Maximizer(cfg).maximize(ref_obj)
+        gamma = jnp.float32(cfg.gamma)
+        ref_xs = [np.asarray(x) for x in ref_obj.primal(res.lam, gamma)]
+
+        mesh = make_mesh((1, 1), ("data", "model"))
+        placed = place_lp(lp, mesh, ("data",))
+        dobj = DistributedMatchingObjective(
+            lp=placed, mesh=mesh, source_axes=("data",))
+        dist_xs = [np.asarray(x) for x in dobj.primal(res.lam, gamma)]
+        assert len(ref_xs) == len(dist_xs)
+        for ref, dist, slab in zip(ref_xs, dist_xs, lp.slabs):
+            n = slab.n                       # rows beyond n are padding
+            np.testing.assert_array_equal(ref, dist[:n])
+            assert not np.any(dist[n:])      # padded rows stay masked out
+
+    def test_primal_parity_lambda_sharded(self, lp):
+        cfg = SolveConfig(**CFG)
+        ref_obj = MatchingObjective(lp)
+        res = Maximizer(cfg).maximize(ref_obj)
+        gamma = jnp.float32(cfg.gamma)
+        ref_xs = [np.asarray(x) for x in ref_obj.primal(res.lam, gamma)]
+        mesh = make_mesh((1, 1), ("data", "model"))
+        placed = place_lp(lp, mesh, ("data", "model"),
+                          lambda_axis="model")
+        dobj = DistributedMatchingObjective(
+            lp=placed, mesh=mesh, source_axes=("data", "model"),
+            lambda_axis="model")
+        dist_xs = [np.asarray(x) for x in dobj.primal(res.lam, gamma)]
+        for ref, dist, slab in zip(ref_xs, dist_xs, lp.slabs):
+            np.testing.assert_array_equal(ref, dist[:slab.n])
 
     def test_padding_is_inert(self, lp):
         cfg = SolveConfig(iterations=50, gamma=0.1, max_step=10.0,

@@ -1,0 +1,190 @@
+"""Primal serving subsystem: row-subset recovery, streaming extraction,
+shard round-trip, the allocation server, and the warm-resolve hook
+(DESIGN.md §8).
+
+The load-bearing property throughout is BITWISE equality: a served or
+chunk-extracted decision row must be bit-identical to the same row of the
+all-at-once `obj.primal(λ)` recovery — per-row math is independent of the
+batch split, and the subsystem leans on that for "replicate λ, recover x
+anywhere".
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (GlobalCountObjective, InstanceSpec,
+                        MatchingObjective, Maximizer, SolveConfig,
+                        StoppingCriteria, generate, precondition)
+from repro import formulations
+from repro import primal
+
+
+@pytest.fixture(scope="module")
+def lp():
+    spec = InstanceSpec(num_sources=150, num_destinations=16,
+                        avg_nnz_per_row=10, seed=3, num_families=2)
+    return jax.tree.map(jnp.asarray, generate(spec))
+
+
+CFG = SolveConfig(iterations=8000, gamma=0.05, gamma_init=0.8,
+                  gamma_decay_every=25, max_step=20.0, initial_step=1e-3)
+CRIT = StoppingCriteria(tol_rel_dual=1e-6, check_every=50)
+GAMMA = jnp.float32(CFG.gamma)
+
+
+@pytest.fixture(scope="module")
+def solved_mb(lp):
+    """(objective, SolveResult) for the multi_budget formulation."""
+    obj = formulations.make_objective("multi_budget", lp,
+                                      ax_mode="aligned", row_norm=True)
+    res = Maximizer(CFG).maximize(obj, criteria=CRIT)
+    assert res.converged
+    return obj, res
+
+
+def _rand_lam(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed)
+                       .uniform(0.0, 0.5, size=shape).astype(np.float32))
+
+
+class TestPrimalRows:
+    """The row-subset primal op matches the batch recovery, bitwise."""
+
+    def _check(self, obj, lam):
+        full = [np.asarray(x) for x in obj.primal(lam, GAMMA)]
+        rng = np.random.default_rng(1)
+        for si, slab in enumerate(obj.lp.slabs):
+            n = slab.n
+            rows = rng.choice(n, size=min(7, n), replace=False)
+            x = np.asarray(obj.primal_rows(lam, GAMMA, si,
+                                           jnp.asarray(rows)))
+            np.testing.assert_array_equal(x, full[si][rows])
+
+    def test_matching(self, lp):
+        lpn, _ = precondition(lp, row_norm=True)
+        obj = MatchingObjective(lpn, ax_mode="aligned")
+        self._check(obj, _rand_lam(obj.dual_shape))
+
+    def test_global_count_threads_mu(self, lp):
+        obj = GlobalCountObjective(lp, count=30.0)
+        lam = _rand_lam(obj.dual_shape).at[-1].set(0.7)  # μ must matter
+        self._check(obj, lam)
+
+    def test_composed_multi_budget(self, solved_mb):
+        obj, res = solved_mb
+        self._check(obj, res.lam)
+
+    def test_duplicate_rows_allowed(self, solved_mb):
+        obj, res = solved_mb
+        rows = jnp.asarray([0, 0, 1, 1])
+        x = np.asarray(obj.primal_rows(res.lam, GAMMA, 0, rows))
+        np.testing.assert_array_equal(x[0], x[1])
+        np.testing.assert_array_equal(x[2], x[3])
+
+
+class TestStreamingExtraction:
+    def test_chunked_equals_batch_bitwise(self, solved_mb):
+        obj, res = solved_mb
+        full = [np.asarray(x) for x in obj.primal(res.lam, GAMMA)]
+        # chunk size 17 forces clamped tail windows in every slab
+        xs = primal.extract_primal(obj, res.lam, GAMMA, chunk_rows=17)
+        for a, b in zip(full, xs):
+            np.testing.assert_array_equal(a, b)
+
+    def test_chunk_stream_covers_each_row_once(self, solved_mb):
+        obj, res = solved_mb
+        seen = {si: np.zeros(s.n, int)
+                for si, s in enumerate(obj.lp.slabs)}
+        for ch in primal.iter_primal_chunks(obj, res.lam, GAMMA,
+                                            chunk_rows=13):
+            seen[ch.slab_index][ch.start:ch.start + len(ch.x)] += 1
+            assert ch.x.shape == ch.dest_idx.shape == ch.mask.shape
+        for counts in seen.values():
+            assert (counts == 1).all()
+
+    def test_shard_writer_round_trip(self, solved_mb, tmp_path):
+        obj, res = solved_mb
+        paths = primal.write_shards(
+            obj, res.lam, GAMMA, str(tmp_path), chunk_rows=23,
+            rounder=lambda ch: np.where(ch.x > 0.5, 1.0, 0.0))
+        assert paths
+        xs = primal.read_shards(paths, len(obj.lp.slabs))
+        full = [np.asarray(x) for x in obj.primal(res.lam, GAMMA)]
+        for a, b in zip(full, xs):
+            np.testing.assert_array_equal(a, b)
+        xr = primal.read_shards(paths, len(obj.lp.slabs), key="x_round")
+        for a, b in zip(full, xr):
+            np.testing.assert_array_equal(np.where(a > 0.5, 1.0, 0.0), b)
+
+
+class TestAllocationServer:
+    def test_query_bitwise_vs_batch_extraction(self, solved_mb):
+        obj, res = solved_mb
+        xs = primal.extract_primal(obj, res.lam, GAMMA, chunk_rows=64)
+        srv = primal.AllocationServer(obj, res.lam, GAMMA, max_batch=8)
+        ids = srv.source_ids()
+        rng = np.random.default_rng(2)
+        picked = rng.choice(ids, size=min(30, len(ids)),
+                            replace=False).tolist()
+        decisions = srv.query(picked)
+        assert set(decisions) == set(picked)
+        for sid, d in decisions.items():
+            np.testing.assert_array_equal(d.x, xs[d.slab_index][d.row])
+            assert d.source_id == sid
+
+    def test_latency_stats_recorded(self, solved_mb):
+        obj, res = solved_mb
+        srv = primal.AllocationServer(obj, res.lam, GAMMA)
+        ids = srv.source_ids()[:5].tolist()
+        srv.query(ids)
+        srv.query(ids)
+        st = srv.stats()
+        assert st.queries == 2 and st.sources == 10
+        assert st.mean_ms > 0 and st.sources_per_s > 0
+        srv.reset_stats()
+        assert srv.stats().queries == 0
+
+    def test_unknown_source_raises(self, solved_mb):
+        obj, res = solved_mb
+        srv = primal.AllocationServer(obj, res.lam, GAMMA)
+        with pytest.raises(KeyError):
+            srv.query([10 ** 9])
+
+    def test_update_duals_checks_shape(self, solved_mb):
+        obj, res = solved_mb
+        srv = primal.AllocationServer(obj, res.lam, GAMMA)
+        with pytest.raises(ValueError, match="dual shape"):
+            srv.update_duals(jnp.zeros((3,)))
+
+    def test_warm_resolve_skips_continuation_and_is_faster(self, solved_mb):
+        obj, res = solved_mb
+        srv = primal.AllocationServer(obj, res.lam, GAMMA, config=CFG)
+        warm = srv.warm_resolve(criteria=CRIT)
+        assert warm.converged
+        assert warm.iterations_run < res.iterations_run
+        # continuation stripped: the very first iteration runs at target γ
+        assert float(warm.stats.gamma[0]) == pytest.approx(CFG.gamma)
+        # the server now serves the re-solved duals
+        np.testing.assert_array_equal(np.asarray(srv.lam),
+                                      np.asarray(warm.lam))
+
+    def test_warm_resolve_instance_update(self, solved_mb, lp):
+        obj, res = solved_mb
+        srv = primal.AllocationServer(obj, res.lam, GAMMA, config=CFG)
+        used = primal.certify(obj, res.lam, GAMMA).slacks["count_cap"].used
+        tight = formulations.make_objective(
+            "multi_budget", lp, params=dict(count_cap=0.8 * used),
+            ax_mode="aligned", row_norm=True)
+        warm = srv.warm_resolve(criteria=CRIT, obj=tight)
+        assert warm.converged
+        cert = primal.certify(tight, srv.lam, GAMMA)
+        assert cert.valid
+        assert cert.slacks["count_cap"].used <= 0.8 * used * (1 + 1e-6)
+
+    def test_warm_resolve_rejects_shape_change(self, solved_mb, lp):
+        obj, res = solved_mb
+        srv = primal.AllocationServer(obj, res.lam, GAMMA, config=CFG)
+        other = formulations.make_objective("matching", lp, row_norm=True)
+        with pytest.raises(ValueError, match="dual shape"):
+            srv.warm_resolve(obj=other)

@@ -5,6 +5,8 @@ Covers launch.solve's `save_duals`/`load_duals` helpers (the CLI's
 warm-started from a previous optimum reaches the stopping criteria in
 fewer iterations than the cold solve that produced it.
 """
+import dataclasses
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -13,7 +15,9 @@ import pytest
 from repro.core import (InstanceSpec, MatchingObjective, Maximizer,
                         SolveConfig, StoppingCriteria, generate,
                         precondition)
-from repro.launch.solve import load_duals, save_duals
+from repro.launch.solve import (apply_warm_start_policy,
+                                instance_fingerprint, load_duals,
+                                save_duals)
 
 
 @pytest.fixture(scope="module")
@@ -44,6 +48,81 @@ def test_load_checks_shape(tmp_path, lp):
     save_duals(path, jnp.zeros((3, 5)))
     with pytest.raises(ValueError, match="shape"):
         load_duals(path, expected_shape=(2, 7))
+
+
+def test_save_duals_stores_gamma_and_fingerprint(tmp_path, lp):
+    """The dump carries the achieved γ and the instance fingerprint, so a
+    warm re-solve can decide by itself that continuation is unnecessary."""
+    lam = jnp.zeros((lp.m, lp.num_destinations))
+    fp = instance_fingerprint(lp)
+    path = str(tmp_path / "duals.npz")
+    save_duals(path, lam, gamma=0.05, fingerprint=fp)
+    back, meta = load_duals(path, expected_shape=lam.shape, with_meta=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(lam))
+    assert meta["achieved_gamma"] == pytest.approx(0.05)
+    assert meta["fingerprint"] == fp
+    # a legacy dump without metadata loads with an empty meta dict
+    save_duals(str(tmp_path / "legacy.npz"), lam)
+    _, meta2 = load_duals(str(tmp_path / "legacy.npz"), with_meta=True)
+    assert meta2 == {}
+
+
+def test_instance_fingerprint_detects_changes(lp):
+    fp = instance_fingerprint(lp)
+    assert fp == instance_fingerprint(lp)          # deterministic
+    nudged = lp._replace(b=lp.b * 1.01)
+    assert fp != instance_fingerprint(nudged)
+
+
+def test_warm_start_policy_skips_continuation(lp):
+    """With matching metadata the γ schedule is stripped automatically —
+    the caller no longer has to remember the warm-start rule."""
+    fp = instance_fingerprint(lp)
+    cfg = SolveConfig(iterations=100, gamma=0.05, gamma_init=0.8,
+                      adaptive_continuation=True)
+    out, skipped, reason = apply_warm_start_policy(
+        cfg, {"achieved_gamma": 0.05, "fingerprint": fp}, fp)
+    assert skipped and out.gamma_init is None
+    assert not out.adaptive_continuation
+    assert "skipped" in reason
+    # fingerprint mismatch: keep continuation (different instance)
+    out2, skipped2, _ = apply_warm_start_policy(
+        cfg, {"achieved_gamma": 0.05, "fingerprint": "other"}, fp)
+    assert not skipped2 and out2 is cfg
+    # dump stopped before reaching the target γ: keep continuation
+    out3, skipped3, _ = apply_warm_start_policy(
+        cfg, {"achieved_gamma": 0.4, "fingerprint": fp}, fp)
+    assert not skipped3 and out3 is cfg
+    # metadata-free legacy dump: keep continuation
+    _, skipped4, _ = apply_warm_start_policy(cfg, {}, fp)
+    assert not skipped4
+    # no continuation configured: nothing to strip
+    flat = dataclasses.replace(cfg, gamma_init=None)
+    out5, skipped5, _ = apply_warm_start_policy(
+        flat, {"achieved_gamma": 0.05, "fingerprint": fp}, fp)
+    assert not skipped5 and out5 is flat
+
+
+def test_warm_start_policy_end_to_end(tmp_path, lp):
+    """A continuation-configured re-solve warm-started from a metadata
+    dump runs at the target γ from iteration 0 and converges faster."""
+    obj = MatchingObjective(lp)
+    cold = Maximizer(CFG).maximize(obj, criteria=CRIT)
+    assert cold.converged
+    fp = instance_fingerprint(lp)
+    path = str(tmp_path / "duals.npz")
+    save_duals(path, cold.lam, gamma=float(cold.stats.gamma[-1]),
+               fingerprint=fp)
+    lam0, meta = load_duals(path, expected_shape=obj.dual_shape,
+                            with_meta=True)
+    # same continuation-bearing config the cold solve used — the policy,
+    # not the caller, removes the schedule
+    cfg, skipped, _ = apply_warm_start_policy(CFG, meta, fp)
+    assert skipped
+    warm = Maximizer(cfg).maximize(obj, initial_value=lam0, criteria=CRIT)
+    assert warm.converged
+    assert float(warm.stats.gamma[0]) == pytest.approx(CFG.gamma)
+    assert warm.iterations_run < cold.iterations_run
 
 
 def test_warm_start_stops_in_fewer_iterations(tmp_path, lp):
