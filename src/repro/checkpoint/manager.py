@@ -15,11 +15,17 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+# committed step dirs are exactly step_<10 digits>; anything else in the
+# directory (".tmp" mid-write litter, ".old" replaced-step litter, user
+# files) is never parsed as a step
+_STEP_RE = re.compile(r"^step_(\d{10})$")
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -36,6 +42,17 @@ class CheckpointManager:
         self.dir = directory
         self.keep_last = keep_last
         os.makedirs(directory, exist_ok=True)
+        self._sweep_litter()
+
+    def _sweep_litter(self):
+        """Remove crash leftovers: a kill mid-save leaves a half-written
+        `step_N.tmp/` (never committed, safe to drop) or a fully-written
+        `step_N.old/` (the replaced copy of a re-saved step — the new
+        `step_N/` is already committed, so the old copy is garbage)."""
+        for name in os.listdir(self.dir):
+            if name.endswith((".tmp", ".old")):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
 
     # -- save -----------------------------------------------------------
     def save(self, step: int, state: Any, extra: Optional[Dict] = None):
@@ -55,7 +72,19 @@ class CheckpointManager:
         }
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
-        os.rename(tmp, final)        # atomic commit
+        if os.path.exists(final):
+            # re-save of an existing step (e.g. the final flush lands on a
+            # boundary already checkpointed): rename onto a non-empty dir
+            # raises, so swap through `.old` — the committed step is valid
+            # at every instant (either the old copy or the new one)
+            old = final + ".old"
+            if os.path.exists(old):
+                shutil.rmtree(old)
+            os.rename(final, old)
+            os.rename(tmp, final)    # atomic commit
+            shutil.rmtree(old, ignore_errors=True)
+        else:
+            os.rename(tmp, final)    # atomic commit
         self._prune()
         return final
 
@@ -69,27 +98,75 @@ class CheckpointManager:
     def all_steps(self):
         out = []
         for name in os.listdir(self.dir):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                out.append(int(name[5:]))
+            m = _STEP_RE.match(name)
+            if m:
+                out.append(int(m.group(1)))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _load_step(self, step: int) -> Tuple[Dict[str, np.ndarray], Dict]:
+        """Load a committed step's arrays + meta, with clear errors: a
+        corrupt or truncated checkpoint names the offending path instead
+        of surfacing a bare zipfile/JSON traceback."""
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        npz = os.path.join(path, "arrays.npz")
+        try:
+            with np.load(npz) as z:
+                data = {k: z[k] for k in z.files}
+        except FileNotFoundError:
+            raise ValueError(
+                f"checkpoint step {step} at {path} is missing arrays.npz "
+                f"(incomplete or deleted checkpoint)") from None
+        except Exception as e:
+            raise ValueError(
+                f"checkpoint arrays at {npz} are unreadable ({e}); the "
+                f"file is corrupt — delete the step dir and resume from "
+                f"an earlier checkpoint") from e
+        meta_path = os.path.join(path, "meta.json")
+        try:
+            with open(meta_path) as f:
+                meta = json.load(f)
+        except FileNotFoundError:
+            raise ValueError(
+                f"checkpoint step {step} at {path} is missing meta.json "
+                f"(incomplete or deleted checkpoint)") from None
+        except Exception as e:
+            raise ValueError(
+                f"checkpoint metadata at {meta_path} is unreadable "
+                f"({e}); the file is corrupt — delete the step dir and "
+                f"resume from an earlier checkpoint") from e
+        if meta.get("n_arrays") not in (None, len(data)):
+            raise ValueError(
+                f"checkpoint step {step} at {path} holds {len(data)} "
+                f"arrays but its metadata promises {meta['n_arrays']} "
+                f"(truncated write?)")
+        return data, meta
+
+    def restore_flat(self, step: int) -> Tuple[Dict[str, np.ndarray], Dict]:
+        """Restore the raw flattened arrays (flatten key -> np.ndarray)
+        plus the `extra` dict, for callers that rebuild the pytree
+        themselves (e.g. a NamedTuple state whose keys are positional
+        indices '0'..'n-1')."""
+        data, meta = self._load_step(step)
+        return data, meta["extra"]
+
     def restore(self, step: int, like: Any,
                 shardings: Any = None) -> Tuple[Any, Dict]:
         """Restore into the structure of `like`; device_put with `shardings`
         (same pytree structure or None) — this is the elastic-reshard hook."""
-        path = os.path.join(self.dir, f"step_{step:010d}")
-        data = np.load(os.path.join(path, "arrays.npz"))
-        with open(os.path.join(path, "meta.json")) as f:
-            meta = json.load(f)
+        data, meta = self._load_step(step)
         flat_like = _flatten_paths(like)
         leaves = []
         for key, leaf in flat_like:
-            arr = data[key]
-            leaves.append(arr)
+            if key not in data:
+                raise ValueError(
+                    f"checkpoint step {step} in {self.dir} has no array "
+                    f"'{key}' required by the requested structure (saved "
+                    f"under a different state layout?)")
+            leaves.append(data[key])
         tree = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(like), leaves)
         if shardings is not None:

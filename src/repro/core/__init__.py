@@ -5,7 +5,8 @@ The paper's operator-centric model (§4) — three primitives, one contract each
   ObjectiveFunction.calculate(λ, γ)  -> (g, ∇g, aux)
   ProjectionMap.project(block, v)    -> projected v
 """
-from .types import (AxBucket, AxPlan, ConvergenceCheck, LPData, Slab,
+from .types import (AxBucket, AxPlan, ConvergenceCheck, HealthConfig,
+                    HealthRecord, LPData, Slab,
                     SolveConfig, SolveResult, SolveState, IterStats,
                     StopReason, StoppingCriteria)
 from .projections import ProjectionMap, project, project_boxcut, project_box
@@ -17,19 +18,21 @@ from .maximizer import (Maximizer, SolveEngine, maximize, gamma_at,
 from .preconditioning import (row_normalize, primal_scale, precondition,
                               row_norms, undo_row_scaling,
                               undo_primal_scaling, gram_condition_number)
-from .instance import (InstanceSpec, generate, pack_slabs, build_ax_plan,
-                       build_sharded_ax_plan)
+from .instance import (InstanceSpec, LPValidationError, generate,
+                       pack_slabs, build_ax_plan, build_sharded_ax_plan,
+                       validate_lp)
 
 __all__ = [
     "AxBucket", "AxPlan",
     "LPData", "Slab", "SolveConfig", "SolveResult", "SolveState", "IterStats",
     "StopReason", "StoppingCriteria", "ConvergenceCheck", "SolveEngine",
+    "HealthConfig", "HealthRecord",
     "ProjectionMap", "project", "project_boxcut", "project_box",
     "MatchingObjective", "GlobalCountObjective", "dual_value_and_grad",
     "slab_xgvals", "slab_xcarry", "ObjectiveAux", "AX_MODES",
     "Maximizer", "maximize", "gamma_at", "max_step_at",
     "row_normalize", "primal_scale", "precondition", "row_norms",
     "undo_row_scaling", "undo_primal_scaling", "gram_condition_number",
-    "InstanceSpec", "generate", "pack_slabs", "build_ax_plan",
-    "build_sharded_ax_plan",
+    "InstanceSpec", "LPValidationError", "validate_lp", "generate",
+    "pack_slabs", "build_ax_plan", "build_sharded_ax_plan",
 ]

@@ -29,8 +29,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import objectives
 from .maximizer import _infeas_scale, maximize
-from .types import (AxPlan, LPData, Slab, SolveConfig, SolveResult,
-                    StoppingCriteria)
+from .types import (AxPlan, HealthConfig, LPData, Slab, SolveConfig,
+                    SolveResult, SolveState, StoppingCriteria)
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs):
@@ -282,6 +282,11 @@ def solve_distributed(
     ax_mode: str = "scatter",
     criteria: Optional[StoppingCriteria] = None,
     diagnostics_fn=None,
+    health: Optional[HealthConfig] = None,
+    checkpoint_fn=None,
+    preempt_fn=None,
+    initial_state: Optional[SolveState] = None,
+    resume_meta: Optional[dict] = None,
 ) -> SolveResult:
     """End-to-end distributed solve: place data, build objective, maximize.
 
@@ -310,4 +315,7 @@ def solve_distributed(
     lam0 = jax.device_put(lam0, lam_sharding)
     return maximize(obj.calculate, lam0, config, algorithm,
                     criteria=criteria, diagnostics_fn=diagnostics_fn,
-                    infeas_scale=_infeas_scale(obj, criteria))
+                    infeas_scale=_infeas_scale(obj, criteria),
+                    health=health, checkpoint_fn=checkpoint_fn,
+                    preempt_fn=preempt_fn, initial_state=initial_state,
+                    resume_meta=resume_meta)

@@ -27,6 +27,106 @@ import numpy as np
 from .types import AxBucket, AxPlan, LPData, Slab
 
 
+class LPValidationError(ValueError):
+    """An LP instance failed `validate_lp`.  `problems` lists every
+    violation found (not just the first), so a bad ingestion run reports
+    all of its defects in one failure."""
+
+    def __init__(self, name: str, problems):
+        self.problems = tuple(problems)
+        lines = "\n".join(f"  - {p}" for p in self.problems)
+        super().__init__(
+            f"invalid LP instance {name!r} "
+            f"({len(self.problems)} problem(s)):\n{lines}")
+
+
+def validate_lp(lp: LPData, name: str = "lp") -> LPData:
+    """Fail fast on a malformed instance instead of producing NaN duals
+    mid-solve (DESIGN.md §9).
+
+    Checks (host-side, one pass over the instance):
+      * b: 2-D (m, J), finite, no negative capacities;
+      * every slab: field shapes consistent ((n, w[, m]) with the slab's
+        own n/w/m), m matching b, dest_idx of real edges within [0, J);
+      * real (mask=True) entries of a_vals / c_vals / ub and the per-source
+        budget s finite; s and real ub non-negative (negative capacity);
+      * padded (mask=False) entries are not checked — they are inert by
+        construction.
+
+    Raises LPValidationError listing every problem; returns `lp` unchanged
+    so call sites can write `lp = validate_lp(lp)`.
+    """
+    problems = []
+    b = np.asarray(lp.b)
+    if b.ndim != 2:
+        problems.append(f"b must be 2-D (m, J), got shape {b.shape}")
+        raise LPValidationError(name, problems)   # m/J unusable below
+    m, J = b.shape
+    if not np.isfinite(b).all():
+        bad = int(np.size(b) - np.isfinite(b).sum())
+        problems.append(f"b has {bad} non-finite entr(ies) (NaN/Inf rhs)")
+    if (b < 0).any():
+        problems.append(
+            f"b has {int((b < 0).sum())} negative capacit(ies); "
+            f"min b = {float(np.nanmin(b)):g}")
+    for si, slab in enumerate(lp.slabs):
+        tag = f"slab[{si}]"
+        c = np.asarray(slab.c_vals)
+        if c.ndim != 2:
+            problems.append(f"{tag}: c_vals must be (n, w), got {c.shape}")
+            continue
+        n, w = c.shape
+        shapes = {"a_vals": ((n, w, m), slab.a_vals),
+                  "dest_idx": ((n, w), slab.dest_idx),
+                  "mask": ((n, w), slab.mask),
+                  "ub": ((n, w), slab.ub),
+                  "s": ((n,), slab.s),
+                  "source_ids": ((n,), slab.source_ids)}
+        mismatched = False
+        for field, (want, arr) in shapes.items():
+            got = tuple(np.shape(arr))
+            if got != want:
+                problems.append(
+                    f"{tag}: {field} shape {got} != expected {want} "
+                    f"(n={n}, w={w}, m={m})")
+                mismatched = True
+        if mismatched:
+            continue
+        mask = np.asarray(slab.mask).astype(bool)
+        for field, arr in (("a_vals", slab.a_vals), ("c_vals", c),
+                           ("ub", slab.ub)):
+            vals = np.asarray(arr)
+            fin = np.isfinite(vals) if field != "ub" else (
+                ~np.isnan(vals))          # ub=inf means "no bound" — legal
+            ok = fin if field != "a_vals" else fin.all(axis=-1)
+            bad = int((~ok & mask).sum())
+            if bad:
+                problems.append(
+                    f"{tag}: {field} has {bad} non-finite value(s) on "
+                    f"real edges")
+        s = np.asarray(slab.s)
+        if np.isnan(s).any():
+            problems.append(f"{tag}: s has {int(np.isnan(s).sum())} NaN "
+                            f"budget(s)")
+        elif (s < 0).any():
+            problems.append(
+                f"{tag}: s has {int((s < 0).sum())} negative budget(s); "
+                f"min s = {float(s.min()):g}")
+        ub = np.asarray(slab.ub)
+        neg_ub = int(((ub < 0) & mask).sum())
+        if neg_ub:
+            problems.append(f"{tag}: ub has {neg_ub} negative upper "
+                            f"bound(s) on real edges")
+        di = np.asarray(slab.dest_idx)
+        oob = int((((di < 0) | (di >= J)) & mask).sum())
+        if oob:
+            problems.append(
+                f"{tag}: dest_idx has {oob} real edge(s) outside [0, {J})")
+    if problems:
+        raise LPValidationError(name, problems)
+    return lp
+
+
 @dataclasses.dataclass(frozen=True)
 class InstanceSpec:
     num_sources: int = 1000          # I (paper: "requests")

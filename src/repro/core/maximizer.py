@@ -28,6 +28,7 @@ DESIGN.md §2).
 """
 from __future__ import annotations
 
+import math
 import time
 from functools import partial
 from typing import Callable, Optional
@@ -35,8 +36,9 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from .types import (ConvergenceCheck, IterStats, SolveConfig, SolveResult,
-                    SolveState, StopReason, StoppingCriteria)
+from .types import (ConvergenceCheck, HealthConfig, HealthRecord, IterStats,
+                    SolveConfig, SolveResult, SolveState, StopReason,
+                    StoppingCriteria)
 
 
 def gamma_at(config: SolveConfig, it: jax.Array) -> jax.Array:
@@ -134,6 +136,66 @@ def initial_state(lam0: jax.Array, config: SolveConfig) -> SolveState:
                       it=jnp.asarray(0, jnp.int32))
 
 
+# alias for use inside SolveEngine.solve, whose `initial_state` parameter
+# (a restored checkpoint) shadows the constructor above
+initial_state_fn = initial_state
+
+
+def _copy_state(state: SolveState) -> SolveState:
+    """Fresh buffers for every leaf — donation-safe snapshot/restore."""
+    return jax.tree.map(jnp.copy, state)
+
+
+def _classify_chunk(health: HealthConfig, state: SolveState, g: float,
+                    infeas: float, grad_norm: float, gamma_cur: float,
+                    snap_g: Optional[float], snap_grad: Optional[float],
+                    snap_gamma: Optional[float]) -> Optional[str]:
+    """Health verdict for one chunk: None = healthy, else the fault kind
+    (DESIGN.md §9).  Scalar checks read the chunk's trailing stats; the
+    λ/y sweep catches a NaN introduced by the *last* in-chunk update,
+    which the (pre-update) trailing stats cannot see."""
+    if not (math.isfinite(g) and math.isfinite(infeas)
+            and math.isfinite(grad_norm)):
+        return "nonfinite"
+    if health.check_lambda:
+        finite = bool(jax.device_get(
+            jnp.isfinite(state.lam).all() & jnp.isfinite(state.y).all()))
+        if not finite:
+            return "nonfinite"
+    if (snap_grad is not None
+            and grad_norm > health.grad_explosion * max(snap_grad, 1.0)):
+        return "grad_explosion"
+    # g legitimately moves when γ moves (continuation), so the regression
+    # rule only applies between chunks that ended at the same γ
+    if (snap_g is not None and snap_gamma is not None
+            and gamma_cur == snap_gamma
+            and g < snap_g - health.obj_regression_tol
+            * max(1.0, abs(snap_g))):
+        return "regression"
+    return None
+
+
+def _apply_backoff(state: SolveState, config: SolveConfig,
+                   gamma_now: float, scale: float) -> SolveState:
+    """Step-size backoff on a restored snapshot, without recompiling.
+
+    The AGD step is `min(1/L̂, cap)`; raising the Lipschitz estimate to at
+    least `1/(cap·scale)` therefore caps the retried chunk's steps at
+    `cap·scale` using the *existing* compiled runner.  The estimate decays
+    at 0.97/iteration, so the backoff relaxes gradually instead of
+    permanently slowing the solve.  Momentum is killed (k_mom=0, y=λ): a
+    rollback is a restart, and the overshoot that momentum re-applies is
+    often exactly what diverged.
+    """
+    cap = float(max_step_at(config, jnp.asarray(gamma_now, jnp.float32)))
+    floor = 1.0 / max(cap * scale, 1e-30)
+    return state._replace(
+        l_est=jnp.maximum(state.l_est, jnp.asarray(floor, jnp.float32)),
+        k_mom=jnp.zeros_like(state.k_mom),
+        y=jnp.copy(state.lam),
+        y_prev=jnp.copy(state.lam))
+
+
 def _make_chunk_runner(calculate: Callable, config: SolveConfig,
                        algorithm: str, length: int,
                        gamma_override: bool) -> Callable:
@@ -194,6 +256,11 @@ class SolveEngine:
         self.config = config
         self.algorithm = algorithm
         self._runners = {}
+        # Chaos-testing seam (DESIGN.md §9): when set, called after every
+        # chunk as `hook(it_start, state, stats) -> (state, stats)` so a
+        # fault-injection harness can poison the state exactly as a
+        # transient device fault would.  Never set in production.
+        self.chunk_fault_hook = None
 
     def _runner(self, length: int, gamma_override: bool) -> Callable:
         key = (length, gamma_override)
@@ -204,10 +271,42 @@ class SolveEngine:
             self._runners[key] = run
         return run
 
-    def solve(self, lam0: jax.Array,
+    def solve(self, lam0: Optional[jax.Array],
               criteria: Optional[StoppingCriteria] = None,
               diagnostics_fn: Optional[Callable] = None,
-              infeas_scale: float = 1.0) -> SolveResult:
+              infeas_scale: float = 1.0,
+              health: Optional[HealthConfig] = None,
+              checkpoint_fn: Optional[Callable] = None,
+              preempt_fn: Optional[Callable] = None,
+              initial_state: Optional[SolveState] = None,
+              resume_meta: Optional[dict] = None) -> SolveResult:
+        """Run the solve loop (DESIGN.md §4; fault tolerance §9).
+
+        Beyond the criteria/diagnostics contract:
+
+          health         HealthConfig enabling the per-chunk health guard
+                         (NaN/divergence detection → rollback + backoff →
+                         StopReason.DIVERGED on exhausted retries);
+          checkpoint_fn  `fn(it, state, meta)` called after every healthy
+                         chunk and once more at exit (`meta["final"]=True`)
+                         — the hook decides its own cadence and must
+                         consume `state` before returning (the buffers are
+                         donated into the next chunk).  `meta` carries
+                         exactly what `resume_meta` needs;
+          preempt_fn     `fn() -> bool` polled at every chunk boundary; True
+                         stops the loop with StopReason.PREEMPTED;
+          initial_state  a restored SolveState (checkpoint resume): the
+                         loop continues the trajectory from state.it —
+                         bit-identical at chunk boundaries to a run that
+                         was never interrupted;
+          resume_meta    the `meta` dict the checkpoint hook was given
+                         (keys "gamma_now", "g_prev"), restoring the
+                         adaptive-continuation controller variables.
+
+        Any of health/checkpoint_fn/preempt_fn/initial_state forces the
+        chunked path; with none of them and no criteria the fixed-length
+        single-scan fast path is bit-identical to the legacy engine.
+        """
         config = self.config
         total = config.iterations
         if criteria is not None and criteria.max_iterations is not None:
@@ -215,15 +314,21 @@ class SolveEngine:
         adaptive = (config.adaptive_continuation
                     and config.gamma_init is not None
                     and config.gamma_init > config.gamma)
-        chunked = (total > 0 and
-                   (adaptive
-                    or (criteria is not None and criteria.needs_checks)))
+        guarded = (health is not None or checkpoint_fn is not None
+                   or preempt_fn is not None or initial_state is not None)
+        chunked = (guarded or
+                   (total > 0 and
+                    (adaptive
+                     or (criteria is not None and criteria.needs_checks))))
         # The chunk runners donate the state argument (buffer reuse across
         # chunks — no double-buffered dual state).  The fresh initial state
         # aliases lam0 into four leaves, and the caller may hold lam0 (warm
-        # starts): copy every leaf so donation never invalidates a caller
-        # buffer nor donates one buffer twice.
-        state = jax.tree.map(jnp.copy, initial_state(lam0, config))
+        # starts) or a restored checkpoint: copy every leaf so donation
+        # never invalidates a caller buffer nor donates one buffer twice.
+        if initial_state is not None:
+            state = _copy_state(initial_state)
+        else:
+            state = _copy_state(initial_state_fn(lam0, config))
         gamma_dev = jnp.asarray(config.gamma, jnp.float32)
 
         if not chunked:
@@ -232,24 +337,52 @@ class SolveEngine:
             state, stats = self._runner(total, False)(state, gamma_dev)
             return SolveResult(lam=state.lam, stats=stats,
                                iterations_run=total, converged=False,
-                               stop_reason=StopReason.MAX_ITERATIONS)
+                               stop_reason=StopReason.MAX_ITERATIONS,
+                               final_state=state)
 
         criteria = criteria if criteria is not None else StoppingCriteria()
         check = max(1, int(criteria.check_every))
         gamma_now = float(config.gamma_init) if adaptive else config.gamma
+        g_prev = None
+        it_done = 0
+        if initial_state is not None:
+            it_done = int(jax.device_get(initial_state.it))
+            meta = resume_meta or {}
+            if meta.get("gamma_now") is not None:
+                gamma_now = float(meta["gamma_now"])
+            if meta.get("g_prev") is not None:
+                g_prev = float(meta["g_prev"])
         t0 = time.perf_counter()
         stats_chunks = []
         diags = []
-        g_prev = None
-        it_done = 0
+        health_recs = []
         converged = False
         stop_reason = StopReason.MAX_ITERATIONS
+        # Health-guard bookkeeping: the last-good snapshot and its
+        # baselines.  The snapshot is a private copy — the live state's
+        # buffers are donated chunk over chunk, the snapshot's never are.
+        snap = _copy_state(state) if health is not None else None
+        snap_it = it_done
+        snap_gamma_now = gamma_now
+        snap_g_prev = g_prev
+        snap_g = None          # trailing dual objective of the last-good chunk
+        snap_grad = None       # trailing ‖∇g‖ of the last-good chunk
+        snap_gamma = None      # trailing γ of the last-good chunk
+        fails = 0
+
+        def _meta(final: bool) -> dict:
+            return {"gamma_now": gamma_now, "g_prev": g_prev,
+                    "it": it_done, "final": final}
+
         while it_done < total:
+            if preempt_fn is not None and preempt_fn():
+                stop_reason = StopReason.PREEMPTED
+                break
             n = min(check, total - it_done)
             run = self._runner(n, adaptive)
             state, stats = run(state, jnp.asarray(gamma_now, jnp.float32))
-            it_done += n
-            stats_chunks.append(stats)
+            if self.chunk_fault_hook is not None:
+                state, stats = self.chunk_fault_hook(it_done, state, stats)
 
             # device→host: the chunk's trailing scalars (this is the sync
             # point that keeps the hot path a single XLA program per chunk)
@@ -258,6 +391,46 @@ class SolveEngine:
             grad_norm = float(stats.grad_norm[-1])
             gamma_cur = float(stats.gamma[-1])
             elapsed = time.perf_counter() - t0
+
+            if health is not None:
+                status = _classify_chunk(health, state, g, infeas, grad_norm,
+                                         gamma_cur, snap_g, snap_grad,
+                                         snap_gamma)
+                if status is not None:
+                    fails += 1
+                    scale = health.step_backoff ** fails
+                    if fails > health.max_retries:
+                        health_recs.append(HealthRecord(
+                            it=it_done + n, status=status, action="giveup",
+                            retries=fails, dual_obj=g, grad_norm=grad_norm,
+                            gamma=gamma_cur, rolled_back_to=snap_it,
+                            step_scale=scale))
+                        state = _copy_state(snap)
+                        gamma_now = snap_gamma_now
+                        g_prev = snap_g_prev
+                        stop_reason = StopReason.DIVERGED
+                        break
+                    health_recs.append(HealthRecord(
+                        it=it_done + n, status=status, action="rollback",
+                        retries=fails, dual_obj=g, grad_norm=grad_norm,
+                        gamma=gamma_cur, rolled_back_to=snap_it,
+                        step_scale=scale))
+                    state = _apply_backoff(_copy_state(snap), config,
+                                           snap_gamma_now, scale)
+                    if adaptive:
+                        # γ backoff: retry under heavier regularization;
+                        # the stall decay walks it back down afterwards
+                        gamma_now = min(
+                            snap_gamma_now * health.gamma_backoff ** fails,
+                            float(config.gamma_init))
+                    g_prev = snap_g_prev
+                    # the bad chunk's stats are discarded; the iteration
+                    # counter never advanced, so γ schedules rewind with it
+                    continue
+                fails = 0
+
+            it_done += n
+            stats_chunks.append(stats)
             if g_prev is None:
                 rel_dual = (abs(g - float(stats.dual_obj[0]))
                             / max(1.0, abs(g)) if n > 1 else float("inf"))
@@ -277,6 +450,14 @@ class SolveEngine:
             diags.append(rec)
             if diagnostics_fn is not None:
                 diagnostics_fn(rec)
+            if health is not None:
+                snap = _copy_state(state)
+                snap_it = it_done
+                snap_gamma_now = gamma_now
+                snap_g_prev = g_prev
+                snap_g, snap_grad, snap_gamma = g, grad_norm, gamma_cur
+            if checkpoint_fn is not None:
+                checkpoint_fn(it_done, state, _meta(final=False))
 
             # tolerance checks only count once γ has reached its target —
             # g and x*(λ) move with γ, so earlier "convergence" is spurious
@@ -290,11 +471,20 @@ class SolveEngine:
                 stop_reason = StopReason.MAX_SECONDS
                 break
 
-        stats = (stats_chunks[0] if len(stats_chunks) == 1 else
-                 jax.tree.map(lambda *xs: jnp.concatenate(xs), *stats_chunks))
+        if checkpoint_fn is not None:
+            checkpoint_fn(it_done, state, _meta(final=True))
+        if not stats_chunks:
+            stats = IterStats(*(jnp.zeros((0,), jnp.float32)
+                                for _ in IterStats._fields))
+        elif len(stats_chunks) == 1:
+            stats = stats_chunks[0]
+        else:
+            stats = jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                                 *stats_chunks)
         return SolveResult(lam=state.lam, stats=stats, iterations_run=it_done,
                            converged=converged, stop_reason=stop_reason,
-                           diagnostics=tuple(diags))
+                           diagnostics=tuple(diags),
+                           health=tuple(health_recs), final_state=state)
 
 
 def _infeas_scale(obj, criteria: Optional[StoppingCriteria]) -> float:
@@ -311,13 +501,22 @@ def maximize(calculate: Callable, lam0: jax.Array, config: SolveConfig,
              algorithm: str = "agd",
              criteria: Optional[StoppingCriteria] = None,
              diagnostics_fn: Optional[Callable] = None,
-             infeas_scale: float = 1.0) -> SolveResult:
+             infeas_scale: float = 1.0,
+             health: Optional[HealthConfig] = None,
+             checkpoint_fn: Optional[Callable] = None,
+             preempt_fn: Optional[Callable] = None,
+             initial_state: Optional[SolveState] = None,
+             resume_meta: Optional[dict] = None) -> SolveResult:
     """Thin wrapper over SolveEngine.  With no `criteria` this runs
     `config.iterations` steps as one jitted scan (the legacy fixed-length
-    behavior, bit-identical); with criteria it is tolerance-terminated."""
+    behavior, bit-identical); with criteria it is tolerance-terminated.
+    The fault-tolerance hooks (health guard, checkpoint/preempt/resume —
+    DESIGN.md §9) pass straight through to `SolveEngine.solve`."""
     return SolveEngine(calculate, config, algorithm).solve(
         lam0, criteria=criteria, diagnostics_fn=diagnostics_fn,
-        infeas_scale=infeas_scale)
+        infeas_scale=infeas_scale, health=health,
+        checkpoint_fn=checkpoint_fn, preempt_fn=preempt_fn,
+        initial_state=initial_state, resume_meta=resume_meta)
 
 
 class Maximizer:
@@ -357,10 +556,17 @@ class Maximizer:
 
     def maximize(self, obj, initial_value: Optional[jax.Array] = None,
                  criteria: Optional[StoppingCriteria] = None,
-                 diagnostics_fn: Optional[Callable] = None) -> SolveResult:
-        if initial_value is None:
+                 diagnostics_fn: Optional[Callable] = None,
+                 health: Optional[HealthConfig] = None,
+                 checkpoint_fn: Optional[Callable] = None,
+                 preempt_fn: Optional[Callable] = None,
+                 initial_state: Optional[SolveState] = None,
+                 resume_meta: Optional[dict] = None) -> SolveResult:
+        if initial_value is None and initial_state is None:
             initial_value = jnp.zeros(obj.dual_shape, jnp.float32)
         criteria = self.criteria if criteria is None else criteria
         return self._engine(obj).solve(
             initial_value, criteria=criteria, diagnostics_fn=diagnostics_fn,
-            infeas_scale=_infeas_scale(obj, criteria))
+            infeas_scale=_infeas_scale(obj, criteria), health=health,
+            checkpoint_fn=checkpoint_fn, preempt_fn=preempt_fn,
+            initial_state=initial_state, resume_meta=resume_meta)

@@ -194,17 +194,72 @@ class SolveConfig:
 
 
 class StopReason(enum.Enum):
-    """Why the solve loop exited (DESIGN.md §4).
+    """Why the solve loop exited (DESIGN.md §4, §9).
 
     CONVERGED means every tolerance set on the StoppingCriteria held
     simultaneously at a convergence check (with γ at its target) — the
     "matched stopping criteria" of the paper's speedup claims.  The caps
-    (iteration / wall-clock) terminate without convergence.
+    (iteration / wall-clock) terminate without convergence.  DIVERGED
+    means the health guard exhausted its rollback/backoff retries — the
+    returned λ is the last *healthy* iterate, never the poisoned one.
+    PREEMPTED means the caller's preempt hook requested an orderly stop
+    at a chunk boundary (the checkpoint/resume path, DESIGN.md §9).
     """
 
     CONVERGED = "converged"
     MAX_ITERATIONS = "max_iterations"
     MAX_SECONDS = "max_seconds"
+    DIVERGED = "diverged"
+    PREEMPTED = "preempted"
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Health-guard policy for the chunked solve loop (DESIGN.md §9).
+
+    After every chunk the host controller inspects the chunk's trailing
+    scalars plus λ-finiteness.  A chunk is *bad* when any of:
+
+      * non-finite — NaN/Inf in the dual objective, gradient norm,
+        infeasibility, or anywhere in λ itself (`check_lambda`);
+      * objective regression — g fell more than `obj_regression_tol ·
+        max(1, |g_good|)` below the last healthy chunk's value while γ
+        was unchanged (g legitimately moves when γ moves);
+      * gradient explosion — ‖∇g‖ grew beyond `grad_explosion ·
+        max(‖∇g_good‖, 1)`.
+
+    A bad chunk is rolled back to the last-good SolveState snapshot and
+    retried with momentum reset and the trusted step shrunk by
+    `step_backoff` per consecutive failure (implemented through the
+    Lipschitz estimate that *is* the step rule, so no recompilation);
+    in adaptive-continuation mode γ is additionally boosted by
+    `gamma_backoff` (more regularization = smoother dual).  After
+    `max_retries` consecutive failures the solve surfaces
+    StopReason.DIVERGED with the last-good λ.
+    """
+
+    max_retries: int = 3
+    obj_regression_tol: float = 0.5
+    grad_explosion: float = 100.0
+    step_backoff: float = 0.25
+    gamma_backoff: float = 4.0
+    check_lambda: bool = True
+
+
+class HealthRecord(NamedTuple):
+    """One incident record of the health-guard diagnostics stream
+    (DESIGN.md §9).  Only *bad* chunks produce records — a healthy solve
+    has an empty stream.  All fields are host-side Python scalars."""
+
+    it: int               # iteration count the bad chunk ended at
+    status: str           # "nonfinite" | "regression" | "grad_explosion"
+    action: str           # "rollback" (retrying) | "giveup" (DIVERGED)
+    retries: int          # consecutive failures so far, this one included
+    dual_obj: float       # g at the bad chunk's end (may be NaN)
+    grad_norm: float      # ‖∇g‖ at the bad chunk's end (may be NaN)
+    gamma: float          # γ of the bad chunk
+    rolled_back_to: int   # iteration of the snapshot restored
+    step_scale: float     # step-cap multiplier applied to the retry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -306,8 +361,15 @@ class IterStats(NamedTuple):
 class SolveResult(NamedTuple):
     """Solve output.  `stats` is stacked over the iterations actually
     executed (`iterations_run` entries — a tolerance-terminated solve returns
-    a shorter trajectory than the iteration cap).  `diagnostics` is the
-    per-check stream of host-side scalars (empty for fixed-length solves)."""
+    a shorter trajectory than the iteration cap; on a resumed solve only the
+    post-resume iterations, while `iterations_run` counts globally).
+    `diagnostics` is the per-check stream of host-side scalars (empty for
+    fixed-length solves).  `health` is the health-guard incident stream
+    (DESIGN.md §9; empty unless a HealthConfig was active and tripped).
+    `final_state` is the full device-resident SolveState at exit — what a
+    preemption-safe checkpoint persists so a resume continues the exact
+    trajectory; populated on every chunked solve, None on the fixed-length
+    fast path."""
 
     lam: jax.Array
     stats: IterStats          # stacked over executed iterations
@@ -315,3 +377,5 @@ class SolveResult(NamedTuple):
     converged: bool = False
     stop_reason: Optional[StopReason] = None
     diagnostics: Tuple[ConvergenceCheck, ...] = ()
+    health: Tuple[HealthRecord, ...] = ()
+    final_state: Optional["SolveState"] = None

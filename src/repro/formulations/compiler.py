@@ -34,6 +34,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.instance import validate_lp
 from repro.core.objectives import (AX_MODES, MatchingObjective, ObjectiveAux,
                                    slab_xcarry, slab_xgvals)
 from repro.core.preconditioning import row_normalize
@@ -321,6 +322,11 @@ def compile_formulation(
     row_norm: bool = False,
 ) -> ComposedObjective:
     """Lower a Formulation onto the shared engine (module docstring)."""
+    # reject malformed instances up front (NaN coefficients, negative
+    # budgets, ragged slabs, out-of-range dest indices): an LPValidationError
+    # here names every problem, where the solver would only surface NaNs
+    # hundreds of iterations later
+    validate_lp(lp, name=f"lp for formulation {form.name!r}")
     form.validate(lp.m)
     if ax_mode is not None and ax_mode not in AX_MODES:
         raise ValueError(f"ax_mode must be one of {AX_MODES}, got {ax_mode!r}")

@@ -15,15 +15,19 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import hashlib
+import signal
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (InstanceSpec, Maximizer, SolveConfig,
-                        StoppingCriteria, generate, precondition)
+from repro.core import (HealthConfig, InstanceSpec, LPValidationError,
+                        Maximizer, SolveConfig, StoppingCriteria, generate,
+                        precondition, validate_lp)
+from repro.core.types import SolveState, StopReason
 from repro.core.distributed import solve_distributed
+from repro.checkpoint.manager import CheckpointManager
 from repro.launch.mesh import make_mesh
 from repro import formulations
 
@@ -67,14 +71,32 @@ def load_duals(path: str, expected_shape=None, with_meta: bool = False):
     `with_meta=True` additionally returns the metadata dict (possibly
     empty for dumps written before metadata existed): keys
     `achieved_gamma` (float) and `fingerprint` (str) when present.
+
+    A corrupt or truncated dump raises ValueError naming the path —
+    a half-written file from a killed process must not surface as a
+    bare zipfile traceback deep inside the warm-start path.
     """
-    with np.load(path) as z:
-        lam = z["lam"]
-        meta = {}
-        if "achieved_gamma" in z:
-            meta["achieved_gamma"] = float(z["achieved_gamma"])
-        if "fingerprint" in z:
-            meta["fingerprint"] = str(z["fingerprint"])
+    try:
+        with np.load(path) as z:
+            if "lam" not in z.files:
+                raise ValueError(
+                    f"duals file {path} has no 'lam' array (keys: "
+                    f"{sorted(z.files)}); not a --save-duals dump")
+            lam = z["lam"]
+            meta = {}
+            if "achieved_gamma" in z:
+                meta["achieved_gamma"] = float(z["achieved_gamma"])
+            if "fingerprint" in z:
+                meta["fingerprint"] = str(z["fingerprint"])
+    except FileNotFoundError:
+        raise
+    except ValueError:
+        raise
+    except Exception as e:
+        raise ValueError(
+            f"duals file {path} is unreadable ({e}); the dump is corrupt "
+            f"or truncated — re-run the producing solve with --save-duals"
+        ) from e
     if expected_shape is not None and tuple(lam.shape) != tuple(expected_shape):
         raise ValueError(
             f"warm-start duals at {path} have shape {lam.shape}, but this "
@@ -174,7 +196,29 @@ def main():
                          "convergence checks")
     ap.add_argument("--verbose-checks", action="store_true",
                     help="print the diagnostics stream (one line per check)")
+    # fault tolerance (DESIGN.md §9)
+    ap.add_argument("--health-guard", action="store_true",
+                    help="check λ/grad/objective health every --check-every "
+                         "iterations; roll back to the last-good state and "
+                         "retry with smaller steps on NaN/Inf or divergence")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="health-guard retries per bad chunk before giving "
+                         "up with stop reason 'diverged'")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="persist the solver state to DIR at chunk "
+                         "boundaries; SIGTERM/SIGINT flushes a final "
+                         "checkpoint before exiting")
+    ap.add_argument("--checkpoint-every", type=int, default=100,
+                    help="minimum iterations between checkpoints (saves "
+                         "land on the next chunk boundary)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in "
+                         "--checkpoint-dir (exact trajectory: the resumed "
+                         "solve is bitwise-identical to an uninterrupted "
+                         "one at matched chunk boundaries)")
     args = ap.parse_args()
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
 
     spec = InstanceSpec(
         num_sources=args.sources, num_destinations=args.destinations,
@@ -182,6 +226,10 @@ def main():
         seed=args.seed)
     t0 = time.perf_counter()
     lp = jax.tree.map(jnp.asarray, generate(spec))
+    try:
+        validate_lp(lp, name="instance")
+    except LPValidationError as e:
+        raise SystemExit(f"generated instance failed validation:\n{e}")
     print(f"generated {args.sources}x{args.destinations} in "
           f"{time.perf_counter() - t0:.1f}s")
     continuation = args.continuation or args.adaptive_continuation
@@ -193,9 +241,11 @@ def main():
         initial_step=1e-5, use_pallas=args.use_pallas)
     criteria = None
     if (args.tol_infeas is not None or args.tol_rel_dual is not None
-            or args.max_seconds is not None or args.adaptive_continuation):
-        # adaptive continuation runs chunked even with no tolerances set —
-        # build the criteria so --check-every governs its check cadence
+            or args.max_seconds is not None or args.adaptive_continuation
+            or args.health_guard or args.checkpoint_dir):
+        # adaptive continuation / health guarding / checkpointing run
+        # chunked even with no tolerances set — build the criteria so
+        # --check-every governs the chunk cadence
         criteria = StoppingCriteria(
             tol_infeas=args.tol_infeas, tol_rel_dual=args.tol_rel_dual,
             max_seconds=args.max_seconds, check_every=args.check_every)
@@ -211,6 +261,81 @@ def main():
                  "--formulation matching (composed formulations solve on "
                  "a single replicated λ)")
     fingerprint = instance_fingerprint(lp)
+
+    # -- fault tolerance (DESIGN.md §9) ---------------------------------
+    health = (HealthConfig(max_retries=args.max_retries)
+              if args.health_guard else None)
+    checkpoint_fn = None
+    preempt_fn = None
+    resume_state = None
+    resume_meta = None
+    if args.checkpoint_dir:
+        mgr = CheckpointManager(args.checkpoint_dir, keep_last=3)
+        if args.resume:
+            step = mgr.latest_step()
+            if step is None:
+                print(f"--resume: no checkpoint in {args.checkpoint_dir}; "
+                      f"starting fresh")
+            else:
+                flat, extra = mgr.restore_flat(step)
+                ck_fp = extra.get("fingerprint")
+                if ck_fp is not None and ck_fp != fingerprint:
+                    raise SystemExit(
+                        f"--resume refused: checkpoint step {step} in "
+                        f"{args.checkpoint_dir} was written for a different "
+                        f"instance (fingerprint {ck_fp[:12]}.. != this "
+                        f"run's {fingerprint[:12]}..).  Re-run with the "
+                        f"original generation flags (--sources/"
+                        f"--destinations/--nnz-per-row/--seed) or point "
+                        f"--checkpoint-dir at an empty directory.")
+                # SolveState is a NamedTuple: its flatten keys are the
+                # attribute keys '.lam', '.y', ... (str(GetAttrKey))
+                resume_state = SolveState(
+                    *(jnp.asarray(flat[f".{f}"])
+                      for f in SolveState._fields))
+                resume_meta = {"gamma_now": extra.get("gamma_now"),
+                               "g_prev": extra.get("g_prev")}
+                print(f"resumed from checkpoint step {step} in "
+                      f"{args.checkpoint_dir} "
+                      f"(gamma_now={extra.get('gamma_now')})")
+
+        last_saved = {"it": None}
+
+        def checkpoint_fn(it, state, meta):
+            # the engine calls this at every healthy chunk boundary plus a
+            # forced `final` flush at exit; the hook decides the cadence.
+            # `state` must be consumed before returning — its buffers are
+            # donated to the next chunk (mgr.save copies them to host).
+            if it == last_saved["it"]:
+                return
+            if (not meta.get("final") and last_saved["it"] is not None
+                    and it - last_saved["it"] < args.checkpoint_every):
+                return
+            mgr.save(it, state,
+                     extra={"it": int(it),
+                            "gamma_now": float(meta["gamma_now"]),
+                            "g_prev": (None if meta["g_prev"] is None
+                                       else float(meta["g_prev"])),
+                            "fingerprint": fingerprint})
+            last_saved["it"] = it
+            print(f"checkpoint saved: step {it} -> {args.checkpoint_dir}",
+                  flush=True)
+
+        # SIGTERM/SIGINT (preemption, ctrl-C) => stop at the next chunk
+        # boundary; the engine's final checkpoint_fn call flushes the state
+        # reached, so `--resume` afterwards loses at most one chunk of work
+        got_signal = {"num": None}
+
+        def _on_signal(signum, frame):
+            got_signal["num"] = signum
+            print(f"received signal {signum}; checkpointing at next chunk "
+                  f"boundary", flush=True)
+
+        signal.signal(signal.SIGTERM, _on_signal)
+        signal.signal(signal.SIGINT, _on_signal)
+
+        def preempt_fn():
+            return got_signal["num"] is not None
 
     def load_warm(path, expected_shape):
         """Load warm-start duals and apply the continuation-skip policy."""
@@ -232,7 +357,7 @@ def main():
         if not args.no_precondition:
             lp, _ = precondition(lp, row_norm=True)
         lam0 = None
-        if args.warm_start:
+        if args.warm_start and resume_state is None:
             lam0 = load_warm(args.warm_start,
                              (lp.m, lp.num_destinations))
         n = jax.device_count()
@@ -245,7 +370,11 @@ def main():
                                 else None, lam0=lam0,
                                 ax_mode=("scatter" if ax_mode == "sorted"
                                          else ax_mode),
-                                criteria=criteria, diagnostics_fn=on_check)
+                                criteria=criteria, diagnostics_fn=on_check,
+                                health=health, checkpoint_fn=checkpoint_fn,
+                                preempt_fn=preempt_fn,
+                                initial_state=resume_state,
+                                resume_meta=resume_meta)
     else:
         obj = formulations.make_objective(
             args.formulation, lp,
@@ -256,10 +385,15 @@ def main():
               f"{obj.dual_shape[0]} dual rows "
               f"({ {k: f'{v.start}:{v.stop}' for k, v in obj.row_slices().items()} })")
         lam0 = (load_warm(args.warm_start, obj.dual_shape)
-                if args.warm_start else None)
+                if args.warm_start and resume_state is None else None)
         res = Maximizer(cfg).maximize(obj, initial_value=lam0,
                                       criteria=criteria,
-                                      diagnostics_fn=on_check)
+                                      diagnostics_fn=on_check,
+                                      health=health,
+                                      checkpoint_fn=checkpoint_fn,
+                                      preempt_fn=preempt_fn,
+                                      initial_state=resume_state,
+                                      resume_meta=resume_meta)
     jax.block_until_ready(res.lam)
     dt = time.perf_counter() - t0
     d = np.asarray(res.stats.dual_obj)
@@ -267,19 +401,34 @@ def main():
     print(f"{res.iterations_run} iterations in {dt:.2f}s "
           f"({dt / max(res.iterations_run, 1) * 1e3:.1f} ms/iter, compile "
           f"included); stop reason: {reason}")
-    print(f"dual {d[0]:.3f} -> {d[-1]:.3f}; "
-          f"infeas {float(res.stats.infeas[-1]):.3e}; "
-          f"gamma {float(res.stats.gamma[-1]):.4f}")
+    for rec in res.health:
+        print(f"  health: it {rec.it} {rec.status} -> {rec.action} "
+              f"(retry {rec.retries}, step_scale {rec.step_scale:.3g}, "
+              f"gamma {rec.gamma:.4g})")
+    if res.stop_reason == StopReason.DIVERGED:
+        print("solve DIVERGED: health-guard retries exhausted; the duals "
+              "are the last state that passed the health checks")
+    if d.size:
+        print(f"dual {d[0]:.3f} -> {d[-1]:.3f}; "
+              f"infeas {float(res.stats.infeas[-1]):.3e}; "
+              f"gamma {float(res.stats.gamma[-1]):.4f}")
+    if res.stop_reason == StopReason.PREEMPTED:
+        print(f"preempted at iteration {res.iterations_run}; resume with "
+              f"--resume --checkpoint-dir {args.checkpoint_dir}")
+    gamma_last = (float(res.stats.gamma[-1]) if d.size else cfg.gamma)
     if args.save_duals:
-        save_duals(args.save_duals, res.lam,
-                   gamma=float(res.stats.gamma[-1]),
+        save_duals(args.save_duals, res.lam, gamma=gamma_last,
                    fingerprint=fingerprint)
         print(f"saved duals -> {args.save_duals} "
-              f"(gamma={float(res.stats.gamma[-1]):.4g}, fingerprinted)")
+              f"(gamma={gamma_last:.4g}, fingerprinted)")
 
-    if args.export_primal or args.certify:
+    if ((args.export_primal or args.certify)
+            and res.stop_reason == StopReason.PREEMPTED):
+        print("skipping primal export/certification: solve was preempted "
+              "mid-trajectory (resume it to completion first)")
+    elif args.export_primal or args.certify:
         from repro import primal as primal_sub
-        gamma_final = jnp.float32(float(res.stats.gamma[-1]))
+        gamma_final = jnp.float32(gamma_last)
         if args.formulation == "matching":
             # serving/certification run single-host over the same
             # (preconditioned) LP the distributed solve consumed; λ is in

@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import Maximizer, SolveConfig, StoppingCriteria
-from repro.core.types import SolveResult
+from repro.core.types import SolveResult, StopReason
 
 from .extract import primal_rows_fn
 
@@ -58,12 +58,23 @@ class DecisionRow(NamedTuple):
 
 
 class QueryStats(NamedTuple):
+    """Serving metrics.  The trailing fields are the degraded-mode health
+    surface: `resolve_failures` counts every failed `warm_resolve` over
+    the server's lifetime, `consecutive_failures` the current streak,
+    `staleness_s` how long the served λ has gone without a successful
+    refresh, and `degraded` whether the server is currently answering
+    from a last-good λ after at least one failed refresh."""
+
     queries: int
     sources: int
     mean_ms: float
     p50_ms: float
     p95_ms: float
     sources_per_s: float
+    resolve_failures: int = 0
+    consecutive_failures: int = 0
+    staleness_s: float = 0.0
+    degraded: bool = False
 
 
 def _pad_pow2(n: int, floor: int = 8) -> int:
@@ -83,7 +94,8 @@ class AllocationServer:
     """
 
     def __init__(self, obj, lam, gamma, config: Optional[SolveConfig] = None,
-                 max_batch: int = 256):
+                 max_batch: int = 256, retry_backoff_s: float = 1.0,
+                 max_backoff_s: float = 60.0):
         self.obj = obj
         self.lam = jnp.asarray(lam)
         self.gamma = jnp.asarray(gamma, jnp.float32)
@@ -91,6 +103,15 @@ class AllocationServer:
         self.max_batch = int(max_batch)
         self._latencies = []
         self._sources_served = 0
+        # degraded-mode bookkeeping: failed warm_resolves never disturb the
+        # served (obj, λ) pair; retries are gated by exponential backoff
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.max_backoff_s = float(max_backoff_s)
+        self._resolve_failures = 0
+        self._consec_failures = 0
+        self._last_good_update = time.monotonic()
+        self._next_retry_at = 0.0
+        self.last_failure_reason: Optional[str] = None
         self._build_routes()
 
     def _build_routes(self):
@@ -167,15 +188,21 @@ class AllocationServer:
 
     def stats(self) -> QueryStats:
         lat = np.asarray(self._latencies)
+        health = dict(
+            resolve_failures=self._resolve_failures,
+            consecutive_failures=self._consec_failures,
+            staleness_s=time.monotonic() - self._last_good_update,
+            degraded=self._consec_failures > 0)
         if not lat.size:
-            return QueryStats(0, 0, 0.0, 0.0, 0.0, 0.0)
+            return QueryStats(0, 0, 0.0, 0.0, 0.0, 0.0, **health)
         total = float(lat.sum())
         return QueryStats(
             queries=len(lat), sources=self._sources_served,
             mean_ms=float(lat.mean() * 1e3),
             p50_ms=float(np.percentile(lat, 50) * 1e3),
             p95_ms=float(np.percentile(lat, 95) * 1e3),
-            sources_per_s=self._sources_served / total if total else 0.0)
+            sources_per_s=self._sources_served / total if total else 0.0,
+            **health)
 
     def reset_stats(self):
         self._latencies = []
@@ -190,34 +217,87 @@ class AllocationServer:
                 f"{tuple(self.obj.dual_shape)}")
         self.lam = lam
 
+    def _record_failure(self, reason: str) -> None:
+        """A warm_resolve failed: count it, schedule the next retry with
+        exponential backoff, leave the served (obj, λ) pair untouched."""
+        self._resolve_failures += 1
+        self._consec_failures += 1
+        self.last_failure_reason = reason
+        backoff = min(self.retry_backoff_s * 2.0 ** (self._consec_failures
+                                                     - 1),
+                      self.max_backoff_s)
+        self._next_retry_at = time.monotonic() + backoff
+        return None
+
     def warm_resolve(self, criteria: Optional[StoppingCriteria] = None,
                      obj=None, config: Optional[SolveConfig] = None,
-                     ) -> SolveResult:
+                     require_certificate: bool = False,
+                     force: bool = False) -> Optional[SolveResult]:
         """Incremental re-solve from the resident λ on an instance update.
 
         `obj` replaces the served objective (same dual shape — an rhs /
         budget-cap nudge, not a topology change).  γ-continuation is
         stripped from the config unconditionally: a warm start must NOT
         re-run the schedule (it would forfeit the head start — the rule
-        test_warm_start.py pins down).  The server keeps answering from
-        the old λ until the re-solve returns, then swaps.
+        test_warm_start.py pins down).
+
+        Degraded mode (DESIGN.md §9): a failed re-solve — an exception, a
+        diverged solve, non-finite duals, or (with `require_certificate`)
+        an invalid gap certificate — NEVER disturbs what is being served.
+        The server keeps answering from the last-good (obj, λ) pair,
+        records the failure (`stats().resolve_failures` / `.degraded` /
+        `.staleness_s`, `last_failure_reason`), and gates the next attempt
+        behind exponential backoff (retry_backoff_s · 2^k, capped at
+        max_backoff_s; `force=True` bypasses the gate).  Returns the
+        SolveResult on success, None on failure or while backoff-gated.
+        The (obj, λ) swap is atomic: both change together, after every
+        acceptance check has passed.
+
+        A dual-shape mismatch on `obj` still raises ValueError — that is
+        a caller bug (topology change), not a transient fault.
         """
-        swapped = obj is not None
-        if swapped:
-            if tuple(obj.dual_shape) != tuple(self.obj.dual_shape):
-                raise ValueError(
-                    f"replacement objective dual shape "
-                    f"{tuple(obj.dual_shape)} != served "
-                    f"{tuple(self.obj.dual_shape)}")
-            self.obj = obj
+        if obj is not None and (tuple(obj.dual_shape)
+                                != tuple(self.obj.dual_shape)):
+            raise ValueError(
+                f"replacement objective dual shape "
+                f"{tuple(obj.dual_shape)} != served "
+                f"{tuple(self.obj.dual_shape)}")
+        if not force and time.monotonic() < self._next_retry_at:
+            return None
+        target = obj if obj is not None else self.obj
         cfg = config or self.config or SolveConfig()
         cfg = dataclasses.replace(cfg, gamma_init=None,
                                   adaptive_continuation=False)
-        res = Maximizer(cfg).maximize(self.obj, initial_value=self.lam,
-                                      criteria=criteria)
-        jax.block_until_ready(res.lam)
-        self.update_duals(res.lam)
+        try:
+            res = Maximizer(cfg).maximize(target, initial_value=self.lam,
+                                          criteria=criteria)
+            jax.block_until_ready(res.lam)
+        except Exception as e:
+            return self._record_failure(
+                f"re-solve raised {type(e).__name__}: {e}")
+        if res.stop_reason == StopReason.DIVERGED:
+            return self._record_failure("re-solve diverged")
+        if not bool(jnp.isfinite(res.lam).all()):
+            return self._record_failure("re-solve returned non-finite duals")
+        if require_certificate:
+            from .certify import certify as _certify
+            try:
+                cert = _certify(target, res.lam, self.gamma)
+            except Exception as e:
+                return self._record_failure(
+                    f"certification raised {type(e).__name__}: {e}")
+            if not cert.valid:
+                return self._record_failure(
+                    "re-solved duals failed certification")
+        # success: swap (obj, λ) atomically and clear the failure streak
+        swapped = obj is not None
+        self.obj = target
+        self.lam = jnp.asarray(res.lam)
+        self._consec_failures = 0
+        self._next_retry_at = 0.0
+        self._last_good_update = time.monotonic()
         if swapped:
+            self._build_routes()
             # the query kernels are cached per objective identity; re-warm
             # off the request path so the first post-update queries don't
             # pay XLA compile in their latency

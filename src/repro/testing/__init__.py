@@ -1,0 +1,12 @@
+"""Fault-injection harness for the fault-tolerance layer (DESIGN.md §9).
+
+Test-only: nothing in here is imported by production code paths.
+"""
+from .faults import (ChunkFaultInjector, ExplodingObjective,
+                     NaNInjectingObjective, PreemptAfter,
+                     corrupt_checkpoint, litter_tmp)
+
+__all__ = [
+    "NaNInjectingObjective", "ChunkFaultInjector", "ExplodingObjective",
+    "PreemptAfter", "corrupt_checkpoint", "litter_tmp",
+]

@@ -1,0 +1,168 @@
+"""Fault injectors: the chaos half of the fault-tolerance contract.
+
+Two complementary fault models, matching where real failures live:
+
+  * traced faults (`NaNInjectingObjective`) poison the objective INSIDE
+    the jitted chunk — the model of a persistent numerical failure (a
+    bad kernel, an overflowing instance).  Because the wrapper is traced
+    once, it cannot count host-side retries: a traced fault is
+    deterministic in λ, so a health-guard retry over the same trajectory
+    hits it again.  Use it to exercise the retries-exhausted
+    (`StopReason.DIVERGED`) path.
+
+  * host faults (`ChunkFaultInjector`) poison the chunk RESULT at the
+    host boundary, via `SolveEngine.chunk_fault_hook` — the model of a
+    transient device fault (an ECC hiccup, a flaky interconnect).  The
+    injector counts encounters on the host, so it can fire N times and
+    then stop: the rollback's retry of the same chunk succeeds.  Use it
+    to exercise the converges-anyway path.
+
+Plus the supporting cast: `PreemptAfter` (a preempt_fn that trips after
+a set number of chunk boundaries), `ExplodingObjective` (raises inside
+`calculate` — the warm_resolve exception path), and the checkpoint
+saboteurs `corrupt_checkpoint` / `litter_tmp`.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class NaNInjectingObjective:
+    """Wrap an objective so its `calculate` returns NaN-poisoned (g, grad).
+
+    mode="always"     every evaluation is poisoned — a persistent fault;
+    mode="trip_norm"  poisoned once ‖λ‖₂ ≥ `trip_norm` — healthy early
+                      iterations, then a deterministic trip partway
+                      through the trajectory (the dual norm grows from a
+                      zero start).
+
+    The condition is computed with traced ops (`jnp.where`), so the
+    wrapper composes with jit/scan exactly like the real objective.
+    All other attributes (dual_shape, lp, primal_rows, ...) delegate to
+    the wrapped objective.
+    """
+
+    def __init__(self, inner, mode: str = "always",
+                 trip_norm: Optional[float] = None):
+        if mode not in ("always", "trip_norm"):
+            raise ValueError(f"mode must be 'always' or 'trip_norm', "
+                             f"got {mode!r}")
+        if mode == "trip_norm" and trip_norm is None:
+            raise ValueError("mode='trip_norm' requires trip_norm")
+        self.inner = inner
+        self.mode = mode
+        self.trip_norm = trip_norm
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def calculate(self, lam, gamma):
+        g, grad, aux = self.inner.calculate(lam, gamma)
+        if self.mode == "always":
+            bad = jnp.asarray(True)
+        else:
+            bad = jnp.linalg.norm(lam) >= jnp.float32(self.trip_norm)
+        nan = jnp.float32(jnp.nan)
+        g = jnp.where(bad, nan, g)
+        grad = jnp.where(bad, jnp.full_like(grad, nan), grad)
+        return g, grad, aux
+
+
+class ChunkFaultInjector:
+    """Host-level transient fault for `SolveEngine.chunk_fault_hook`.
+
+    Poisons one SolveState field with NaN when a chunk starting at
+    iteration `at_it` completes, for the first `times` encounters — the
+    health guard's rollback re-runs the same chunk, encounters the fault
+    again (until `times` is spent), then the retry comes back clean.
+    """
+
+    def __init__(self, at_it: int, times: int = 1, field: str = "lam"):
+        self.at_it = int(at_it)
+        self.times = int(times)
+        self.field = field
+        self.injected = 0
+
+    def __call__(self, it_start, state, stats):
+        if it_start == self.at_it and self.injected < self.times:
+            self.injected += 1
+            poison = jnp.full_like(getattr(state, self.field), jnp.nan)
+            state = state._replace(**{self.field: poison})
+        return state, stats
+
+
+class ExplodingObjective:
+    """Raises inside `calculate` — models a re-solve that dies outright
+    (OOM, compile failure).  Exercises the server's exception path."""
+
+    def __init__(self, inner, message: str = "injected resolve failure"):
+        self.inner = inner
+        self.message = message
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def calculate(self, lam, gamma):
+        raise RuntimeError(self.message)
+
+
+class PreemptAfter:
+    """A `preempt_fn` that returns True after `n` chunk boundaries —
+    a deterministic stand-in for a SIGTERM arriving mid-solve."""
+
+    def __init__(self, n: int):
+        self.n = int(n)
+        self.calls = 0
+
+    def __call__(self) -> bool:
+        self.calls += 1
+        return self.calls > self.n
+
+
+def corrupt_checkpoint(directory: str, step: Optional[int] = None,
+                       kind: str = "truncate") -> str:
+    """Sabotage a committed checkpoint step (the latest by default).
+
+    kind="truncate"  chop arrays.npz in half (a torn write that somehow
+                     got committed — e.g. a disk that lied about fsync);
+    kind="garbage"   overwrite arrays.npz with non-zip bytes;
+    kind="drop_meta" delete meta.json.
+
+    Returns the path of the sabotaged step dir.
+    """
+    from repro.checkpoint.manager import CheckpointManager
+    mgr = CheckpointManager(directory)
+    if step is None:
+        step = mgr.latest_step()
+        if step is None:
+            raise ValueError(f"no committed checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    npz = os.path.join(path, "arrays.npz")
+    if kind == "truncate":
+        size = os.path.getsize(npz)
+        with open(npz, "rb+") as f:
+            f.truncate(max(size // 2, 1))
+    elif kind == "garbage":
+        with open(npz, "wb") as f:
+            f.write(b"not a zipfile, definitely")
+    elif kind == "drop_meta":
+        os.remove(os.path.join(path, "meta.json"))
+    else:
+        raise ValueError(f"unknown corruption kind {kind!r}")
+    return path
+
+
+def litter_tmp(directory: str, step: int = 999, old: bool = False) -> str:
+    """Drop a crash-leftover `step_N.tmp/` (or `.old/`) dir with junk in
+    it — what a kill mid-save leaves behind.  The manager must neither
+    parse it as a step nor trip over it."""
+    suffix = ".old" if old else ".tmp"
+    path = os.path.join(directory, f"step_{step:010d}{suffix}")
+    os.makedirs(path, exist_ok=True)
+    with open(os.path.join(path, "arrays.npz"), "wb") as f:
+        f.write(b"half-written junk")
+    return path

@@ -1,0 +1,86 @@
+"""CheckpointManager fault-tolerance regressions (DESIGN.md §7/§9):
+replace-safe re-save, crash-litter hygiene, corrupt-checkpoint errors.
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.testing import corrupt_checkpoint, litter_tmp
+
+
+def _state(v: float):
+    return {"a": np.full((4,), v, np.float32),
+            "b": np.arange(3, dtype=np.int32)}
+
+
+class TestReplaceSafeSave:
+    def test_resave_same_step_overwrites(self):
+        """The final exit flush can land on an already-checkpointed
+        boundary: saving the same step twice must replace, not raise
+        (os.rename onto a non-empty dir raises ENOTEMPTY)."""
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d)
+            mgr.save(7, _state(1.0), extra={"v": 1})
+            mgr.save(7, _state(2.0), extra={"v": 2})
+            assert mgr.all_steps() == [7]
+            flat, extra = mgr.restore_flat(7)
+            assert extra == {"v": 2}
+            np.testing.assert_array_equal(flat["a"], _state(2.0)["a"])
+            # the .old swap dir must not linger
+            assert not any(n.endswith(".old") for n in os.listdir(d))
+
+    def test_restore_flat_roundtrip(self):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d)
+            mgr.save(3, _state(5.0), extra={"gamma_now": 0.25})
+            flat, extra = mgr.restore_flat(3)
+            np.testing.assert_array_equal(flat["b"], np.arange(3))
+            assert extra["gamma_now"] == 0.25
+
+
+class TestLitterHygiene:
+    def test_tmp_and_old_litter_ignored_and_swept(self):
+        """Crash leftovers (`.tmp` from a kill mid-save, `.old` from a
+        kill mid-replace) are never parsed as steps and are swept by the
+        next manager constructed over the directory."""
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d)
+            mgr.save(1, _state(1.0))
+            litter_tmp(d, step=999)
+            litter_tmp(d, step=998, old=True)
+            assert mgr.all_steps() == [1]            # litter not a step
+            assert mgr.latest_step() == 1
+            mgr2 = CheckpointManager(d)              # reopen sweeps
+            assert mgr2.all_steps() == [1]
+            assert not any(n.endswith((".tmp", ".old"))
+                           for n in os.listdir(d))
+
+    def test_foreign_files_ignored(self):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d)
+            mgr.save(2, _state(1.0))
+            open(os.path.join(d, "step_notanumber"), "w").close()
+            open(os.path.join(d, "README"), "w").close()
+            assert mgr.all_steps() == [2]
+
+
+class TestCorruptCheckpoints:
+    @pytest.mark.parametrize("kind", ["truncate", "garbage", "drop_meta"])
+    def test_corrupt_step_raises_valueerror_naming_path(self, kind):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d)
+            mgr.save(4, _state(1.0))
+            corrupt_checkpoint(d, kind=kind)
+            with pytest.raises(ValueError, match=d):
+                mgr.restore_flat(4)
+
+    def test_missing_arrays_key_names_structure_problem(self):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d)
+            mgr.save(5, _state(1.0))
+            with pytest.raises(ValueError, match="no array"):
+                mgr.restore(5, {"a": np.zeros(4, np.float32),
+                                "zz": np.zeros(1, np.float32)})

@@ -1,0 +1,262 @@
+"""Fault tolerance (DESIGN.md §9): health-guarded engine, checkpoint
+resume, degraded-mode serving, instance validation.
+
+The contract under test:
+  * a transient bad chunk -> rollback to last-good + backoff -> the solve
+    converges anyway, with the incident in `result.health`;
+  * a persistent fault -> bounded retries -> StopReason.DIVERGED with a
+    FINITE last-good λ (never the poisoned one);
+  * a healthy guarded run is bitwise identical to an unguarded one;
+  * preempt + checkpoint + resume replays the exact trajectory — bitwise
+    equal duals AND stats, in both scheduled and adaptive-γ modes;
+  * a failed warm_resolve never disturbs what the server is serving.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (HealthConfig, InstanceSpec, LPValidationError,
+                        MatchingObjective, Maximizer, SolveConfig,
+                        StopReason, StoppingCriteria, generate,
+                        precondition, validate_lp)
+from repro.core.maximizer import SolveEngine
+from repro.testing import (ChunkFaultInjector, ExplodingObjective,
+                           NaNInjectingObjective, PreemptAfter)
+
+
+@pytest.fixture(scope="module")
+def lp():
+    spec = InstanceSpec(num_sources=30, num_destinations=8,
+                        avg_nnz_per_row=10, seed=3)
+    lp = jax.tree.map(jnp.asarray, generate(spec))
+    lp, _ = precondition(lp, row_norm=True)
+    return lp
+
+
+CFG = SolveConfig(iterations=120, gamma=0.1, max_step=10.0,
+                  initial_step=1e-3)
+CRIT = StoppingCriteria(tol_grad_norm=0.0, check_every=7)
+
+
+def _zeros(obj):
+    return jnp.zeros(obj.dual_shape, jnp.float32)
+
+
+class TestHealthGuard:
+    def test_healthy_guarded_run_is_bitwise_identical(self, lp):
+        """The guard must observe, never perturb: same duals, same stats,
+        empty health stream when nothing goes wrong."""
+        obj = MatchingObjective(lp)
+        plain = Maximizer(CFG).maximize(obj, criteria=CRIT)
+        guarded = Maximizer(CFG).maximize(obj, criteria=CRIT,
+                                          health=HealthConfig())
+        np.testing.assert_array_equal(np.asarray(plain.lam),
+                                      np.asarray(guarded.lam))
+        for a, b in zip(plain.stats, guarded.stats):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert guarded.health == ()
+        assert guarded.stop_reason == StopReason.MAX_ITERATIONS
+
+    def test_transient_fault_rolls_back_and_converges(self, lp):
+        """Two NaN chunks at it=14 -> two rollbacks -> the clean retry
+        proceeds to the optimum.  The fault never reaches the result."""
+        obj = MatchingObjective(lp)
+        eng = SolveEngine(obj.calculate, CFG)
+        inj = ChunkFaultInjector(at_it=14, times=2)
+        eng.chunk_fault_hook = inj
+        res = eng.solve(_zeros(obj), criteria=CRIT,
+                        health=HealthConfig(max_retries=3))
+        assert inj.injected == 2
+        assert res.stop_reason == StopReason.MAX_ITERATIONS
+        assert res.iterations_run == CFG.iterations
+        assert bool(jnp.isfinite(res.lam).all())
+        assert np.all(np.isfinite(np.asarray(res.stats.dual_obj)))
+        assert [(r.status, r.action, r.retries) for r in res.health] == [
+            ("nonfinite", "rollback", 1), ("nonfinite", "rollback", 2)]
+        assert all(r.rolled_back_to == 14 for r in res.health)
+        # backoff shrinks the retry step geometrically
+        assert res.health[1].step_scale < res.health[0].step_scale
+        # recovered trajectory lands at the same optimum (not bitwise:
+        # the backoff deliberately re-runs the chunk with smaller steps)
+        clean = Maximizer(CFG).maximize(obj, criteria=CRIT)
+        assert float(res.stats.dual_obj[-1]) == pytest.approx(
+            float(clean.stats.dual_obj[-1]), rel=5e-2)
+
+    def test_persistent_host_fault_stops_diverged(self, lp):
+        """A fault that survives every retry exhausts the budget: the
+        solve surfaces DIVERGED and hands back the last-GOOD duals."""
+        obj = MatchingObjective(lp)
+        eng = SolveEngine(obj.calculate, CFG)
+        eng.chunk_fault_hook = ChunkFaultInjector(at_it=14, times=10 ** 9)
+        res = eng.solve(_zeros(obj), criteria=CRIT,
+                        health=HealthConfig(max_retries=3))
+        assert res.stop_reason == StopReason.DIVERGED
+        assert res.iterations_run == 14          # never advanced past it
+        assert bool(jnp.isfinite(res.lam).all())  # last-good, not poisoned
+        assert len(res.health) == 4              # 3 rollbacks + giveup
+        assert res.health[-1].action == "giveup"
+        assert not res.converged
+
+    def test_traced_nan_objective_stops_diverged(self, lp):
+        """The traced fault model: the objective itself NaNs once ‖λ‖
+        crosses a threshold — every retry re-trips it (deterministic in
+        λ), so the guard must conclude DIVERGED, not loop forever."""
+        obj = NaNInjectingObjective(MatchingObjective(lp), mode="trip_norm",
+                                    trip_norm=1e-2)
+        res = Maximizer(CFG).maximize(obj, criteria=CRIT,
+                                      health=HealthConfig(max_retries=2))
+        assert res.stop_reason == StopReason.DIVERGED
+        assert bool(jnp.isfinite(res.lam).all())
+        assert res.health[-1].action == "giveup"
+
+    def test_unguarded_nan_still_propagates(self, lp):
+        """Without a HealthConfig the engine is the legacy engine: a NaN
+        objective reaches the result untouched (no silent guarding)."""
+        obj = NaNInjectingObjective(MatchingObjective(lp), mode="always")
+        res = Maximizer(CFG).maximize(obj, criteria=CRIT)
+        assert not bool(jnp.isfinite(res.lam).all())
+        assert res.health == ()
+
+
+class TestPreemptResume:
+    @pytest.mark.parametrize("adaptive", [False, True],
+                             ids=["scheduled", "adaptive"])
+    def test_kill_and_resume_is_bitwise_identical(self, lp, adaptive):
+        """Preempt mid-solve, persist at the boundary, resume: duals and
+        the stitched stats must equal the uninterrupted run bit-for-bit."""
+        cfg = (SolveConfig(iterations=120, gamma=0.05, gamma_init=0.8,
+                           gamma_decay_rate=0.5, max_step=20.0,
+                           initial_step=1e-3, adaptive_continuation=True)
+               if adaptive else CFG)
+        crit = StoppingCriteria(tol_grad_norm=0.0, check_every=10)
+        obj = MatchingObjective(lp)
+        full = Maximizer(cfg).maximize(obj, criteria=crit)
+
+        saved = {}
+
+        def ckpt(it, state, meta):
+            saved[it] = (jax.tree.map(np.asarray, state), dict(meta))
+
+        part = Maximizer(cfg).maximize(obj, criteria=crit,
+                                       checkpoint_fn=ckpt,
+                                       preempt_fn=PreemptAfter(4))
+        assert part.stop_reason == StopReason.PREEMPTED
+        assert part.iterations_run == 40
+        it, (state_np, meta) = max(saved.items())
+        assert meta["final"]     # the exit flush covered the boundary
+        state = jax.tree.map(jnp.asarray, state_np)
+        res = Maximizer(cfg).maximize(obj, criteria=crit,
+                                      initial_state=state, resume_meta=meta)
+        assert res.iterations_run == cfg.iterations
+        np.testing.assert_array_equal(np.asarray(full.lam),
+                                      np.asarray(res.lam))
+        for a, b, c in zip(full.stats, part.stats, res.stats):
+            np.testing.assert_array_equal(
+                np.asarray(a),
+                np.concatenate([np.asarray(b), np.asarray(c)]))
+
+    def test_preempt_before_first_chunk(self, lp):
+        obj = MatchingObjective(lp)
+        res = Maximizer(CFG).maximize(obj, criteria=CRIT,
+                                      preempt_fn=PreemptAfter(0))
+        assert res.stop_reason == StopReason.PREEMPTED
+        assert res.iterations_run == 0
+        assert res.final_state is not None
+
+
+class TestServerDegradedMode:
+    def _server(self, lp):
+        from repro import primal
+        obj = MatchingObjective(lp)
+        res = Maximizer(CFG).maximize(obj, criteria=CRIT)
+        return primal.AllocationServer(obj, res.lam, CFG.gamma, config=CFG,
+                                       retry_backoff_s=30.0), obj
+
+    def test_failed_resolve_keeps_serving_last_good(self, lp):
+        srv, obj = self._server(lp)
+        before = np.asarray(srv.lam).copy()
+        out = srv.warm_resolve(criteria=CRIT,
+                               obj=ExplodingObjective(obj))
+        assert out is None
+        np.testing.assert_array_equal(np.asarray(srv.lam), before)
+        assert srv.obj is obj                 # objective not swapped either
+        st = srv.stats()
+        assert st.resolve_failures == 1 and st.consecutive_failures == 1
+        assert st.degraded and st.staleness_s >= 0.0
+        assert "injected resolve failure" in srv.last_failure_reason
+        # queries still answer from the last-good λ
+        assert len(srv.query(srv.source_ids()[:3].tolist())) == 3
+
+    def test_nonfinite_resolve_rejected(self, lp):
+        srv, obj = self._server(lp)
+        before = np.asarray(srv.lam).copy()
+        out = srv.warm_resolve(criteria=CRIT,
+                               obj=NaNInjectingObjective(obj))
+        assert out is None
+        np.testing.assert_array_equal(np.asarray(srv.lam), before)
+        assert srv.stats().degraded
+        assert "non-finite" in srv.last_failure_reason
+
+    def test_backoff_gates_then_force_recovers(self, lp):
+        srv, obj = self._server(lp)
+        assert srv.warm_resolve(criteria=CRIT,
+                                obj=ExplodingObjective(obj)) is None
+        # within the backoff window: gated, no work, no new failure count
+        assert srv.warm_resolve(criteria=CRIT) is None
+        assert srv.stats().resolve_failures == 1
+        # force bypasses the gate; a healthy resolve clears the streak
+        res = srv.warm_resolve(criteria=CRIT, force=True)
+        assert res is not None
+        assert bool(jnp.isfinite(res.lam).all())
+        st = srv.stats()
+        assert st.consecutive_failures == 0 and not st.degraded
+        assert st.resolve_failures == 1       # lifetime counter survives
+
+    def test_shape_mismatch_still_raises(self, lp):
+        """A topology change is a caller bug, not a transient fault."""
+        srv, obj = self._server(lp)
+
+        class Misshapen:
+            dual_shape = (3,)
+
+        with pytest.raises(ValueError, match="dual shape"):
+            srv.warm_resolve(obj=Misshapen())
+        assert srv.stats().resolve_failures == 0
+
+
+class TestValidateLP:
+    def test_generated_instance_is_valid(self, lp):
+        assert validate_lp(lp) is lp
+
+    def test_collects_all_problems(self, lp):
+        s0 = lp.slabs[0]
+        i, j = np.argwhere(np.asarray(s0.mask))[0]
+        a_bad = np.asarray(s0.a_vals).copy()
+        a_bad[i, j, 0] = np.nan
+        bad = lp._replace(
+            b=jnp.asarray(-np.abs(np.asarray(lp.b)) - 1.0),
+            slabs=(s0._replace(a_vals=jnp.asarray(a_bad)),)
+            + tuple(lp.slabs[1:]))
+        with pytest.raises(LPValidationError) as ei:
+            validate_lp(bad, name="bad")
+        msg = str(ei.value)
+        assert "'bad'" in msg and "negative capacit" in msg
+        assert "a_vals" in msg
+        assert len(ei.value.problems) >= 2
+
+    def test_out_of_range_dest_idx(self, lp):
+        s0 = lp.slabs[0]
+        i, j = np.argwhere(np.asarray(s0.mask))[0]
+        d_bad = np.asarray(s0.dest_idx).copy()
+        d_bad[i, j] = lp.num_destinations + 5
+        bad = lp._replace(slabs=(s0._replace(dest_idx=jnp.asarray(d_bad)),)
+                          + tuple(lp.slabs[1:]))
+        with pytest.raises(LPValidationError, match="dest_idx"):
+            validate_lp(bad)
+
+    def test_compiler_rejects_invalid_lp(self, lp):
+        from repro import formulations
+        bad = lp._replace(b=jnp.full_like(lp.b, jnp.nan))
+        with pytest.raises(LPValidationError):
+            formulations.make_objective("matching", bad)
