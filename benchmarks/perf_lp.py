@@ -58,7 +58,14 @@ matched stopping criteria; its dual_drift_rel vs the gvals-aligned row is
 the CI convergence gate) and a formulation-subsystem row
 (`tol_multi_budget_aligned`): the multi_budget spec compiled through
 repro.formulations and solved to the same tolerances — the new subsystem
-stays on the perf trajectory from the day it lands.
+stays on the perf trajectory from the day it lands.  It also races the
+registered update rules (DESIGN.md §10): agd vs pdhg vs bb on every
+registered formulation under one shared StoppingCriteria (dual stability
+AND feasibility), rows `tol_agd`/`tol_pdhg`/`tol_bb` (matching) and
+`tol_<rule>_<formulation>`, each reporting iterations- and
+wall-clock-to-tolerance plus dual_drift_rel_vs_agd; `tol_rules_summary`
+aggregates pdhg's per-formulation iteration speedups and the >= 2x count
+the CI smoke gates on.
 
 `run_serve` measures the primal serving subsystem (DESIGN.md §8) on a
 solved instance: streaming-extraction throughput in sources/sec (compile
@@ -347,6 +354,82 @@ def run_tolerance(quick: bool = False):
             "infeas": float(res.stats.infeas[-1]),
             "checks": len(res.diagnostics),
             "dual_rows": int(obj.dual_shape[0]),
+        }})
+
+    # --- per-update-rule rows (DESIGN.md §10): agd vs pdhg vs bb ---------
+    # Every registered formulation × every competitive rule, under ONE
+    # shared StoppingCriteria (dual stability AND feasibility — a solver
+    # race decided by dual stagnation alone rewards the rule that stalls
+    # first, so the uniform criterion requires both).  The x-carry aligned
+    # lowering for all rows; warm-up per combo excludes compile; iteration
+    # counts are deterministic, wall-clock is informational (single timed
+    # run — this host's clock drifts, and the gate rides on iterations).
+    # Headline rows (matching): tol_agd / tol_pdhg / tol_bb; other
+    # formulations get tol_<rule>_<formulation>.  The pdhg rows carry
+    # iters_speedup_vs_agd — the acceptance claim is >= 2x on at least two
+    # formulations (tol_rules_summary.pdhg_2x_count) — and every rule row
+    # carries dual_drift_rel_vs_agd as the same-answer guard.
+    crit_rules = StoppingCriteria(tol_rel_dual=1e-6, tol_infeas_rel=1e-4,
+                                  check_every=25,
+                                  max_seconds=120.0 if quick else 600.0)
+    cfg_rules = SolveConfig(iterations=30000, gamma=0.01, max_step=1e-1,
+                            initial_step=1e-5)
+    forms = ("matching", "global_count", "multi_budget", "assignment_eq")
+    rules = ("agd", "pdhg", "bb")
+    agd_res = {}
+    for rule in rules:
+        for form in forms:
+            params = {"proj_iters": 20} if form == "matching" else None
+            obj = formulations.make_objective(form, lp_host, params=params,
+                                              ax_mode="aligned",
+                                              row_norm=True)
+            mx = Maximizer(cfg_rules, algorithm=rule)
+            warm = mx.maximize(obj, criteria=StoppingCriteria(
+                max_iterations=crit_rules.check_every))
+            jax.block_until_ready(warm.lam)
+            t0 = time.perf_counter()
+            res = mx.maximize(obj, criteria=crit_rules)
+            jax.block_until_ready(res.lam)
+            dt = time.perf_counter() - t0
+            name = (f"perf_lp/tol_{rule}" if form == "matching"
+                    else f"perf_lp/tol_{rule}_{form}")
+            derived = {
+                "algorithm": rule,
+                "formulation": form,
+                "seconds_to_stop": dt,
+                "iterations_run": res.iterations_run,
+                "stop_reason": res.stop_reason.value,
+                "converged": res.converged,
+                "dual": float(res.stats.dual_obj[-1]),
+                "infeas": float(res.stats.infeas[-1]),
+                "checks": len(res.diagnostics),
+            }
+            if rule == "agd":
+                agd_res[form] = derived
+            else:
+                base = agd_res[form]
+                derived["iters_speedup_vs_agd"] = (
+                    base["iterations_run"] / max(res.iterations_run, 1))
+                derived["wallclock_speedup_vs_agd"] = (
+                    base["seconds_to_stop"] / max(dt, 1e-9))
+                derived["dual_drift_rel_vs_agd"] = (
+                    abs(derived["dual"] - base["dual"]) / abs(base["dual"]))
+            rows.append({"name": name,
+                         "us_per_call": dt / max(res.iterations_run, 1) * 1e6,
+                         "derived": derived})
+    by = {r["name"]: r["derived"] for r in rows}
+    pdhg_speedups = {
+        form: by[f"perf_lp/tol_pdhg" if form == "matching"
+                 else f"perf_lp/tol_pdhg_{form}"].get(
+                     "iters_speedup_vs_agd", 0.0)
+        for form in forms}
+    rows.append({
+        "name": "perf_lp/tol_rules_summary", "us_per_call": 0.0,
+        "derived": {
+            "formulations": list(forms),
+            "pdhg_iters_speedup": pdhg_speedups,
+            "pdhg_2x_count": sum(1 for v in pdhg_speedups.values()
+                                 if v >= 2.0),
         }})
     return rows
 

@@ -20,7 +20,10 @@ rest of the artifact; ``--fresh`` replaces the file wholesale).
            the paper's actual speedup metric (scatter vs aligned vs x-carry
            rows share one StoppingCriteria; each reports
            seconds/iterations/stop_reason; tol_xcarry's drift vs
-           tol_aligned is the CI gate)
+           tol_aligned is the CI gate), plus the update-rule race
+           (tol_agd/tol_pdhg/tol_bb × every registered formulation under
+           one shared criteria; tol_rules_summary carries the pdhg >= 2x
+           iteration-speedup count the CI smoke gates on)
   perf_lp_bytes  analytic HBM bytes/iteration of the three Ax lowerings
            from compiled HLO (launch/hlo_cost.py): the no-gvals and
            ≥2x dynamic edge-traffic acceptance checks

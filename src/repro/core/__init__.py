@@ -15,6 +15,7 @@ from .objectives import (MatchingObjective, GlobalCountObjective,
                          ObjectiveAux, AX_MODES)
 from .maximizer import (Maximizer, SolveEngine, maximize, gamma_at,
                         max_step_at)
+from .update_rules import UpdateRule, get_rule, register_rule, rule_names
 from .preconditioning import (row_normalize, primal_scale, precondition,
                               row_norms, undo_row_scaling,
                               undo_primal_scaling, gram_condition_number)
@@ -31,6 +32,7 @@ __all__ = [
     "MatchingObjective", "GlobalCountObjective", "dual_value_and_grad",
     "slab_xgvals", "slab_xcarry", "ObjectiveAux", "AX_MODES",
     "Maximizer", "maximize", "gamma_at", "max_step_at",
+    "UpdateRule", "get_rule", "register_rule", "rule_names",
     "row_normalize", "primal_scale", "precondition", "row_norms",
     "undo_row_scaling", "undo_primal_scaling", "gram_condition_number",
     "InstanceSpec", "LPValidationError", "validate_lp", "generate",

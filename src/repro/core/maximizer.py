@@ -25,6 +25,13 @@ iteration count — bit-identical to the legacy fixed-length behavior.  The
 update is *replicated* across shards in the distributed setting
 (mathematically identical to the paper's rank-0-update-then-broadcast, see
 DESIGN.md §2).
+
+What one iteration *does* is pluggable: the engine resolves `algorithm`
+through the UpdateRule registry (core/update_rules.py, DESIGN.md §10) at
+construction and drives the rule's init-state / step / rollback-retry /
+checkpoint hooks.  The step math itself — `agd_step`, `pga_step` and
+friends, plus `gamma_at` / `max_step_at` / `initial_state` — lives in
+`update_rules` and is re-exported here for compatibility.
 """
 from __future__ import annotations
 
@@ -39,106 +46,13 @@ import jax.numpy as jnp
 from .types import (ConvergenceCheck, HealthConfig, HealthRecord, IterStats,
                     SolveConfig, SolveResult, SolveState, StopReason,
                     StoppingCriteria)
+from .update_rules import (UpdateRule, agd_step, bb_step, gamma_at, get_rule,
+                           initial_state, max_step_at, pdhg_step, pga_step,
+                           rule_names, _lipschitz_update)
 
-
-def gamma_at(config: SolveConfig, it: jax.Array) -> jax.Array:
-    """Continuation schedule γ(t); constant when continuation is off."""
-    if config.gamma_init is None or config.gamma_init <= config.gamma:
-        return jnp.asarray(config.gamma, jnp.float32)
-    n_decays = it // config.gamma_decay_every
-    g = config.gamma_init * jnp.power(
-        jnp.asarray(config.gamma_decay_rate, jnp.float32), n_decays)
-    return jnp.maximum(g, config.gamma)
-
-
-def max_step_at(config: SolveConfig, gamma: jax.Array) -> jax.Array:
-    """Step cap, scaled ∝ γ during continuation (§5.1: L = ‖A‖²/γ)."""
-    if (config.gamma_init is None or not config.scale_step_with_gamma
-            or config.gamma_init <= config.gamma):
-        return jnp.asarray(config.max_step, jnp.float32)
-    return config.max_step * gamma / config.gamma
-
-def _lipschitz_update(state: SolveState, grad: jax.Array,
-                      decay: float = 0.97) -> jax.Array:
-    """Running local-Lipschitz estimate L̂ from secant information.
-
-    The raw secant ratio ‖Δ∇g‖/‖Δy‖ is exact for the quadratic regime of g
-    but collapses to 0 in the piecewise-flat regions created by saturated
-    projections (x*(λ) locally constant ⇒ Δ∇g = 0), which would send the
-    step to the cap and diverge.  We therefore keep a slowly-decaying
-    running max: L̂ ← max(decay·L̂, ‖Δ∇g‖/‖Δy‖).
-    """
-    dy = jnp.linalg.norm(state.y - state.y_prev)
-    dg = jnp.linalg.norm(grad - state.grad_prev)
-    obs = jnp.where(dy > 0, dg / jnp.maximum(dy, 1e-30), 0.0)
-    return jnp.maximum(state.l_est * decay, obs)
-
-
-def agd_step(calculate: Callable, config: SolveConfig, gamma_fn: Callable,
-             state: SolveState, _):
-    gamma = gamma_fn(state)
-    cap = max_step_at(config, gamma)
-    g, grad, aux = calculate(state.y, gamma)
-
-    l_est = _lipschitz_update(state, grad)
-    step = jnp.where(state.it == 0,
-                     jnp.asarray(config.initial_step, jnp.float32),
-                     jnp.minimum(jnp.where(l_est > 0, 1.0 / l_est, cap), cap))
-
-    lam_new = jnp.maximum(state.y + step * grad, 0.0)     # projected ascent
-
-    # Adaptive restart (O'Donoghue & Candès): kill momentum when the gradient
-    # opposes the travel direction — for ascent, restart iff
-    # ⟨∇g(y), λ_{k+1} − λ_k⟩ < 0.
-    restart = jnp.vdot(grad, lam_new - state.lam) < 0.0
-    k_mom = jnp.where(restart, 0, state.k_mom + 1)
-    k = k_mom.astype(jnp.float32)
-    beta = k / (k + 3.0)                                  # (k−1)/(k+2)
-    y_new = lam_new + beta * (lam_new - state.lam)
-
-    new_state = SolveState(
-        lam=lam_new, y=y_new, lam_prev=state.lam,
-        grad_prev=grad, y_prev=state.y, step=step, l_est=l_est,
-        k_mom=k_mom, it=state.it + 1)
-    stats = IterStats(dual_obj=g, primal_obj=aux.primal_obj, infeas=aux.infeas,
-                      grad_norm=jnp.linalg.norm(grad), step=step, gamma=gamma)
-    return new_state, stats
-
-
-def pga_step(calculate: Callable, config: SolveConfig, gamma_fn: Callable,
-             state: SolveState, _):
-    """Plain projected gradient ascent (no momentum) — ablation baseline."""
-    gamma = gamma_fn(state)
-    cap = max_step_at(config, gamma)
-    g, grad, aux = calculate(state.y, gamma)
-    l_est = _lipschitz_update(state, grad)
-    step = jnp.where(state.it == 0,
-                     jnp.asarray(config.initial_step, jnp.float32),
-                     jnp.minimum(jnp.where(l_est > 0, 1.0 / l_est, cap), cap))
-    lam_new = jnp.maximum(state.y + step * grad, 0.0)
-    new_state = SolveState(lam=lam_new, y=lam_new, lam_prev=state.lam,
-                           grad_prev=grad, y_prev=state.y, step=step,
-                           l_est=l_est, k_mom=state.k_mom, it=state.it + 1)
-    stats = IterStats(dual_obj=g, primal_obj=aux.primal_obj, infeas=aux.infeas,
-                      grad_norm=jnp.linalg.norm(grad), step=step, gamma=gamma)
-    return new_state, stats
-
-
-_STEPS = {"agd": agd_step, "pga": pga_step}
-
-
-def initial_state(lam0: jax.Array, config: SolveConfig) -> SolveState:
-    z = jnp.zeros_like(lam0)
-    return SolveState(lam=lam0, y=lam0, lam_prev=lam0, grad_prev=z,
-                      y_prev=lam0, step=jnp.asarray(config.initial_step),
-                      l_est=jnp.asarray(0.0, jnp.float32),
-                      k_mom=jnp.asarray(0, jnp.int32),
-                      it=jnp.asarray(0, jnp.int32))
-
-
-# alias for use inside SolveEngine.solve, whose `initial_state` parameter
-# (a restored checkpoint) shadows the constructor above
-initial_state_fn = initial_state
+__all__ = ["SolveEngine", "Maximizer", "maximize", "gamma_at", "max_step_at",
+           "agd_step", "pga_step", "pdhg_step", "bb_step", "initial_state",
+           "get_rule", "rule_names", "UpdateRule"]
 
 
 def _copy_state(state: SolveState) -> SolveState:
@@ -146,21 +60,25 @@ def _copy_state(state: SolveState) -> SolveState:
     return jax.tree.map(jnp.copy, state)
 
 
-def _classify_chunk(health: HealthConfig, state: SolveState, g: float,
+def _classify_chunk(health: HealthConfig, rule: UpdateRule,
+                    state: SolveState, g: float,
                     infeas: float, grad_norm: float, gamma_cur: float,
                     snap_g: Optional[float], snap_grad: Optional[float],
                     snap_gamma: Optional[float]) -> Optional[str]:
     """Health verdict for one chunk: None = healthy, else the fault kind
     (DESIGN.md §9).  Scalar checks read the chunk's trailing stats; the
-    λ/y sweep catches a NaN introduced by the *last* in-chunk update,
-    which the (pre-update) trailing stats cannot see."""
+    sweep over the rule's `health_arrays` (λ/y by default) catches a NaN
+    introduced by the *last* in-chunk update, which the (pre-update)
+    trailing stats cannot see."""
     if not (math.isfinite(g) and math.isfinite(infeas)
             and math.isfinite(grad_norm)):
         return "nonfinite"
     if health.check_lambda:
-        finite = bool(jax.device_get(
-            jnp.isfinite(state.lam).all() & jnp.isfinite(state.y).all()))
-        if not finite:
+        arrays = rule.health_arrays(state)
+        ok = jnp.asarray(True)
+        for a in arrays:
+            ok = ok & jnp.isfinite(a).all()
+        if not bool(jax.device_get(ok)):
             return "nonfinite"
     if (snap_grad is not None
             and grad_norm > health.grad_explosion * max(snap_grad, 1.0)):
@@ -175,29 +93,8 @@ def _classify_chunk(health: HealthConfig, state: SolveState, g: float,
     return None
 
 
-def _apply_backoff(state: SolveState, config: SolveConfig,
-                   gamma_now: float, scale: float) -> SolveState:
-    """Step-size backoff on a restored snapshot, without recompiling.
-
-    The AGD step is `min(1/L̂, cap)`; raising the Lipschitz estimate to at
-    least `1/(cap·scale)` therefore caps the retried chunk's steps at
-    `cap·scale` using the *existing* compiled runner.  The estimate decays
-    at 0.97/iteration, so the backoff relaxes gradually instead of
-    permanently slowing the solve.  Momentum is killed (k_mom=0, y=λ): a
-    rollback is a restart, and the overshoot that momentum re-applies is
-    often exactly what diverged.
-    """
-    cap = float(max_step_at(config, jnp.asarray(gamma_now, jnp.float32)))
-    floor = 1.0 / max(cap * scale, 1e-30)
-    return state._replace(
-        l_est=jnp.maximum(state.l_est, jnp.asarray(floor, jnp.float32)),
-        k_mom=jnp.zeros_like(state.k_mom),
-        y=jnp.copy(state.lam),
-        y_prev=jnp.copy(state.lam))
-
-
 def _make_chunk_runner(calculate: Callable, config: SolveConfig,
-                       algorithm: str, length: int,
+                       rule: UpdateRule, length: int,
                        gamma_override: bool) -> Callable:
     """Jit one inner chunk: `length` steps as a single lax.scan.
 
@@ -220,11 +117,11 @@ def _make_chunk_runner(calculate: Callable, config: SolveConfig,
     if gamma_override:
         def run(state, gamma):
             gamma = jnp.asarray(gamma, jnp.float32)
-            step_fn = partial(_STEPS[algorithm], calculate, config,
+            step_fn = partial(rule.step, calculate, config,
                               lambda st: gamma)
             return jax.lax.scan(step_fn, state, None, length=length)
     else:
-        step_fn = partial(_STEPS[algorithm], calculate, config,
+        step_fn = partial(rule.step, calculate, config,
                           lambda st: gamma_at(config, st.it))
 
         def run(state, gamma):
@@ -255,6 +152,9 @@ class SolveEngine:
         self.calculate = calculate
         self.config = config
         self.algorithm = algorithm
+        # construction-time fail-fast: a typo'd algorithm used to surface
+        # as a bare KeyError from inside the jit plumbing on first solve
+        self.rule = get_rule(algorithm)
         self._runners = {}
         # Chaos-testing seam (DESIGN.md §9): when set, called after every
         # chunk as `hook(it_start, state, stats) -> (state, stats)` so a
@@ -267,7 +167,7 @@ class SolveEngine:
         run = self._runners.get(key)
         if run is None:
             run = _make_chunk_runner(self.calculate, self.config,
-                                     self.algorithm, length, gamma_override)
+                                     self.rule, length, gamma_override)
             self._runners[key] = run
         return run
 
@@ -328,7 +228,7 @@ class SolveEngine:
         if initial_state is not None:
             state = _copy_state(initial_state)
         else:
-            state = _copy_state(initial_state_fn(lam0, config))
+            state = _copy_state(self.rule.init_state(lam0, config))
         gamma_dev = jnp.asarray(config.gamma, jnp.float32)
 
         if not chunked:
@@ -371,8 +271,10 @@ class SolveEngine:
         fails = 0
 
         def _meta(final: bool) -> dict:
-            return {"gamma_now": gamma_now, "g_prev": g_prev,
+            meta = {"gamma_now": gamma_now, "g_prev": g_prev,
                     "it": it_done, "final": final}
+            meta.update(self.rule.checkpoint_meta())
+            return meta
 
         while it_done < total:
             if preempt_fn is not None and preempt_fn():
@@ -393,9 +295,9 @@ class SolveEngine:
             elapsed = time.perf_counter() - t0
 
             if health is not None:
-                status = _classify_chunk(health, state, g, infeas, grad_norm,
-                                         gamma_cur, snap_g, snap_grad,
-                                         snap_gamma)
+                status = _classify_chunk(health, self.rule, state, g, infeas,
+                                         grad_norm, gamma_cur, snap_g,
+                                         snap_grad, snap_gamma)
                 if status is not None:
                     fails += 1
                     scale = health.step_backoff ** fails
@@ -415,8 +317,8 @@ class SolveEngine:
                         retries=fails, dual_obj=g, grad_norm=grad_norm,
                         gamma=gamma_cur, rolled_back_to=snap_it,
                         step_scale=scale))
-                    state = _apply_backoff(_copy_state(snap), config,
-                                           snap_gamma_now, scale)
+                    state = self.rule.apply_backoff(_copy_state(snap), config,
+                                                    snap_gamma_now, scale)
                     if adaptive:
                         # γ backoff: retry under heavier regularization;
                         # the stall decay walks it back down afterwards
@@ -539,6 +441,7 @@ class Maximizer:
                  criteria: Optional[StoppingCriteria] = None):
         self.config = config
         self.algorithm = algorithm
+        get_rule(algorithm)  # fail fast, before any objective is compiled
         self.criteria = criteria
         self._cache = None   # (obj, attr snapshot, SolveEngine)
 

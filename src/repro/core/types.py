@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -191,6 +191,26 @@ class SolveConfig:
     dtype: jnp.dtype = jnp.float32
     log_every: int = 1
     use_pallas: bool = False  # route x*(λ) through the Pallas kernels
+    # --- update-rule knobs (core/update_rules.py, DESIGN.md §10) ---
+    # Restarted PDHG: jump to the running average when its KKT score both
+    # decays by `pdhg_restart_beta` and beats the current iterate's
+    # (adaptive, better-of-two); the averaging window is re-based anyway
+    # after `pdhg_restart_every` iterations (fixed-frequency cap); no jump
+    # before `pdhg_min_window` iterations.  Per-row diagonal steps are
+    # ω/L̂_i with L̂_i a running-max coordinatewise secant (decay
+    # `pdhg_l_decay`), capped at `pdhg_step_max_scale`·cap·ω; the global
+    # multiplier ω starts at `pdhg_omega_init` and is only moved by the
+    # health guard's backoff (floor `pdhg_omega_min`).
+    pdhg_restart_every: int = 512
+    pdhg_restart_beta: float = 0.2
+    pdhg_min_window: int = 8
+    pdhg_omega_init: float = 1.0
+    pdhg_omega_min: float = 0.015625  # 1/64
+    pdhg_l_decay: float = 0.97
+    pdhg_step_max_scale: float = 8.0
+    # Spectral (BB) rule: accepted BB steps are trust-capped at
+    # `bb_step_max_scale` × the engine step cap.
+    bb_step_max_scale: float = 8.0
 
 
 class StopReason(enum.Enum):
@@ -336,7 +356,15 @@ class ConvergenceCheck(NamedTuple):
 
 
 class SolveState(NamedTuple):
-    """AGD maximizer state (λ == paper's λ1, y == paper's λ2/momentum)."""
+    """Maximizer state (λ == paper's λ1, y == paper's λ2/momentum).
+
+    The shared fields are what the engine itself touches (chunking, health
+    guard, checkpoint keys); `extra` is the active UpdateRule's state
+    extension — a rule-specific NamedTuple pytree (core/update_rules.py),
+    or the default `()` for rules that fit in the shared fields.  An empty
+    tuple contributes no pytree leaves, so rules without extras (agd, pga,
+    bb) keep the exact pre-rule-engine state layout: scan carries,
+    donation, and checkpoint key sets are unchanged."""
 
     lam: jax.Array          # (m, J) current dual iterate, λ >= 0
     y: jax.Array            # (m, J) extrapolated iterate
@@ -347,6 +375,7 @@ class SolveState(NamedTuple):
     l_est: jax.Array        # scalar, running local-Lipschitz estimate
     k_mom: jax.Array        # scalar int32, momentum age (reset on restart)
     it: jax.Array           # scalar int32
+    extra: Any = ()         # rule-specific state extension (pytree)
 
 
 class IterStats(NamedTuple):

@@ -1,0 +1,527 @@
+"""Pluggable update rules for the solve engine (DESIGN.md §10).
+
+The SolveEngine owns chunking, stopping criteria, γ-continuation, the
+health guard, and checkpoint/resume (DESIGN.md §4, §9); *how* one dual
+iterate becomes the next is an `UpdateRule`.  A rule supplies four hooks:
+
+  init_state(λ0, config)                 fresh SolveState (rule extras in
+                                         `state.extra`, a NamedTuple pytree)
+  step(calculate, config, γ_fn, state, _)  the lax.scan body: one iteration,
+                                         returns (new_state, IterStats)
+  apply_backoff(state, config, γ, scale) shrink the retried chunk's steps
+                                         after a health-guard rollback,
+                                         WITHOUT recompiling (the retry runs
+                                         through the already-jitted runner)
+  state_from_flat(flat)                  rebuild the state from a
+                                         checkpoint's flattened arrays —
+                                         the durability contract: a resumed
+                                         trajectory is bitwise identical
+
+Rules register by name (`@register_rule`); `SolveEngine`/`Maximizer`
+resolve the name at construction and fail fast with the registered list on
+a typo.  The default "agd" rule is the paper's ridge-regularized Nesterov
+ascent, preserved bit-identical through this refactor (asserted in
+tests/test_update_rules.py).
+
+Registered rules:
+
+  agd    Nesterov-accelerated projected dual ascent with the running
+         secant Lipschitz estimate and O'Donoghue–Candès adaptive restart
+         (paper Appendix B) — the default.
+  pga    plain projected gradient ascent — ablation baseline.
+  pdhg   restarted PDHG lowered onto the dual oracle: the γ-ridge makes
+         the primal prox exact (x*(λ) IS the prox-step, computed inside
+         `calculate`), so the primal iterate lives implicitly and the
+         method reduces to dual ascent at an extrapolated point — the
+         dual analog of PDHG's primal extrapolation x̄ = 2x_k − x_{k−1}.
+         Dual step weights are per-row (Pock–Chambolle diagonally
+         preconditioned PDHG), estimated online from coordinatewise
+         secants — the primal-weight rebalancing, generalized from the
+         scalar ω to one weight per constraint.  Running primal/dual
+         averages (Σ∇g is A x̄ − b by linearity), a fixed-frequency
+         window cap plus an adaptive KKT-residual-based restart to the
+         *better* of the running average and the current iterate — the
+         cuPDLP/PDLP restart scheme (PAPERS.md).
+  bb     spectral dual ascent: Barzilai–Borwein step length (the shorter,
+         stabler of BB1/BB2) from the iterate/gradient secant, safeguarded
+         by falling back to the engine's min(1/L̂, cap) step whenever the
+         curvature pair is uninformative, and trust-capped at
+         `bb_step_max_scale`·cap.  No primal iterate, no momentum — a
+         cheap drop-in.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+from .types import IterStats, SolveConfig, SolveState
+
+
+def gamma_at(config: SolveConfig, it: jax.Array) -> jax.Array:
+    """Continuation schedule γ(t); constant when continuation is off."""
+    if config.gamma_init is None or config.gamma_init <= config.gamma:
+        return jnp.asarray(config.gamma, jnp.float32)
+    n_decays = it // config.gamma_decay_every
+    g = config.gamma_init * jnp.power(
+        jnp.asarray(config.gamma_decay_rate, jnp.float32), n_decays)
+    return jnp.maximum(g, config.gamma)
+
+
+def max_step_at(config: SolveConfig, gamma: jax.Array) -> jax.Array:
+    """Step cap, scaled ∝ γ during continuation (§5.1: L = ‖A‖²/γ)."""
+    if (config.gamma_init is None or not config.scale_step_with_gamma
+            or config.gamma_init <= config.gamma):
+        return jnp.asarray(config.max_step, jnp.float32)
+    return config.max_step * gamma / config.gamma
+
+
+def _lipschitz_update(state: SolveState, grad: jax.Array,
+                      decay: float = 0.97) -> jax.Array:
+    """Running local-Lipschitz estimate L̂ from secant information.
+
+    The raw secant ratio ‖Δ∇g‖/‖Δy‖ is exact for the quadratic regime of g
+    but collapses to 0 in the piecewise-flat regions created by saturated
+    projections (x*(λ) locally constant ⇒ Δ∇g = 0), which would send the
+    step to the cap and diverge.  We therefore keep a slowly-decaying
+    running max: L̂ ← max(decay·L̂, ‖Δ∇g‖/‖Δy‖).
+    """
+    dy = jnp.linalg.norm(state.y - state.y_prev)
+    dg = jnp.linalg.norm(grad - state.grad_prev)
+    obs = jnp.where(dy > 0, dg / jnp.maximum(dy, 1e-30), 0.0)
+    return jnp.maximum(state.l_est * decay, obs)
+
+
+def initial_state(lam0: jax.Array, config: SolveConfig,
+                  extra=()) -> SolveState:
+    """Fresh SolveState over the shared fields (rule extras default empty) —
+    the legacy constructor, still what every no-extra rule starts from."""
+    z = jnp.zeros_like(lam0)
+    return SolveState(lam=lam0, y=lam0, lam_prev=lam0, grad_prev=z,
+                      y_prev=lam0, step=jnp.asarray(config.initial_step),
+                      l_est=jnp.asarray(0.0, jnp.float32),
+                      k_mom=jnp.asarray(0, jnp.int32),
+                      it=jnp.asarray(0, jnp.int32), extra=extra)
+
+
+_base_state = initial_state
+
+
+def _iter_stats(g, aux, grad, step, gamma) -> IterStats:
+    return IterStats(dual_obj=g, primal_obj=aux.primal_obj, infeas=aux.infeas,
+                     grad_norm=jnp.linalg.norm(grad), step=step, gamma=gamma)
+
+
+# ---------------------------------------------------------------------------
+# the protocol + registry
+# ---------------------------------------------------------------------------
+
+class UpdateRule:
+    """Base class: the four hooks every rule implements (module docstring).
+
+    `extra_cls` names the NamedTuple class of the rule's state extension
+    (None for rules that fit in the shared SolveState fields); it drives
+    the generic checkpoint restore in `state_from_flat`.
+    """
+
+    name: str = "?"
+    extra_cls: Optional[Type[NamedTuple]] = None
+
+    # -- state ----------------------------------------------------------
+    def init_state(self, lam0: jax.Array, config: SolveConfig) -> SolveState:
+        return _base_state(lam0, config)
+
+    def health_arrays(self, state: SolveState) -> Tuple[jax.Array, ...]:
+        """Arrays the health guard sweeps for NaN/Inf after each chunk."""
+        return (state.lam, state.y)
+
+    # -- the scan body --------------------------------------------------
+    def step(self, calculate: Callable, config: SolveConfig,
+             gamma_fn: Callable, state: SolveState, _):
+        raise NotImplementedError
+
+    # -- health-guard rollback retry ------------------------------------
+    def apply_backoff(self, state: SolveState, config: SolveConfig,
+                      gamma_now: float, scale: float) -> SolveState:
+        """Shrink the retried chunk's steps on a restored snapshot, without
+        recompiling.  Every rule's step is bounded by min(1/L̂, cap) (or
+        falls back to it), so flooring the Lipschitz estimate at
+        `1/(cap·scale)` caps the retried steps at `cap·scale` through the
+        *existing* compiled runner.  The estimate decays at 0.97/iteration,
+        so the backoff relaxes gradually instead of permanently slowing
+        the solve.  Momentum/extrapolation memory is killed (k_mom=0,
+        y=λ, secant collapsed): a rollback is a restart, and the overshoot
+        that momentum re-applies is often exactly what diverged.
+        """
+        cap = float(max_step_at(config, jnp.asarray(gamma_now, jnp.float32)))
+        floor = 1.0 / max(cap * scale, 1e-30)
+        return state._replace(
+            l_est=jnp.maximum(state.l_est, jnp.asarray(floor, jnp.float32)),
+            k_mom=jnp.zeros_like(state.k_mom),
+            y=jnp.copy(state.lam),
+            y_prev=jnp.copy(state.lam))
+
+    # -- checkpoint durability ------------------------------------------
+    def checkpoint_meta(self) -> dict:
+        """Rule-identifying metadata stored with every checkpoint, so a
+        resume can refuse a rule mismatch actionably (the state layouts
+        differ) instead of failing deep in array reconstruction."""
+        return {"algorithm": self.name}
+
+    def state_from_flat(self, flat: Dict) -> SolveState:
+        """Rebuild the SolveState from a checkpoint's flattened arrays.
+
+        Keys follow CheckpointManager._flatten over the state pytree:
+        '.lam', '.y', ... for the shared fields, '.extra/.<field>' for the
+        rule's extension.  Raises KeyError naming the missing array when
+        the checkpoint was written under a different state layout.
+        """
+        core = {f: jnp.asarray(flat[f".{f}"])
+                for f in SolveState._fields if f != "extra"}
+        extra = ()
+        if self.extra_cls is not None:
+            extra = self.extra_cls(*(jnp.asarray(flat[f".extra/.{f}"])
+                                     for f in self.extra_cls._fields))
+        return SolveState(extra=extra, **core)
+
+
+_RULES: Dict[str, UpdateRule] = {}
+
+
+def register_rule(cls: Type[UpdateRule]) -> Type[UpdateRule]:
+    """Class decorator: register an UpdateRule under its `name`."""
+    if cls.name in _RULES:
+        raise ValueError(f"update rule {cls.name!r} already registered")
+    _RULES[cls.name] = cls()
+    return cls
+
+
+def rule_names() -> Tuple[str, ...]:
+    return tuple(sorted(_RULES))
+
+
+def get_rule(name: str) -> UpdateRule:
+    """Resolve a rule by name, failing fast with the registered list —
+    this is the construction-time validation behind SolveEngine/Maximizer
+    (a typo used to surface as a bare KeyError inside jit plumbing)."""
+    try:
+        return _RULES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown update rule (algorithm) {name!r}; registered rules: "
+            f"{', '.join(rule_names())}") from None
+
+
+# ---------------------------------------------------------------------------
+# agd / pga — the paper's rules, preserved bit-identical
+# ---------------------------------------------------------------------------
+
+def agd_step(calculate: Callable, config: SolveConfig, gamma_fn: Callable,
+             state: SolveState, _):
+    gamma = gamma_fn(state)
+    cap = max_step_at(config, gamma)
+    g, grad, aux = calculate(state.y, gamma)
+
+    l_est = _lipschitz_update(state, grad)
+    step = jnp.where(state.it == 0,
+                     jnp.asarray(config.initial_step, jnp.float32),
+                     jnp.minimum(jnp.where(l_est > 0, 1.0 / l_est, cap), cap))
+
+    lam_new = jnp.maximum(state.y + step * grad, 0.0)     # projected ascent
+
+    # Adaptive restart (O'Donoghue & Candès): kill momentum when the gradient
+    # opposes the travel direction — for ascent, restart iff
+    # ⟨∇g(y), λ_{k+1} − λ_k⟩ < 0.
+    restart = jnp.vdot(grad, lam_new - state.lam) < 0.0
+    k_mom = jnp.where(restart, 0, state.k_mom + 1)
+    k = k_mom.astype(jnp.float32)
+    beta = k / (k + 3.0)                                  # (k−1)/(k+2)
+    y_new = lam_new + beta * (lam_new - state.lam)
+
+    new_state = SolveState(
+        lam=lam_new, y=y_new, lam_prev=state.lam,
+        grad_prev=grad, y_prev=state.y, step=step, l_est=l_est,
+        k_mom=k_mom, it=state.it + 1)
+    return new_state, _iter_stats(g, aux, grad, step, gamma)
+
+
+def pga_step(calculate: Callable, config: SolveConfig, gamma_fn: Callable,
+             state: SolveState, _):
+    """Plain projected gradient ascent (no momentum) — ablation baseline."""
+    gamma = gamma_fn(state)
+    cap = max_step_at(config, gamma)
+    g, grad, aux = calculate(state.y, gamma)
+    l_est = _lipschitz_update(state, grad)
+    step = jnp.where(state.it == 0,
+                     jnp.asarray(config.initial_step, jnp.float32),
+                     jnp.minimum(jnp.where(l_est > 0, 1.0 / l_est, cap), cap))
+    lam_new = jnp.maximum(state.y + step * grad, 0.0)
+    new_state = SolveState(lam=lam_new, y=lam_new, lam_prev=state.lam,
+                           grad_prev=grad, y_prev=state.y, step=step,
+                           l_est=l_est, k_mom=state.k_mom, it=state.it + 1)
+    return new_state, _iter_stats(g, aux, grad, step, gamma)
+
+
+@register_rule
+class AGDRule(UpdateRule):
+    name = "agd"
+
+    def step(self, calculate, config, gamma_fn, state, xs):
+        return agd_step(calculate, config, gamma_fn, state, xs)
+
+
+@register_rule
+class PGARule(UpdateRule):
+    name = "pga"
+
+    def step(self, calculate, config, gamma_fn, state, xs):
+        return pga_step(calculate, config, gamma_fn, state, xs)
+
+
+# ---------------------------------------------------------------------------
+# pdhg — restarted PDHG on the dual oracle
+# ---------------------------------------------------------------------------
+
+class PDHGExtra(NamedTuple):
+    """Restarted-PDHG state extension (all device arrays — rides in
+    SolveState.extra through scan/donation/checkpoint unchanged).
+
+    The primal iterate never appears explicitly: x_k = x*(λ_k) is computed
+    inside `calculate`, and A x̄ − b of the *averaged* primal is the running
+    mean of gradients by linearity — `grad_sum / window`."""
+
+    l_diag: jax.Array      # per-row running-max secant curvature estimate
+    lam_sum: jax.Array     # Σ λ over the current restart window
+    grad_sum: jax.Array    # Σ ∇g over the window  (window · (A x̄ − b))
+    window: jax.Array      # int32, iterations since the last window reset
+    score: jax.Array       # KKT-residual score at the last window reset
+    omega: jax.Array       # global step multiplier (health-guard backoff)
+    gamma_prev: jax.Array  # γ of the previous iteration (continuation reset)
+
+
+def _kkt_score(lam_avg: jax.Array, grad_avg: jax.Array) -> jax.Array:
+    """Restart score of the averaged iterate: the projected-gradient norm
+    of the dual at λ̄ using ḡ = A x̄ − b — infeasibility where λ̄ is at its
+    bound, full stationarity where it is interior.  Zero exactly at a
+    saddle point; the adaptive restart fires on sufficient decay of this
+    score, cuPDLP-style."""
+    pg = jnp.where((lam_avg > 0.0) | (grad_avg > 0.0), grad_avg, 0.0)
+    return jnp.linalg.norm(pg)
+
+
+def pdhg_step(calculate: Callable, config: SolveConfig, gamma_fn: Callable,
+              state: SolveState, _):
+    """One restarted-PDHG iteration (module docstring).
+
+    Exact primal minimization collapses PDHG's primal half-step, so the
+    three PDHG ingredients land on the dual side as:
+
+      extrapolation   the oracle is evaluated at y = λ + β(λ − λ_prev)
+                      (x*(y) plays the role of x̄ = 2x_k − x_{k−1}); β
+                      follows the k/(k+3) schedule with the gradient
+                      restart test, re-zeroed on every jump to the average
+      diagonal steps  per-row weights σ_i = ω / L̂_i with L̂_i a
+                      running-max coordinatewise secant |Δ∇g_i|/|Δy_i|
+                      (Pock–Chambolle preconditioning, estimated online —
+                      this is what beats the scalar-step AGD baseline: the
+                      rows that bind the global L̂ no longer throttle the
+                      flat rows, whose slow drain dominates
+                      iterations-to-feasibility)
+      restarts        running λ̄/ḡ window averages; jump to λ̄ when its
+                      KKT score both decays by `pdhg_restart_beta` and
+                      beats the current iterate's (PDLP's restart to the
+                      *better* candidate — on instances where the γ-ridge
+                      already smooths the trajectory the average rarely
+                      wins and the scheme degrades to pure momentum
+                      restarts); the fixed-frequency `pdhg_restart_every`
+                      cap re-bases the window so the average never goes
+                      stale
+
+    Fresh coordinates (no secant signal yet) fall back to the global 1/L̂
+    step; a γ-continuation move rescales L̂_i by γ_old/γ_new (the dual
+    Hessian is A Q⁻¹Aᵀ with Q = γI on the unsaturated block) and drops the
+    stale window.
+    """
+    gamma = gamma_fn(state)
+    cap = max_step_at(config, gamma)
+    ex: PDHGExtra = state.extra
+    g, grad, aux = calculate(state.y, gamma)
+
+    # γ-continuation moved the landscape: rescale the curvature estimates
+    # (L ∝ 1/γ) and drop the window — the average belongs to the old γ
+    gamma_moved = jnp.abs(gamma - ex.gamma_prev) > 0.0
+    ratio = jnp.where(ex.gamma_prev > 0, ex.gamma_prev / gamma, 1.0)
+    l_diag0 = jnp.where(gamma_moved, ex.l_diag * ratio, ex.l_diag)
+    window = jnp.where(gamma_moved, 0, ex.window)
+    lam_sum = jnp.where(gamma_moved, jnp.zeros_like(ex.lam_sum), ex.lam_sum)
+    grad_sum = jnp.where(gamma_moved, jnp.zeros_like(ex.grad_sum),
+                         ex.grad_sum)
+    score0 = jnp.where(gamma_moved, jnp.float32(jnp.inf), ex.score)
+
+    # per-row secant curvature, running max with slow decay (same shape as
+    # the scalar L̂ logic in _lipschitz_update, per coordinate)
+    d_y = jnp.abs(state.y - state.y_prev)
+    d_g = jnp.abs(grad - state.grad_prev)
+    obs = jnp.where(d_y > 0, d_g / jnp.maximum(d_y, 1e-30), 0.0)
+    l_diag = jnp.maximum(config.pdhg_l_decay * l_diag0, obs)
+
+    l_est = _lipschitz_update(state, grad)
+    l_glob = jnp.where(l_est > 0, l_est, 1.0 / cap)
+    l_eff = jnp.where(l_diag > 0, l_diag, l_glob)
+    smax = config.pdhg_step_max_scale * cap * ex.omega
+    steps = jnp.clip(ex.omega / jnp.maximum(l_eff, ex.omega / smax),
+                     0.0, smax)
+    steps = jnp.where(state.it == 0,
+                      jnp.asarray(config.initial_step, jnp.float32), steps)
+
+    lam_new = jnp.maximum(state.y + steps * grad, 0.0)
+
+    # momentum bookkeeping (gradient restart test, as in agd)
+    mom_restart = jnp.vdot(grad, lam_new - state.lam) < 0.0
+    k_mom = jnp.where(mom_restart, 0, state.k_mom + 1)
+
+    # averaging + restart decision (branchless: this runs inside the scan)
+    window = window + 1
+    lam_sum = lam_sum + lam_new
+    grad_sum = grad_sum + grad
+    wf = window.astype(jnp.float32)
+    lam_avg = lam_sum / wf
+    grad_avg = grad_sum / wf
+    score_avg = _kkt_score(lam_avg, grad_avg)
+    score_cur = _kkt_score(lam_new, grad)
+
+    # adaptive restart: jump to the average when its KKT score has decayed
+    # enough AND beats the current iterate; fixed-frequency: re-base the
+    # window (no jump needed when the current iterate is already better)
+    decayed = score_avg <= config.pdhg_restart_beta * score0
+    take_avg = (window >= config.pdhg_min_window) & decayed & \
+        (score_avg < score_cur)
+    exhausted = window >= config.pdhg_restart_every
+    reset_win = take_avg | exhausted
+
+    lam_next = jnp.where(take_avg, lam_avg, lam_new)
+    k_mom = jnp.where(take_avg, 0, k_mom)
+    k = k_mom.astype(jnp.float32)
+    beta = k / (k + 3.0)
+    y_new = lam_next + beta * (lam_next - jnp.where(take_avg, lam_next,
+                                                    state.lam))
+
+    score_best = jnp.minimum(score_avg, score_cur)
+    new_extra = PDHGExtra(
+        l_diag=l_diag,
+        lam_sum=jnp.where(reset_win, jnp.zeros_like(lam_sum), lam_sum),
+        grad_sum=jnp.where(reset_win, jnp.zeros_like(grad_sum), grad_sum),
+        window=jnp.where(reset_win, 0, window),
+        score=jnp.where(reset_win, score_best, score0),
+        omega=ex.omega,
+        gamma_prev=gamma)
+
+    mean_step = jnp.mean(steps)
+    new_state = SolveState(
+        lam=lam_next, y=y_new, lam_prev=state.lam, grad_prev=grad,
+        y_prev=state.y, step=mean_step, l_est=l_est,
+        k_mom=k_mom, it=state.it + 1, extra=new_extra)
+    return new_state, _iter_stats(g, aux, grad, mean_step, gamma)
+
+
+@register_rule
+class PDHGRule(UpdateRule):
+    name = "pdhg"
+    extra_cls = PDHGExtra
+
+    def init_state(self, lam0, config):
+        extra = PDHGExtra(
+            l_diag=jnp.zeros_like(lam0),
+            lam_sum=jnp.zeros_like(lam0),
+            grad_sum=jnp.zeros_like(lam0),
+            window=jnp.asarray(0, jnp.int32),
+            score=jnp.asarray(jnp.inf, jnp.float32),
+            omega=jnp.asarray(config.pdhg_omega_init, jnp.float32),
+            gamma_prev=jnp.asarray(-1.0, jnp.float32))
+        return _base_state(lam0, config, extra)
+
+    def step(self, calculate, config, gamma_fn, state, xs):
+        return pdhg_step(calculate, config, gamma_fn, state, xs)
+
+    def apply_backoff(self, state, config, gamma_now, scale):
+        """The retry shrinks ω — the global multiplier every diagonal step
+        carries — alongside the shared Lipschitz floor, and drops the
+        poisoned window averages and curvature estimates (a NaN chunk means
+        the estimates that produced those steps cannot be trusted)."""
+        st = super().apply_backoff(state, config, gamma_now, scale)
+        ex: PDHGExtra = st.extra
+        return st._replace(extra=ex._replace(
+            omega=jnp.maximum(ex.omega * jnp.float32(scale),
+                              jnp.float32(config.pdhg_omega_min)),
+            l_diag=jnp.zeros_like(ex.l_diag),
+            lam_sum=jnp.zeros_like(ex.lam_sum),
+            grad_sum=jnp.zeros_like(ex.grad_sum),
+            window=jnp.zeros_like(ex.window),
+            score=jnp.asarray(jnp.inf, jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# bb — spectral (Barzilai–Borwein) dual ascent
+# ---------------------------------------------------------------------------
+
+def bb_step(calculate: Callable, config: SolveConfig, gamma_fn: Callable,
+            state: SolveState, _):
+    """Spectral projected dual ascent (module docstring).
+
+    BB1 step α = ‖Δλ‖² / ⟨Δλ, −Δ∇g⟩ and BB2 step α = ⟨Δλ, −Δ∇g⟩ / ‖Δ∇g‖²
+    are the two least-squares secant estimates of the inverse curvature
+    along the travel direction (⟨Δλ, −Δ∇g⟩ > 0 for concave g); we take the
+    smaller (BB2 ≤ BB1 by Cauchy–Schwarz when the pair is valid), which
+    damps the classic non-monotone BB sawtooth near polyhedral kinks.
+    Safeguards: fall back to the engine's min(1/L̂, cap) step whenever the
+    curvature pair is degenerate (flat piece: Δ∇g ⊥ Δλ, or no movement),
+    and trust-cap the accepted step at bb_step_max_scale·cap — a collapsed
+    denominator must not turn into an unbounded jump.
+    """
+    gamma = gamma_fn(state)
+    cap = max_step_at(config, gamma)
+    g, grad, aux = calculate(state.lam, gamma)
+
+    s = state.lam - state.lam_prev
+    dg = grad - state.grad_prev
+    sy = -jnp.vdot(s, dg)                       # curvature along s (>0 ok)
+    ss = jnp.vdot(s, s)
+    yy = jnp.vdot(dg, dg)
+
+    l_est = _lipschitz_update(state, grad)
+    fallback = jnp.minimum(jnp.where(l_est > 0, 1.0 / l_est, cap), cap)
+    bb1 = ss / jnp.maximum(sy, 1e-30)
+    bb2 = sy / jnp.maximum(yy, 1e-30)
+    usable = (sy > 1e-30) & (ss > 0.0)
+    step = jnp.where(usable,
+                     jnp.minimum(jnp.minimum(bb1, bb2),
+                                 config.bb_step_max_scale * cap),
+                     fallback)
+    step = jnp.where(state.it == 0,
+                     jnp.asarray(config.initial_step, jnp.float32), step)
+
+    lam_new = jnp.maximum(state.lam + step * grad, 0.0)
+    new_state = SolveState(
+        lam=lam_new, y=lam_new, lam_prev=state.lam, grad_prev=grad,
+        y_prev=state.lam, step=step, l_est=l_est,
+        k_mom=jnp.zeros_like(state.k_mom), it=state.it + 1,
+        extra=state.extra)
+    return new_state, _iter_stats(g, aux, grad, step, gamma)
+
+
+@register_rule
+class BBRule(UpdateRule):
+    name = "bb"
+
+    def step(self, calculate, config, gamma_fn, state, xs):
+        return bb_step(calculate, config, gamma_fn, state, xs)
+
+    def apply_backoff(self, state, config, gamma_now, scale):
+        """BB's aggressive step comes from the secant pair, not L̂: the
+        retry collapses the pair (λ_prev ← λ ⇒ Δλ = 0 ⇒ fallback path)
+        so the retried chunk actually runs at the floored 1/L̂ step
+        instead of re-deriving the same overshooting BB step."""
+        st = super().apply_backoff(state, config, gamma_now, scale)
+        return st._replace(lam_prev=jnp.copy(st.lam),
+                           grad_prev=jnp.zeros_like(st.grad_prev))

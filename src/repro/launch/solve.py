@@ -24,8 +24,8 @@ import jax.numpy as jnp
 
 from repro.core import (HealthConfig, InstanceSpec, LPValidationError,
                         Maximizer, SolveConfig, StoppingCriteria, generate,
-                        precondition, validate_lp)
-from repro.core.types import SolveState, StopReason
+                        get_rule, precondition, rule_names, validate_lp)
+from repro.core.types import StopReason
 from repro.core.distributed import solve_distributed
 from repro.checkpoint.manager import CheckpointManager
 from repro.launch.mesh import make_mesh
@@ -154,6 +154,11 @@ def main():
                          "value-carrying x-only path; aligned_gvals is "
                          "the legacy gvals-based aligned lowering; the "
                          "distributed matching path maps sorted→scatter)")
+    ap.add_argument("--algorithm", default="agd", choices=rule_names(),
+                    help="dual update rule (core/update_rules.py, DESIGN.md "
+                         "§10): agd is the paper's accelerated ascent, pdhg "
+                         "the restarted primal-dual method, bb the spectral "
+                         "step, pga plain ascent")
     ap.add_argument("--iterations", type=int, default=200,
                     help="iteration cap (exact count when no tolerance is set)")
     ap.add_argument("--gamma", type=float, default=0.01)
@@ -261,6 +266,7 @@ def main():
                  "--formulation matching (composed formulations solve on "
                  "a single replicated λ)")
     fingerprint = instance_fingerprint(lp)
+    rule = get_rule(args.algorithm)
 
     # -- fault tolerance (DESIGN.md §9) ---------------------------------
     health = (HealthConfig(max_retries=args.max_retries)
@@ -288,11 +294,18 @@ def main():
                         f"original generation flags (--sources/"
                         f"--destinations/--nnz-per-row/--seed) or point "
                         f"--checkpoint-dir at an empty directory.")
-                # SolveState is a NamedTuple: its flatten keys are the
-                # attribute keys '.lam', '.y', ... (str(GetAttrKey))
-                resume_state = SolveState(
-                    *(jnp.asarray(flat[f".{f}"])
-                      for f in SolveState._fields))
+                ck_alg = extra.get("algorithm")
+                if ck_alg is not None and ck_alg != args.algorithm:
+                    raise SystemExit(
+                        f"--resume refused: checkpoint step {step} in "
+                        f"{args.checkpoint_dir} was written by update rule "
+                        f"{ck_alg!r}, but this run uses "
+                        f"{args.algorithm!r} (the solver state layouts "
+                        f"differ).  Re-run with --algorithm {ck_alg} or "
+                        f"point --checkpoint-dir at an empty directory.")
+                # The rule rebuilds its SolveState from the flatten keys
+                # ('.lam', '.y', ..., '.extra/...' for rule extensions)
+                resume_state = rule.state_from_flat(flat)
                 resume_meta = {"gamma_now": extra.get("gamma_now"),
                                "g_prev": extra.get("g_prev")}
                 print(f"resumed from checkpoint step {step} in "
@@ -316,6 +329,8 @@ def main():
                             "gamma_now": float(meta["gamma_now"]),
                             "g_prev": (None if meta["g_prev"] is None
                                        else float(meta["g_prev"])),
+                            "algorithm": meta.get("algorithm",
+                                                  args.algorithm),
                             "fingerprint": fingerprint})
             last_saved["it"] = it
             print(f"checkpoint saved: step {it} -> {args.checkpoint_dir}",
@@ -370,6 +385,7 @@ def main():
                                 else None, lam0=lam0,
                                 ax_mode=("scatter" if ax_mode == "sorted"
                                          else ax_mode),
+                                algorithm=args.algorithm,
                                 criteria=criteria, diagnostics_fn=on_check,
                                 health=health, checkpoint_fn=checkpoint_fn,
                                 preempt_fn=preempt_fn,
@@ -386,7 +402,8 @@ def main():
               f"({ {k: f'{v.start}:{v.stop}' for k, v in obj.row_slices().items()} })")
         lam0 = (load_warm(args.warm_start, obj.dual_shape)
                 if args.warm_start and resume_state is None else None)
-        res = Maximizer(cfg).maximize(obj, initial_value=lam0,
+        res = Maximizer(cfg, algorithm=args.algorithm).maximize(
+                                      obj, initial_value=lam0,
                                       criteria=criteria,
                                       diagnostics_fn=on_check,
                                       health=health,
@@ -398,7 +415,7 @@ def main():
     dt = time.perf_counter() - t0
     d = np.asarray(res.stats.dual_obj)
     reason = res.stop_reason.value if res.stop_reason else "?"
-    print(f"{res.iterations_run} iterations in {dt:.2f}s "
+    print(f"{res.iterations_run} iterations ({args.algorithm}) in {dt:.2f}s "
           f"({dt / max(res.iterations_run, 1) * 1e3:.1f} ms/iter, compile "
           f"included); stop reason: {reason}")
     for rec in res.health:
