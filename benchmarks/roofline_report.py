@@ -15,6 +15,56 @@ from typing import Dict, List
 RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                        "results", "dryrun")
 
+# Nominal main-memory bandwidth per device, bytes/s.  These are coarse
+# reference points (DDR4 dual-channel, an A100-class HBM part, a TPU-v4
+# class part), good enough to say "this kernel runs at X% of a sane peak"
+# in a bench row; override with REPRO_PEAK_BYTES_PER_S for real hardware.
+NOMINAL_PEAK_BYTES_PER_S = {
+    "cpu": 25.6e9,
+    "gpu": 2.0e12,
+    "tpu": 1.2e12,
+}
+
+
+def bytes_bound(bytes_per_call: float, seconds_per_call: float,
+                platform: str = None) -> Dict:
+    """Achieved-vs-peak memory-bandwidth verdict for one timed kernel.
+
+    `bytes_per_call` comes from the hlo_cost census of the compiled
+    module; the peak is the nominal per-platform table above unless
+    REPRO_PEAK_BYTES_PER_S overrides it.  Returns the achieved bandwidth,
+    the peak used, the fraction of peak, and the roofline floor (the
+    wall-clock the transfer alone would take at peak) — the fields
+    benchmarks/run.py attaches to kernel rows.
+
+    Convention caveat: hlo_cost counts operand+result bytes per
+    instruction execution (trip-count aware), i.e. an UPPER bound on
+    main-memory traffic — a value re-read from cache is counted each
+    time.  `fraction_of_peak` > 1 therefore means the census traffic is
+    being served from cache, not that the hardware beat its roofline;
+    values << 1 mean the kernel genuinely has bandwidth headroom.
+    """
+    if platform is None:
+        try:
+            import jax
+            platform = jax.default_backend()
+        except Exception:
+            platform = "cpu"
+    env = os.environ.get("REPRO_PEAK_BYTES_PER_S")
+    peak = (float(env) if env
+            else NOMINAL_PEAK_BYTES_PER_S.get(platform,
+                                              NOMINAL_PEAK_BYTES_PER_S["cpu"]))
+    achieved = bytes_per_call / seconds_per_call if seconds_per_call else 0.0
+    return {
+        "bytes_per_call": float(bytes_per_call),
+        "achieved_bytes_per_s": achieved,
+        "peak_bytes_per_s": peak,
+        "peak_source": "env" if env else f"nominal:{platform}",
+        "fraction_of_peak": achieved / peak if peak else 0.0,
+        "memory_bound_floor_s": bytes_per_call / peak if peak else 0.0,
+    }
+
+
 _ADVICE = {
     "compute": ("cut dead FLOPs: gather-based MoE dispatch, pad-free head "
                 "sharding, block-sparse causal attention"),

@@ -59,6 +59,7 @@ def _kernel_bench(quick: bool = False):
     lam = jnp.zeros((1, 1000))
     gamma = jnp.float32(0.01)
     f = jax.jit(lambda l: dual_value_and_grad(lp, l, gamma, "boxcut"))
+    compiled = f.lower(lam).compile()
     g, grad, aux = f(lam)
     jax.block_until_ready(grad)
     t0 = time.perf_counter()
@@ -67,6 +68,19 @@ def _kernel_bench(quick: bool = False):
         g, grad, aux = f(lam)
     jax.block_until_ready(grad)
     dt = (time.perf_counter() - t0) / n
+    # achieved-vs-peak bytes bound: hlo_cost census of the compiled module
+    # against the roofline_report peak table (REPRO_PEAK_BYTES_PER_S
+    # overrides the nominal per-platform number)
+    from repro.launch import hlo_cost
+    from . import roofline_report
+    try:
+        txt = compiled.as_text()
+        census = hlo_cost.analyze(txt)
+        bound = roofline_report.bytes_bound(census["bytes_per_device"], dt)
+        bound["dyn_bytes_per_call"] = hlo_cost.analyze(
+            txt, dynamic_only=True)["bytes_per_device"]
+    except Exception as e:
+        bound = {"error": f"bytes bound unavailable: {e}"}
     # kernel vs oracle on the largest slab
     slab = max(lp.slabs, key=lambda s: s.n * s.width)
     x_k, g_k, cx_k, xsq_k = ops.dual_grad_slab(slab, lam, gamma)
@@ -88,7 +102,8 @@ def _kernel_bench(quick: bool = False):
     return [
         {"name": "kernels/dual_grad_jnp_hotpath", "us_per_call": dt * 1e6,
          "derived": {"edges": int(sum(int(np.asarray(s.mask).sum())
-                                      for s in lp.slabs))}},
+                                      for s in lp.slabs)),
+                     **bound}},
         {"name": "kernels/dual_grad_pallas_vs_oracle", "us_per_call": 0.0,
          "derived": {"max_abs_err_x": float(jnp.abs(x_k - x_r).max()),
                      "max_abs_err_gvals": float(jnp.abs(g_k - g_r).max())}},

@@ -287,6 +287,8 @@ def solve_distributed(
     preempt_fn=None,
     initial_state: Optional[SolveState] = None,
     resume_meta: Optional[dict] = None,
+    telemetry=None,
+    profiler=None,
 ) -> SolveResult:
     """End-to-end distributed solve: place data, build objective, maximize.
 
@@ -318,4 +320,5 @@ def solve_distributed(
                     infeas_scale=_infeas_scale(obj, criteria),
                     health=health, checkpoint_fn=checkpoint_fn,
                     preempt_fn=preempt_fn, initial_state=initial_state,
-                    resume_meta=resume_meta)
+                    resume_meta=resume_meta, telemetry=telemetry,
+                    profiler=profiler)

@@ -37,12 +37,14 @@ from __future__ import annotations
 
 import math
 import time
+from collections import deque
 from functools import partial
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.obs import Telemetry
 from .types import (ConvergenceCheck, HealthConfig, HealthRecord, IterStats,
                     SolveConfig, SolveResult, SolveState, StopReason,
                     StoppingCriteria)
@@ -162,12 +164,32 @@ class SolveEngine:
         # transient device fault would.  Never set in production.
         self.chunk_fault_hook = None
 
-    def _runner(self, length: int, gamma_override: bool) -> Callable:
-        key = (length, gamma_override)
+    def _runner(self, length: int, gamma_override: bool, state: SolveState,
+                gamma: jax.Array,
+                tel: Telemetry = Telemetry.disabled()) -> Callable:
+        """Return the ahead-of-time-compiled chunk executable for this
+        (length, γ-mode, state-layout) key, building it on first use.
+
+        AOT (`jit(...).lower(args).compile()`) runs the exact pipeline the
+        jit call path runs — same lowering, same executable, bit-identical
+        outputs (asserted in tests/test_telemetry.py) — but makes the
+        trace and XLA-compile phases explicit, so telemetry can attribute
+        them as `trace`/`compile` spans instead of folding them invisibly
+        into the first chunk's wall time.  The state avals key the cache
+        the way jit's own cache would (a resumed state or a differently-
+        shaped λ recompiles instead of tripping an AOT aval mismatch).
+        """
+        key = (length, gamma_override,
+               tuple((leaf.shape, str(leaf.dtype))
+                     for leaf in jax.tree.leaves(state)))
         run = self._runners.get(key)
         if run is None:
-            run = _make_chunk_runner(self.calculate, self.config,
-                                     self.rule, length, gamma_override)
+            fn = _make_chunk_runner(self.calculate, self.config,
+                                    self.rule, length, gamma_override)
+            with tel.span("trace", chunk_len=length):
+                lowered = fn.lower(state, gamma)
+            with tel.span("compile", chunk_len=length):
+                run = lowered.compile()
             self._runners[key] = run
         return run
 
@@ -179,8 +201,11 @@ class SolveEngine:
               checkpoint_fn: Optional[Callable] = None,
               preempt_fn: Optional[Callable] = None,
               initial_state: Optional[SolveState] = None,
-              resume_meta: Optional[dict] = None) -> SolveResult:
-        """Run the solve loop (DESIGN.md §4; fault tolerance §9).
+              resume_meta: Optional[dict] = None,
+              telemetry: Optional[Telemetry] = None,
+              profiler=None) -> SolveResult:
+        """Run the solve loop (DESIGN.md §4; fault tolerance §9;
+        telemetry §11).
 
         Beyond the criteria/diagnostics contract:
 
@@ -203,11 +228,24 @@ class SolveEngine:
                          (keys "gamma_now", "g_prev"), restoring the
                          adaptive-continuation controller variables.
 
+          telemetry      a `repro.obs.Telemetry`; the engine emits
+                         solve_start/solve_end brackets, trace/compile
+                         spans per runner build, execute/host spans per
+                         chunk, `check`/`gamma`/`health`/`checkpoint`
+                         events at the existing seams, and chunk/
+                         iteration counters.  Defaults to the disabled
+                         no-op — the untelemetered trajectory is bitwise
+                         identical (tests/test_telemetry.py);
+          profiler       a `repro.obs.ProfilerHook` tracing a window of
+                         chunks via jax.profiler (stopped in a finally
+                         block, so an aborted solve still flushes).
+
         Any of health/checkpoint_fn/preempt_fn/initial_state forces the
         chunked path; with none of them and no criteria the fixed-length
         single-scan fast path is bit-identical to the legacy engine.
         """
         config = self.config
+        tel = telemetry if telemetry is not None else Telemetry.disabled()
         total = config.iterations
         if criteria is not None and criteria.max_iterations is not None:
             total = criteria.max_iterations
@@ -230,11 +268,28 @@ class SolveEngine:
         else:
             state = _copy_state(self.rule.init_state(lam0, config))
         gamma_dev = jnp.asarray(config.gamma, jnp.float32)
+        tel.event("solve_start", algorithm=self.algorithm,
+                  iterations_cap=total, chunked=chunked,
+                  start_it=(int(jax.device_get(initial_state.it))
+                            if initial_state is not None else 0),
+                  gamma=config.gamma, gamma_init=config.gamma_init,
+                  adaptive_continuation=adaptive)
 
         if not chunked:
             # Fixed-length path: ONE scan of the full count — bit-identical
             # to the legacy engine, no host round-trips.
-            state, stats = self._runner(total, False)(state, gamma_dev)
+            t0 = time.perf_counter()
+            run = self._runner(total, False, state, gamma_dev, tel)
+            with tel.span("execute", chunk=0, it=0, n=total):
+                state, stats = run(state, gamma_dev)
+                if tel.enabled:
+                    jax.block_until_ready(stats.dual_obj)
+            tel.counter("solve.chunks")
+            tel.counter("solve.iterations", total)
+            tel.event("solve_end", stop_reason=StopReason.MAX_ITERATIONS.value,
+                      iterations_run=total, converged=False,
+                      wall_s=time.perf_counter() - t0, checks=0,
+                      health_incidents=0)
             return SolveResult(lam=state.lam, stats=stats,
                                iterations_run=total, converged=False,
                                stop_reason=StopReason.MAX_ITERATIONS,
@@ -254,8 +309,12 @@ class SolveEngine:
                 g_prev = float(meta["g_prev"])
         t0 = time.perf_counter()
         stats_chunks = []
-        diags = []
+        # keep-last diagnostics bound (SolveConfig.max_diagnostics): a
+        # million-iteration solve with a small check_every must not grow an
+        # unbounded host-side tuple; None (the default) keeps everything
+        diags = deque(maxlen=config.max_diagnostics)
         health_recs = []
+        chunk_idx = 0
         converged = False
         stop_reason = StopReason.MAX_ITERATIONS
         # Health-guard bookkeeping: the last-good snapshot and its
@@ -276,105 +335,151 @@ class SolveEngine:
             meta.update(self.rule.checkpoint_meta())
             return meta
 
-        while it_done < total:
-            if preempt_fn is not None and preempt_fn():
-                stop_reason = StopReason.PREEMPTED
-                break
-            n = min(check, total - it_done)
-            run = self._runner(n, adaptive)
-            state, stats = run(state, jnp.asarray(gamma_now, jnp.float32))
-            if self.chunk_fault_hook is not None:
-                state, stats = self.chunk_fault_hook(it_done, state, stats)
+        try:
+            while it_done < total:
+                if preempt_fn is not None and preempt_fn():
+                    stop_reason = StopReason.PREEMPTED
+                    break
+                n = min(check, total - it_done)
+                gamma_arr = jnp.asarray(gamma_now, jnp.float32)
+                run = self._runner(n, adaptive, state, gamma_arr, tel)
+                if profiler is not None:
+                    profiler.chunk_start(chunk_idx, tel)
+                with tel.span("execute", chunk=chunk_idx, it=it_done, n=n):
+                    state, stats = run(state, gamma_arr)
+                    if tel.enabled:
+                        # the dispatch is async; wait here so the execute
+                        # span measures device compute, not queue depth
+                        # (numerics untouched — pure synchronization)
+                        jax.block_until_ready(stats.dual_obj)
+                if self.chunk_fault_hook is not None:
+                    state, stats = self.chunk_fault_hook(it_done, state,
+                                                         stats)
 
-            # device→host: the chunk's trailing scalars (this is the sync
-            # point that keeps the hot path a single XLA program per chunk)
-            g = float(stats.dual_obj[-1])
-            infeas = float(stats.infeas[-1])
-            grad_norm = float(stats.grad_norm[-1])
-            gamma_cur = float(stats.gamma[-1])
-            elapsed = time.perf_counter() - t0
+                # device→host: the chunk's trailing scalars (this is the
+                # sync point that keeps the hot path a single XLA program
+                # per chunk)
+                with tel.span("host", chunk=chunk_idx, it=it_done):
+                    g = float(stats.dual_obj[-1])
+                    infeas = float(stats.infeas[-1])
+                    grad_norm = float(stats.grad_norm[-1])
+                    gamma_cur = float(stats.gamma[-1])
+                elapsed = time.perf_counter() - t0
+                if profiler is not None:
+                    profiler.chunk_end(chunk_idx, tel)
+                chunk_idx += 1
+                tel.counter("solve.chunks")
 
-            if health is not None:
-                status = _classify_chunk(health, self.rule, state, g, infeas,
-                                         grad_norm, gamma_cur, snap_g,
-                                         snap_grad, snap_gamma)
-                if status is not None:
-                    fails += 1
-                    scale = health.step_backoff ** fails
-                    if fails > health.max_retries:
-                        health_recs.append(HealthRecord(
-                            it=it_done + n, status=status, action="giveup",
+                if health is not None:
+                    status = _classify_chunk(health, self.rule, state, g,
+                                             infeas, grad_norm, gamma_cur,
+                                             snap_g, snap_grad, snap_gamma)
+                    if status is not None:
+                        fails += 1
+                        scale = health.step_backoff ** fails
+                        if fails > health.max_retries:
+                            rec = HealthRecord(
+                                it=it_done + n, status=status,
+                                action="giveup", retries=fails, dual_obj=g,
+                                grad_norm=grad_norm, gamma=gamma_cur,
+                                rolled_back_to=snap_it, step_scale=scale)
+                            health_recs.append(rec)
+                            tel.event("health", **rec._asdict())
+                            state = _copy_state(snap)
+                            gamma_now = snap_gamma_now
+                            g_prev = snap_g_prev
+                            stop_reason = StopReason.DIVERGED
+                            break
+                        rec = HealthRecord(
+                            it=it_done + n, status=status, action="rollback",
                             retries=fails, dual_obj=g, grad_norm=grad_norm,
                             gamma=gamma_cur, rolled_back_to=snap_it,
-                            step_scale=scale))
-                        state = _copy_state(snap)
-                        gamma_now = snap_gamma_now
+                            step_scale=scale)
+                        health_recs.append(rec)
+                        tel.event("health", **rec._asdict())
+                        tel.counter("solve.rollbacks")
+                        state = self.rule.apply_backoff(_copy_state(snap),
+                                                        config,
+                                                        snap_gamma_now, scale)
+                        if adaptive:
+                            # γ backoff: retry under heavier regularization;
+                            # the stall decay walks it back down afterwards
+                            boosted = min(
+                                snap_gamma_now * health.gamma_backoff ** fails,
+                                float(config.gamma_init))
+                            if boosted != gamma_now:
+                                tel.event("gamma", it=it_done,
+                                          gamma_from=gamma_now,
+                                          gamma_to=boosted,
+                                          reason="health_backoff")
+                            gamma_now = boosted
                         g_prev = snap_g_prev
-                        stop_reason = StopReason.DIVERGED
-                        break
-                    health_recs.append(HealthRecord(
-                        it=it_done + n, status=status, action="rollback",
-                        retries=fails, dual_obj=g, grad_norm=grad_norm,
-                        gamma=gamma_cur, rolled_back_to=snap_it,
-                        step_scale=scale))
-                    state = self.rule.apply_backoff(_copy_state(snap), config,
-                                                    snap_gamma_now, scale)
-                    if adaptive:
-                        # γ backoff: retry under heavier regularization;
-                        # the stall decay walks it back down afterwards
-                        gamma_now = min(
-                            snap_gamma_now * health.gamma_backoff ** fails,
-                            float(config.gamma_init))
-                    g_prev = snap_g_prev
-                    # the bad chunk's stats are discarded; the iteration
-                    # counter never advanced, so γ schedules rewind with it
-                    continue
-                fails = 0
+                        # the bad chunk's stats are discarded; the iteration
+                        # counter never advanced, so γ schedules rewind too
+                        continue
+                    fails = 0
 
-            it_done += n
-            stats_chunks.append(stats)
-            if g_prev is None:
-                rel_dual = (abs(g - float(stats.dual_obj[0]))
-                            / max(1.0, abs(g)) if n > 1 else float("inf"))
-            else:
-                rel_dual = abs(g - g_prev) / max(1.0, abs(g))
-            g_prev = g
+                it_done += n
+                tel.counter("solve.iterations", n)
+                stats_chunks.append(stats)
+                if g_prev is None:
+                    rel_dual = (abs(g - float(stats.dual_obj[0]))
+                                / max(1.0, abs(g)) if n > 1 else float("inf"))
+                else:
+                    rel_dual = abs(g - g_prev) / max(1.0, abs(g))
+                g_prev = g
 
-            at_target = gamma_cur <= config.gamma * (1.0 + 1e-6)
-            stalled = rel_dual < config.gamma_stall_tol
-            if adaptive and not at_target and stalled:
-                gamma_now = max(gamma_now * config.gamma_decay_rate,
-                                config.gamma)
-            rec = ConvergenceCheck(it=it_done, dual_obj=g, rel_dual=rel_dual,
-                                   infeas=infeas, grad_norm=grad_norm,
-                                   gamma=gamma_cur, elapsed=elapsed,
-                                   stalled=stalled)
-            diags.append(rec)
-            if diagnostics_fn is not None:
-                diagnostics_fn(rec)
-            if health is not None:
-                snap = _copy_state(state)
-                snap_it = it_done
-                snap_gamma_now = gamma_now
-                snap_g_prev = g_prev
-                snap_g, snap_grad, snap_gamma = g, grad_norm, gamma_cur
-            if checkpoint_fn is not None:
-                checkpoint_fn(it_done, state, _meta(final=False))
+                at_target = gamma_cur <= config.gamma * (1.0 + 1e-6)
+                stalled = rel_dual < config.gamma_stall_tol
+                if adaptive and not at_target and stalled:
+                    decayed = max(gamma_now * config.gamma_decay_rate,
+                                  config.gamma)
+                    if decayed != gamma_now:
+                        tel.event("gamma", it=it_done, gamma_from=gamma_now,
+                                  gamma_to=decayed, reason="stall_decay")
+                    gamma_now = decayed
+                rec = ConvergenceCheck(it=it_done, dual_obj=g,
+                                       rel_dual=rel_dual,
+                                       infeas=infeas, grad_norm=grad_norm,
+                                       gamma=gamma_cur, elapsed=elapsed,
+                                       stalled=stalled)
+                diags.append(rec)
+                tel.event("check", **rec._asdict())
+                if diagnostics_fn is not None:
+                    diagnostics_fn(rec)
+                if health is not None:
+                    snap = _copy_state(state)
+                    snap_it = it_done
+                    snap_gamma_now = gamma_now
+                    snap_g_prev = g_prev
+                    snap_g, snap_grad, snap_gamma = g, grad_norm, gamma_cur
+                if checkpoint_fn is not None:
+                    with tel.span("checkpoint", it=it_done):
+                        checkpoint_fn(it_done, state, _meta(final=False))
+                    tel.event("checkpoint", it=it_done, final=False)
 
-            # tolerance checks only count once γ has reached its target —
-            # g and x*(λ) move with γ, so earlier "convergence" is spurious
-            if at_target and criteria.satisfied(rel_dual, infeas, grad_norm,
-                                                infeas_scale):
-                converged = True
-                stop_reason = StopReason.CONVERGED
-                break
-            if (criteria.max_seconds is not None
-                    and elapsed >= criteria.max_seconds):
-                stop_reason = StopReason.MAX_SECONDS
-                break
+                # tolerance checks only count once γ has reached its target:
+                # g and x*(λ) move with γ, so earlier "convergence" is
+                # spurious
+                if at_target and criteria.satisfied(rel_dual, infeas,
+                                                    grad_norm, infeas_scale):
+                    converged = True
+                    stop_reason = StopReason.CONVERGED
+                    break
+                if (criteria.max_seconds is not None
+                        and elapsed >= criteria.max_seconds):
+                    stop_reason = StopReason.MAX_SECONDS
+                    break
+        finally:
+            if profiler is not None:
+                # a solve that raises / diverges / preempts mid-window must
+                # still flush a valid trace
+                profiler.stop(tel)
 
         if checkpoint_fn is not None:
-            checkpoint_fn(it_done, state, _meta(final=True))
+            with tel.span("checkpoint", it=it_done):
+                checkpoint_fn(it_done, state, _meta(final=True))
+            tel.event("checkpoint", it=it_done, final=True)
         if not stats_chunks:
             stats = IterStats(*(jnp.zeros((0,), jnp.float32)
                                 for _ in IterStats._fields))
@@ -383,6 +488,10 @@ class SolveEngine:
         else:
             stats = jax.tree.map(lambda *xs: jnp.concatenate(xs),
                                  *stats_chunks)
+        tel.event("solve_end", stop_reason=stop_reason.value,
+                  iterations_run=it_done, converged=converged,
+                  wall_s=time.perf_counter() - t0, checks=len(diags),
+                  health_incidents=len(health_recs))
         return SolveResult(lam=state.lam, stats=stats, iterations_run=it_done,
                            converged=converged, stop_reason=stop_reason,
                            diagnostics=tuple(diags),
@@ -408,17 +517,21 @@ def maximize(calculate: Callable, lam0: jax.Array, config: SolveConfig,
              checkpoint_fn: Optional[Callable] = None,
              preempt_fn: Optional[Callable] = None,
              initial_state: Optional[SolveState] = None,
-             resume_meta: Optional[dict] = None) -> SolveResult:
+             resume_meta: Optional[dict] = None,
+             telemetry: Optional[Telemetry] = None,
+             profiler=None) -> SolveResult:
     """Thin wrapper over SolveEngine.  With no `criteria` this runs
     `config.iterations` steps as one jitted scan (the legacy fixed-length
     behavior, bit-identical); with criteria it is tolerance-terminated.
     The fault-tolerance hooks (health guard, checkpoint/preempt/resume —
-    DESIGN.md §9) pass straight through to `SolveEngine.solve`."""
+    DESIGN.md §9) and the telemetry/profiler hooks (§11) pass straight
+    through to `SolveEngine.solve`."""
     return SolveEngine(calculate, config, algorithm).solve(
         lam0, criteria=criteria, diagnostics_fn=diagnostics_fn,
         infeas_scale=infeas_scale, health=health,
         checkpoint_fn=checkpoint_fn, preempt_fn=preempt_fn,
-        initial_state=initial_state, resume_meta=resume_meta)
+        initial_state=initial_state, resume_meta=resume_meta,
+        telemetry=telemetry, profiler=profiler)
 
 
 class Maximizer:
@@ -464,7 +577,9 @@ class Maximizer:
                  checkpoint_fn: Optional[Callable] = None,
                  preempt_fn: Optional[Callable] = None,
                  initial_state: Optional[SolveState] = None,
-                 resume_meta: Optional[dict] = None) -> SolveResult:
+                 resume_meta: Optional[dict] = None,
+                 telemetry: Optional[Telemetry] = None,
+                 profiler=None) -> SolveResult:
         if initial_value is None and initial_state is None:
             initial_value = jnp.zeros(obj.dual_shape, jnp.float32)
         criteria = self.criteria if criteria is None else criteria
@@ -472,4 +587,5 @@ class Maximizer:
             initial_value, criteria=criteria, diagnostics_fn=diagnostics_fn,
             infeas_scale=_infeas_scale(obj, criteria), health=health,
             checkpoint_fn=checkpoint_fn, preempt_fn=preempt_fn,
-            initial_state=initial_state, resume_meta=resume_meta)
+            initial_state=initial_state, resume_meta=resume_meta,
+            telemetry=telemetry, profiler=profiler)

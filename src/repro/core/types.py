@@ -211,6 +211,14 @@ class SolveConfig:
     # Spectral (BB) rule: accepted BB steps are trust-capped at
     # `bb_step_max_scale` × the engine step cap.
     bb_step_max_scale: float = 8.0
+    # Bound on the host-side SolveResult.diagnostics stream: keep only the
+    # last N ConvergenceCheck records (None = unbounded, the compatible
+    # default).  A million-iteration solve with a small check_every would
+    # otherwise accumulate host tuples without limit; the telemetry sink
+    # (DESIGN.md §11) still receives EVERY check event regardless of this
+    # cap — the JSONL log is the unbounded record, the in-memory stream
+    # the bounded convenience view.
+    max_diagnostics: Optional[int] = None
 
 
 class StopReason(enum.Enum):

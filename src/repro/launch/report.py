@@ -1,0 +1,219 @@
+"""Post-mortem renderer for telemetry run logs (DESIGN.md §11).
+
+    python -m repro.launch.report run.jsonl [--json]
+
+Reads a JSONL run log emitted via ``--log-jsonl`` (or any `JsonlSink`),
+validates every record against the event schema, and renders the solve
+post-mortem: the run manifest, the per-chunk compile / execute / host
+wall-clock split, the convergence trajectory, γ-continuation moves,
+health rollbacks, and final counters.  Exits non-zero on a schema
+violation or a missing manifest so CI can gate on log integrity.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional
+
+from repro.obs import RunLog, SchemaError, load_run
+
+
+# --------------------------------------------------------------------------
+# summarize: RunLog -> plain dict (the --json payload)
+# --------------------------------------------------------------------------
+
+def _span_chunks(spans: List[dict]) -> Dict[int, Dict[str, float]]:
+    """Fold span events into per-chunk {phase: seconds} rows.
+
+    `trace`/`compile` spans carry no chunk index (they happen once per
+    distinct chunk length, not per chunk) — they are folded into the
+    chunk that was in flight when they fired, tracked positionally via
+    the surrounding `execute` spans' chunk ids; standalone ones land in
+    chunk 0.
+    """
+    chunks: Dict[int, Dict[str, float]] = {}
+    pending: Dict[str, float] = {}
+    for ev in spans:
+        name = ev.get("name")
+        dur = float(ev.get("dur_s", 0.0))
+        if name in ("trace", "compile"):
+            pending[name] = pending.get(name, 0.0) + dur
+            continue
+        if name not in ("execute", "host", "checkpoint"):
+            continue
+        idx = int(ev.get("chunk", ev.get("it", 0)) or 0)
+        row = chunks.setdefault(idx, {})
+        row[name] = row.get(name, 0.0) + dur
+        if name == "execute" and pending:
+            for k, v in pending.items():
+                row[k] = row.get(k, 0.0) + v
+            pending.clear()
+    if pending:  # trace/compile with no execute span at all (fast path)
+        row = chunks.setdefault(0, {})
+        for k, v in pending.items():
+            row[k] = row.get(k, 0.0) + v
+    return chunks
+
+
+def summarize(run: RunLog) -> Dict[str, Any]:
+    by: Dict[str, List[dict]] = {}
+    for ev in run.events:
+        by.setdefault(ev["type"], []).append(ev)
+    spans = by.get("span", [])
+    chunks = _span_chunks(spans)
+    totals: Dict[str, float] = {}
+    for row in chunks.values():
+        for k, v in row.items():
+            totals[k] = totals.get(k, 0.0) + v
+
+    checks = by.get("check", [])
+    traj: Dict[str, Any] = {"checks": len(checks)}
+    if checks:
+        last = checks[-1]
+        traj.update(
+            first_it=checks[0].get("it"), last_it=last.get("it"),
+            final_dual_obj=last.get("dual_obj"),
+            final_rel_dual=last.get("rel_dual"),
+            final_infeas=last.get("infeas"),
+            final_gamma=last.get("gamma"))
+
+    solve_end = (by.get("solve_end") or [{}])[-1]
+    counters = (by.get("counters") or [{}])[-1]
+    return {
+        "manifest": run.manifest,
+        "events_total": len(run.events),
+        "solve": {
+            "start": (by.get("solve_start") or [{}])[-1],
+            "end": solve_end,
+        },
+        "chunks": {str(k): chunks[k] for k in sorted(chunks)},
+        "span_totals": totals,
+        "trajectory": traj,
+        "gamma_moves": [
+            {k: ev.get(k) for k in ("it", "gamma_from", "gamma_to", "reason")}
+            for ev in by.get("gamma", [])],
+        "health_events": [
+            {k: ev.get(k) for k in ("it", "status", "action", "retries")}
+            for ev in by.get("health", [])],
+        "checkpoints": len(by.get("checkpoint", [])),
+        "resolves": [
+            {k: ev.get(k) for k in ("outcome", "reason", "iterations")
+             if k in ev}
+            for ev in by.get("resolve", [])],
+        "counters": counters.get("counters", {}),
+        "gauges": counters.get("gauges", {}),
+        "profile": [{k: ev.get(k) for k in ("action", "chunk", "trace_dir")
+                     if k in ev}
+                    for ev in by.get("profile", [])],
+    }
+
+
+# --------------------------------------------------------------------------
+# render: summary dict -> human text
+# --------------------------------------------------------------------------
+
+def _fmt_s(v: Optional[float]) -> str:
+    if v is None:
+        return "-"
+    return f"{v * 1e3:8.2f}ms" if v < 1.0 else f"{v:8.3f}s "
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def render(summary: Dict[str, Any]) -> str:
+    out: List[str] = []
+    man = summary["manifest"]
+    out.append("== run manifest ==")
+    for k in sorted(man):
+        out.append(f"  {k:24s} {_fmt(man[k])}")
+
+    solve = summary["solve"]
+    if solve["start"] or solve["end"]:
+        out.append("== solve ==")
+        for k, v in sorted({**solve["start"], **solve["end"]}.items()):
+            if k not in ("type", "t"):
+                out.append(f"  {k:24s} {_fmt(v)}")
+
+    chunks = summary["chunks"]
+    if chunks:
+        out.append("== per-chunk wall-clock split ==")
+        phases = ["trace", "compile", "execute", "host", "checkpoint"]
+        out.append("  chunk  " + "".join(f"{p:>11s}" for p in phases))
+        for idx in sorted(chunks, key=int):
+            row = chunks[idx]
+            out.append(f"  {idx:>5s}  " + "".join(
+                f"{_fmt_s(row.get(p)):>11s}" for p in phases))
+        tot = summary["span_totals"]
+        out.append("  total  " + "".join(
+            f"{_fmt_s(tot.get(p)):>11s}" for p in phases))
+
+    traj = summary["trajectory"]
+    out.append(f"== trajectory ({traj['checks']} convergence checks) ==")
+    for k in ("first_it", "last_it", "final_dual_obj", "final_rel_dual",
+              "final_infeas", "final_gamma"):
+        if k in traj and traj[k] is not None:
+            out.append(f"  {k:24s} {_fmt(traj[k])}")
+
+    for key, title in (("gamma_moves", "gamma continuation"),
+                       ("health_events", "health"),
+                       ("resolves", "warm resolves"),
+                       ("profile", "profiler")):
+        rows = summary[key]
+        if rows:
+            out.append(f"== {title} ({len(rows)}) ==")
+            for r in rows:
+                out.append("  " + "  ".join(
+                    f"{k}={_fmt(v)}" for k, v in r.items() if v is not None))
+
+    if summary["checkpoints"]:
+        out.append(f"== checkpoints: {summary['checkpoints']} flushes ==")
+
+    if summary["counters"] or summary["gauges"]:
+        out.append("== counters ==")
+        for k in sorted(summary["counters"]):
+            out.append(f"  {k:24s} {summary['counters'][k]}")
+        for k in sorted(summary["gauges"]):
+            out.append(f"  {k:24s} {_fmt(summary['gauges'][k])} (gauge)")
+
+    out.append(f"== {summary['events_total']} events total ==")
+    return "\n".join(out)
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.report",
+        description="Render a post-mortem from a telemetry JSONL run log.")
+    ap.add_argument("path", help="run log written via --log-jsonl")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the summary as JSON instead of text")
+    args = ap.parse_args(argv)
+
+    try:
+        run = load_run(args.path)
+    except (SchemaError, OSError, json.JSONDecodeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    if not run.manifest:
+        print(f"error: {args.path}: no manifest record in run log",
+              file=sys.stderr)
+        return 1
+
+    summary = summarize(run)
+    if args.json:
+        print(json.dumps(summary, indent=2, sort_keys=True))
+    else:
+        print(render(summary))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

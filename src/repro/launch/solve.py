@@ -9,13 +9,23 @@ SolveEngine.  `--lambda-sharded` enables the beyond-paper λ-sharding for
 very large destination counts.  `--save-duals`/`--warm-start` dump/load λ
 as .npz for the repeated-solve workflow (re-solve after an rhs/budget
 nudge starts from the previous optimum and stops in far fewer iterations).
+
+Observability (DESIGN.md §11): all launcher output goes through a leveled
+`Telemetry` logger.  `--log-jsonl PATH` additionally records the full
+structured run log (manifest, per-chunk compile/execute/host spans, check
+events, γ moves, health events) for `python -m repro.launch.report`;
+`--json` prints one machine-readable result object to stdout (logs move
+to stderr); `--profile-dir` captures a jax.profiler trace over a chunk
+window.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import hashlib
+import json
 import signal
+import sys
 import time
 
 import numpy as np
@@ -29,6 +39,7 @@ from repro.core.types import StopReason
 from repro.core.distributed import solve_distributed
 from repro.checkpoint.manager import CheckpointManager
 from repro.launch.mesh import make_mesh
+from repro.obs import JsonlSink, LEVELS, ProfilerHook, Telemetry
 from repro import formulations
 
 
@@ -137,6 +148,27 @@ def apply_warm_start_policy(cfg: SolveConfig, meta: dict,
                        f"continuation skipped")
 
 
+def attach_byte_census(tel: Telemetry, obj, lam, gamma: float) -> None:
+    """Attach an hlo_cost census of one dual value+grad evaluation to the
+    run manifest: flops / bytes / collective bytes per iteration at the
+    served problem size (DESIGN.md §11).  Best-effort — a lowering the
+    analyzer cannot parse downgrades to a warning, never a failed solve.
+    """
+    from repro.launch import hlo_cost
+    try:
+        txt = (jax.jit(obj.calculate)
+               .lower(jnp.asarray(lam), jnp.float32(gamma))
+               .compile().as_text())
+        cost = hlo_cost.analyze(txt)
+        tel.manifest(hlo_cost={
+            "flops_per_iteration": cost["flops_per_device"],
+            "bytes_per_iteration": cost["bytes_per_device"],
+            "collective_bytes_per_iteration":
+                cost["collective_bytes_per_device"]})
+    except Exception as e:
+        tel.warning(f"hlo_cost census skipped: {type(e).__name__}: {e}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sources", type=int, default=100_000)
@@ -221,22 +253,67 @@ def main():
                          "--checkpoint-dir (exact trajectory: the resumed "
                          "solve is bitwise-identical to an uninterrupted "
                          "one at matched chunk boundaries)")
+    # observability (DESIGN.md §11)
+    ap.add_argument("--log-jsonl", default=None, metavar="PATH",
+                    help="append the structured run log (manifest, spans, "
+                         "check/γ/health events) to PATH as JSON lines; "
+                         "render it with `python -m repro.launch.report`")
+    ap.add_argument("--log-level", default="info", choices=sorted(LEVELS),
+                    help="console verbosity; the JSONL log always carries "
+                         "the full stream")
+    ap.add_argument("--json", action="store_true",
+                    help="print one machine-readable result object to "
+                         "stdout (all logs move to stderr)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the chunk window "
+                         "[--profile-start-chunk, +--profile-num-chunks) "
+                         "to DIR (opt-in; needs a chunked solve)")
+    ap.add_argument("--profile-start-chunk", type=int, default=0,
+                    help="first chunk index inside the profiler trace")
+    ap.add_argument("--profile-num-chunks", type=int, default=1,
+                    help="number of chunks the profiler trace spans")
     args = ap.parse_args()
     if args.resume and not args.checkpoint_dir:
         ap.error("--resume requires --checkpoint-dir")
+    if args.lambda_sharded and args.formulation != "matching":
+        ap.error("--lambda-sharded is only supported with "
+                 "--formulation matching (composed formulations solve on "
+                 "a single replicated λ)")
 
+    # --json owns stdout: exactly one JSON object; every log line (and the
+    # full structured record stream, with --log-jsonl) goes elsewhere
+    tel = Telemetry(
+        sink=JsonlSink(args.log_jsonl) if args.log_jsonl else None,
+        level=args.log_level,
+        stream=sys.stderr if args.json else sys.stdout)
+    profiler = (ProfilerHook(args.profile_dir,
+                             start_chunk=args.profile_start_chunk,
+                             num_chunks=args.profile_num_chunks)
+                if args.profile_dir else None)
+    try:
+        result = _run(args, tel, profiler)
+        if args.json:
+            print(json.dumps(result, sort_keys=True))
+    finally:
+        tel.close()
+
+
+def _run(args, tel: Telemetry, profiler) -> dict:
+    ap_error = SystemExit  # arg combinations below here are solve errors
     spec = InstanceSpec(
         num_sources=args.sources, num_destinations=args.destinations,
         avg_nnz_per_row=args.nnz_per_row or max(args.sources * 0.001, 8),
         seed=args.seed)
     t0 = time.perf_counter()
-    lp = jax.tree.map(jnp.asarray, generate(spec))
+    with tel.span("generate", sources=args.sources,
+                  destinations=args.destinations):
+        lp = jax.tree.map(jnp.asarray, generate(spec))
     try:
         validate_lp(lp, name="instance")
     except LPValidationError as e:
-        raise SystemExit(f"generated instance failed validation:\n{e}")
-    print(f"generated {args.sources}x{args.destinations} in "
-          f"{time.perf_counter() - t0:.1f}s")
+        raise ap_error(f"generated instance failed validation:\n{e}")
+    tel.info(f"generated {args.sources}x{args.destinations} in "
+             f"{time.perf_counter() - t0:.1f}s")
     continuation = args.continuation or args.adaptive_continuation
     cfg = SolveConfig(
         iterations=args.iterations, gamma=args.gamma,
@@ -247,26 +324,33 @@ def main():
     criteria = None
     if (args.tol_infeas is not None or args.tol_rel_dual is not None
             or args.max_seconds is not None or args.adaptive_continuation
-            or args.health_guard or args.checkpoint_dir):
-        # adaptive continuation / health guarding / checkpointing run
-        # chunked even with no tolerances set — build the criteria so
-        # --check-every governs the chunk cadence
+            or args.health_guard or args.checkpoint_dir
+            or profiler is not None):
+        # adaptive continuation / health guarding / checkpointing /
+        # profiling run chunked even with no tolerances set — build the
+        # criteria so --check-every governs the chunk cadence
         criteria = StoppingCriteria(
             tol_infeas=args.tol_infeas, tol_rel_dual=args.tol_rel_dual,
             max_seconds=args.max_seconds, check_every=args.check_every)
 
     def on_check(rec):
         if args.verbose_checks:
-            print(f"  it {rec.it:6d}  dual {rec.dual_obj:.6f}  "
-                  f"rel_dual {rec.rel_dual:.2e}  infeas {rec.infeas:.2e}  "
-                  f"gamma {rec.gamma:.4f}  {rec.elapsed:.1f}s")
+            tel.info(f"  it {rec.it:6d}  dual {rec.dual_obj:.6f}  "
+                     f"rel_dual {rec.rel_dual:.2e}  infeas {rec.infeas:.2e}  "
+                     f"gamma {rec.gamma:.4f}  {rec.elapsed:.1f}s")
 
-    if args.lambda_sharded and args.formulation != "matching":
-        ap.error("--lambda-sharded is only supported with "
-                 "--formulation matching (composed formulations solve on "
-                 "a single replicated λ)")
     fingerprint = instance_fingerprint(lp)
     rule = get_rule(args.algorithm)
+    tel.manifest(
+        fingerprint=fingerprint, formulation=args.formulation,
+        algorithm=args.algorithm, sources=args.sources,
+        destinations=args.destinations, seed=args.seed,
+        gamma=cfg.gamma, gamma_init=cfg.gamma_init,
+        adaptive_continuation=cfg.adaptive_continuation,
+        iterations_cap=args.iterations,
+        check_every=(criteria.check_every if criteria else None),
+        config=dataclasses.asdict(cfg),
+        argv=sys.argv[1:])
 
     # -- fault tolerance (DESIGN.md §9) ---------------------------------
     health = (HealthConfig(max_retries=args.max_retries)
@@ -280,8 +364,8 @@ def main():
         if args.resume:
             step = mgr.latest_step()
             if step is None:
-                print(f"--resume: no checkpoint in {args.checkpoint_dir}; "
-                      f"starting fresh")
+                tel.warning(f"--resume: no checkpoint in "
+                            f"{args.checkpoint_dir}; starting fresh")
             else:
                 flat, extra = mgr.restore_flat(step)
                 ck_fp = extra.get("fingerprint")
@@ -308,9 +392,9 @@ def main():
                 resume_state = rule.state_from_flat(flat)
                 resume_meta = {"gamma_now": extra.get("gamma_now"),
                                "g_prev": extra.get("g_prev")}
-                print(f"resumed from checkpoint step {step} in "
-                      f"{args.checkpoint_dir} "
-                      f"(gamma_now={extra.get('gamma_now')})")
+                tel.info(f"resumed from checkpoint step {step} in "
+                         f"{args.checkpoint_dir} "
+                         f"(gamma_now={extra.get('gamma_now')})")
 
         last_saved = {"it": None}
 
@@ -333,8 +417,8 @@ def main():
                                                   args.algorithm),
                             "fingerprint": fingerprint})
             last_saved["it"] = it
-            print(f"checkpoint saved: step {it} -> {args.checkpoint_dir}",
-                  flush=True)
+            tel.info(f"checkpoint saved: step {it} -> "
+                     f"{args.checkpoint_dir}")
 
         # SIGTERM/SIGINT (preemption, ctrl-C) => stop at the next chunk
         # boundary; the engine's final checkpoint_fn call flushes the state
@@ -343,8 +427,8 @@ def main():
 
         def _on_signal(signum, frame):
             got_signal["num"] = signum
-            print(f"received signal {signum}; checkpointing at next chunk "
-                  f"boundary", flush=True)
+            tel.warning(f"received signal {signum}; checkpointing at next "
+                        f"chunk boundary")
 
         signal.signal(signal.SIGTERM, _on_signal)
         signal.signal(signal.SIGINT, _on_signal)
@@ -360,13 +444,16 @@ def main():
                                                        fingerprint)
         if skipped:
             continuation = False
-            print(f"warm start: {reason}")
+            tel.info(f"warm start: {reason}")
+            tel.event("resolve", outcome="accept", reason=reason)
         elif continuation:
-            print(f"WARNING: --warm-start with --continuation re-runs the "
-                  f"γ schedule from gamma_init and will march the loaded λ "
-                  f"away from its optimum ({reason})")
+            tel.warning(f"WARNING: --warm-start with --continuation re-runs "
+                        f"the γ schedule from gamma_init and will march the "
+                        f"loaded λ away from its optimum ({reason})")
+            tel.event("resolve", outcome="reject", reason=reason)
         return lam0
 
+    obj = None
     t0 = time.perf_counter()
     if args.formulation == "matching":
         if not args.no_precondition:
@@ -390,16 +477,17 @@ def main():
                                 health=health, checkpoint_fn=checkpoint_fn,
                                 preempt_fn=preempt_fn,
                                 initial_state=resume_state,
-                                resume_meta=resume_meta)
+                                resume_meta=resume_meta,
+                                telemetry=tel, profiler=profiler)
     else:
         obj = formulations.make_objective(
             args.formulation, lp,
             ax_mode=args.ax_mode or "aligned",
             use_pallas=args.use_pallas,
             row_norm=not args.no_precondition)
-        print(f"formulation '{args.formulation}': "
-              f"{obj.dual_shape[0]} dual rows "
-              f"({ {k: f'{v.start}:{v.stop}' for k, v in obj.row_slices().items()} })")
+        tel.info(f"formulation '{args.formulation}': "
+                 f"{obj.dual_shape[0]} dual rows "
+                 f"({ {k: f'{v.start}:{v.stop}' for k, v in obj.row_slices().items()} })")
         lam0 = (load_warm(args.warm_start, obj.dual_shape)
                 if args.warm_start and resume_state is None else None)
         res = Maximizer(cfg, algorithm=args.algorithm).maximize(
@@ -410,65 +498,103 @@ def main():
                                       checkpoint_fn=checkpoint_fn,
                                       preempt_fn=preempt_fn,
                                       initial_state=resume_state,
-                                      resume_meta=resume_meta)
+                                      resume_meta=resume_meta,
+                                      telemetry=tel, profiler=profiler)
     jax.block_until_ready(res.lam)
     dt = time.perf_counter() - t0
     d = np.asarray(res.stats.dual_obj)
     reason = res.stop_reason.value if res.stop_reason else "?"
-    print(f"{res.iterations_run} iterations ({args.algorithm}) in {dt:.2f}s "
-          f"({dt / max(res.iterations_run, 1) * 1e3:.1f} ms/iter, compile "
-          f"included); stop reason: {reason}")
+    tel.info(f"{res.iterations_run} iterations ({args.algorithm}) in "
+             f"{dt:.2f}s "
+             f"({dt / max(res.iterations_run, 1) * 1e3:.1f} ms/iter, "
+             f"compile included); stop reason: {reason}")
     for rec in res.health:
-        print(f"  health: it {rec.it} {rec.status} -> {rec.action} "
-              f"(retry {rec.retries}, step_scale {rec.step_scale:.3g}, "
-              f"gamma {rec.gamma:.4g})")
+        tel.warning(f"  health: it {rec.it} {rec.status} -> {rec.action} "
+                    f"(retry {rec.retries}, step_scale {rec.step_scale:.3g}, "
+                    f"gamma {rec.gamma:.4g})")
     if res.stop_reason == StopReason.DIVERGED:
-        print("solve DIVERGED: health-guard retries exhausted; the duals "
-              "are the last state that passed the health checks")
+        tel.error("solve DIVERGED: health-guard retries exhausted; the "
+                  "duals are the last state that passed the health checks")
     if d.size:
-        print(f"dual {d[0]:.3f} -> {d[-1]:.3f}; "
-              f"infeas {float(res.stats.infeas[-1]):.3e}; "
-              f"gamma {float(res.stats.gamma[-1]):.4f}")
+        tel.info(f"dual {d[0]:.3f} -> {d[-1]:.3f}; "
+                 f"infeas {float(res.stats.infeas[-1]):.3e}; "
+                 f"gamma {float(res.stats.gamma[-1]):.4f}")
     if res.stop_reason == StopReason.PREEMPTED:
-        print(f"preempted at iteration {res.iterations_run}; resume with "
-              f"--resume --checkpoint-dir {args.checkpoint_dir}")
+        tel.warning(f"preempted at iteration {res.iterations_run}; resume "
+                    f"with --resume --checkpoint-dir {args.checkpoint_dir}")
     gamma_last = (float(res.stats.gamma[-1]) if d.size else cfg.gamma)
+
+    result = {
+        "run_id": tel.run_id,
+        "formulation": args.formulation,
+        "algorithm": args.algorithm,
+        "iterations_run": int(res.iterations_run),
+        "stop_reason": reason,
+        "wall_s": dt,
+        "ms_per_iteration": dt / max(res.iterations_run, 1) * 1e3,
+        "fingerprint": fingerprint,
+        "gamma_final": gamma_last,
+        "health_events": len(res.health),
+    }
+    if d.size:
+        result.update(
+            dual_obj_first=float(d[0]), dual_obj_final=float(d[-1]),
+            infeas_final=float(res.stats.infeas[-1]))
+
     if args.save_duals:
         save_duals(args.save_duals, res.lam, gamma=gamma_last,
                    fingerprint=fingerprint)
-        print(f"saved duals -> {args.save_duals} "
-              f"(gamma={gamma_last:.4g}, fingerprinted)")
+        tel.info(f"saved duals -> {args.save_duals} "
+                 f"(gamma={gamma_last:.4g}, fingerprinted)")
+        result["saved_duals"] = args.save_duals
 
-    if ((args.export_primal or args.certify)
-            and res.stop_reason == StopReason.PREEMPTED):
-        print("skipping primal export/certification: solve was preempted "
-              "mid-trajectory (resume it to completion first)")
-    elif args.export_primal or args.certify:
-        from repro import primal as primal_sub
-        gamma_final = jnp.float32(gamma_last)
+    serve_obj = None
+    if args.export_primal or args.certify or args.log_jsonl:
+        # serving/certification/census run single-host over the same
+        # (preconditioned) LP the distributed solve consumed; λ is in
+        # the same row-normalized space, so x*(λ) matches
         if args.formulation == "matching":
-            # serving/certification run single-host over the same
-            # (preconditioned) LP the distributed solve consumed; λ is in
-            # the same row-normalized space, so x*(λ) matches
             from repro.core import MatchingObjective
             serve_obj = MatchingObjective(lp, ax_mode=args.ax_mode
                                           or "aligned")
         else:
             serve_obj = obj
+
+    # the byte census costs one extra compile of the dual kernel — only
+    # pay it when a run log is actually being recorded
+    if args.log_jsonl:
+        with tel.span("hlo_census"):
+            attach_byte_census(tel, serve_obj, res.lam, gamma_last)
+
+    if ((args.export_primal or args.certify)
+            and res.stop_reason == StopReason.PREEMPTED):
+        tel.warning("skipping primal export/certification: solve was "
+                    "preempted mid-trajectory (resume it to completion "
+                    "first)")
+    elif args.export_primal or args.certify:
+        from repro import primal as primal_sub
+        gamma_final = jnp.float32(gamma_last)
         if args.export_primal:
             t0 = time.perf_counter()
-            paths = primal_sub.write_shards(serve_obj, res.lam, gamma_final,
-                                            args.export_primal,
-                                            chunk_rows=args.chunk_rows)
-            dt = time.perf_counter() - t0
+            with tel.span("export_primal"):
+                paths = primal_sub.write_shards(serve_obj, res.lam,
+                                                gamma_final,
+                                                args.export_primal,
+                                                chunk_rows=args.chunk_rows)
+            dt_x = time.perf_counter() - t0
             n_src = sum(s.n for s in serve_obj.lp.slabs)
-            print(f"exported {len(paths)} decision shards "
-                  f"({n_src} sources) -> {args.export_primal} in {dt:.1f}s "
-                  f"({n_src / max(dt, 1e-9):.0f} sources/s)")
+            tel.info(f"exported {len(paths)} decision shards "
+                     f"({n_src} sources) -> {args.export_primal} in "
+                     f"{dt_x:.1f}s "
+                     f"({n_src / max(dt_x, 1e-9):.0f} sources/s)")
+            result["export_shards"] = len(paths)
         if args.certify:
-            cert = primal_sub.certify(serve_obj, res.lam, gamma_final,
-                                      chunk_rows=args.chunk_rows)
-            print(primal_sub.format_certificate(cert))
+            with tel.span("certify"):
+                cert = primal_sub.certify(serve_obj, res.lam, gamma_final,
+                                          chunk_rows=args.chunk_rows)
+            tel.info(primal_sub.format_certificate(cert))
+            result["certificate_valid"] = bool(cert.valid)
+    return result
 
 
 if __name__ == "__main__":

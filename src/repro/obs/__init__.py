@@ -1,0 +1,19 @@
+"""repro.obs — the solver telemetry subsystem (DESIGN.md §11).
+
+Structured run logs (JSONL events + manifest), nestable wall-clock trace
+spans, monotonic counters/gauges, a leveled console logger mirrored into
+the sink, and an opt-in jax.profiler window.  `Telemetry.disabled()` is
+the zero-cost default threaded through SolveEngine and AllocationServer;
+`launch/report.py` renders a post-mortem from any emitted run log.
+"""
+from .telemetry import JsonlSink, ListSink, Telemetry, LEVELS
+from .schema import (EVENT_FIELDS, RunLog, SchemaError, iter_events,
+                     load_run, validate_event, validate_run)
+from .profile import ProfilerHook
+
+__all__ = [
+    "Telemetry", "JsonlSink", "ListSink", "LEVELS",
+    "EVENT_FIELDS", "RunLog", "SchemaError", "iter_events", "load_run",
+    "validate_event", "validate_run",
+    "ProfilerHook",
+]

@@ -1,0 +1,67 @@
+"""Opt-in jax.profiler hook for the chunked solve loop (DESIGN.md §11).
+
+The engine's hot path is one XLA program per chunk; profiling every chunk
+of a million-iteration solve would swamp the trace.  `ProfilerHook`
+therefore traces a *window* of chunks — start at chunk `start_chunk`,
+stop after `num_chunks` — which is enough to attribute where a steady-
+state iteration's time goes (the launcher flag surface:
+`--profile-dir/--profile-start-chunk/--profile-num-chunks`).
+
+The hook is driven by SolveEngine at chunk boundaries and is exception-
+safe: `stop()` is called from the engine's finally block, so a solve
+that diverges or is preempted mid-window still writes a valid trace.
+Start/stop markers are mirrored into the telemetry stream as `profile`
+events so the run log records exactly which chunks the trace covers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .telemetry import Telemetry
+
+__all__ = ["ProfilerHook"]
+
+
+class ProfilerHook:
+    def __init__(self, trace_dir: str, start_chunk: int = 0,
+                 num_chunks: int = 1):
+        if num_chunks < 1:
+            raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
+        self.trace_dir = trace_dir
+        self.start_chunk = int(start_chunk)
+        self.num_chunks = int(num_chunks)
+        self.active = False
+        self._done = False
+
+    def chunk_start(self, chunk_idx: int,
+                    telemetry: Optional[Telemetry] = None) -> None:
+        """Called before chunk `chunk_idx` dispatches."""
+        if self._done or self.active or chunk_idx < self.start_chunk:
+            return
+        import jax
+        jax.profiler.start_trace(self.trace_dir)
+        self.active = True
+        if telemetry is not None:
+            telemetry.event("profile", action="start", dir=self.trace_dir,
+                            chunk=chunk_idx)
+
+    def chunk_end(self, chunk_idx: int,
+                  telemetry: Optional[Telemetry] = None) -> None:
+        """Called after chunk `chunk_idx` completes (host sync done)."""
+        if not self.active:
+            return
+        if chunk_idx + 1 - self.start_chunk >= self.num_chunks:
+            self.stop(telemetry, chunk=chunk_idx)
+
+    def stop(self, telemetry: Optional[Telemetry] = None,
+             chunk: Optional[int] = None) -> None:
+        """Flush the trace; idempotent (the engine calls it in finally)."""
+        if not self.active:
+            return
+        import jax
+        jax.profiler.stop_trace()
+        self.active = False
+        self._done = True
+        if telemetry is not None:
+            telemetry.event("profile", action="stop", dir=self.trace_dir,
+                            chunk=chunk)

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.core import Maximizer, SolveConfig, StoppingCriteria
 from repro.core.types import SolveResult, StopReason
+from repro.obs import Telemetry
 
 from .extract import primal_rows_fn
 
@@ -95,14 +96,26 @@ class AllocationServer:
 
     def __init__(self, obj, lam, gamma, config: Optional[SolveConfig] = None,
                  max_batch: int = 256, retry_backoff_s: float = 1.0,
-                 max_backoff_s: float = 60.0):
+                 max_backoff_s: float = 60.0,
+                 telemetry: Optional[Telemetry] = None):
         self.obj = obj
         self.lam = jnp.asarray(lam)
         self.gamma = jnp.asarray(gamma, jnp.float32)
         self.config = config
         self.max_batch = int(max_batch)
+        self.telemetry = (telemetry if telemetry is not None
+                          else Telemetry.disabled())
         self._latencies = []
         self._sources_served = 0
+        # lifetime-monotonic counters (metrics_snapshot): unlike the
+        # latency window, these survive reset_stats() — a scrape target
+        # must never see a counter go backwards
+        self._metrics: Dict[str, int] = {
+            "queries_total": 0, "sources_total": 0,
+            "resolve_attempts_total": 0, "resolve_failures_total": 0,
+            "resolve_successes_total": 0, "resolve_skipped_total": 0,
+            "warmup_kernels_total": 0,
+        }
         # degraded-mode bookkeeping: failed warm_resolves never disturb the
         # served (obj, λ) pair; retries are gated by exponential backoff
         self.retry_backoff_s = float(retry_backoff_s)
@@ -153,6 +166,7 @@ class AllocationServer:
                 if length >= cap:
                     break
                 length *= 2
+        self._metrics["warmup_kernels_total"] += compiled
         return compiled
 
     def query(self, source_ids: Sequence[int]) -> Dict[int, DecisionRow]:
@@ -163,27 +177,30 @@ class AllocationServer:
         compute, readback — is recorded for `stats()`.
         """
         t0 = time.perf_counter()
-        groups: Dict[int, list] = {}
-        for sid in source_ids:
-            si, row = self._route[int(sid)]     # KeyError = unknown source
-            groups.setdefault(si, []).append((int(sid), row))
-        out: Dict[int, DecisionRow] = {}
-        for si, pairs in groups.items():
-            fn = primal_rows_fn(self.obj, si)
-            for lo in range(0, len(pairs), self.max_batch):
-                chunk = pairs[lo:lo + self.max_batch]
-                rows = np.asarray([r for _, r in chunk], np.int32)
-                padded = np.zeros(_pad_pow2(len(rows)), np.int32)
-                padded[:len(rows)] = rows
-                x = np.asarray(fn(self.lam, self.gamma,
-                                  jnp.asarray(padded)))[:len(rows)]
-                for (sid, row), xr in zip(chunk, x):
-                    out[sid] = DecisionRow(
-                        source_id=sid, slab_index=si, row=row,
-                        dest_idx=self._dest[si][row],
-                        mask=self._mask[si][row], x=xr)
+        with self.telemetry.span("query", sources=len(source_ids)):
+            groups: Dict[int, list] = {}
+            for sid in source_ids:
+                si, row = self._route[int(sid)]  # KeyError = unknown source
+                groups.setdefault(si, []).append((int(sid), row))
+            out: Dict[int, DecisionRow] = {}
+            for si, pairs in groups.items():
+                fn = primal_rows_fn(self.obj, si)
+                for lo in range(0, len(pairs), self.max_batch):
+                    chunk = pairs[lo:lo + self.max_batch]
+                    rows = np.asarray([r for _, r in chunk], np.int32)
+                    padded = np.zeros(_pad_pow2(len(rows)), np.int32)
+                    padded[:len(rows)] = rows
+                    x = np.asarray(fn(self.lam, self.gamma,
+                                      jnp.asarray(padded)))[:len(rows)]
+                    for (sid, row), xr in zip(chunk, x):
+                        out[sid] = DecisionRow(
+                            source_id=sid, slab_index=si, row=row,
+                            dest_idx=self._dest[si][row],
+                            mask=self._mask[si][row], x=xr)
         self._latencies.append(time.perf_counter() - t0)
         self._sources_served += len(out)
+        self._metrics["queries_total"] += 1
+        self._metrics["sources_total"] += len(out)
         return out
 
     def stats(self) -> QueryStats:
@@ -208,6 +225,21 @@ class AllocationServer:
         self._latencies = []
         self._sources_served = 0
 
+    def metrics_snapshot(self) -> Dict[str, float]:
+        """Lifetime-monotonic counters plus point-in-time gauges.
+
+        Unlike `stats()` (whose window `reset_stats()` clears), the
+        `*_total` counters here only ever increase over the server's
+        lifetime — a scrape target must never see a counter go backwards.
+        Gauges (`degraded`, `staleness_s`, `consecutive_failures`) carry
+        the current health surface of DESIGN.md §9.
+        """
+        snap: Dict[str, float] = dict(self._metrics)
+        snap["degraded"] = 1 if self._consec_failures > 0 else 0
+        snap["consecutive_failures"] = self._consec_failures
+        snap["staleness_s"] = time.monotonic() - self._last_good_update
+        return snap
+
     def update_duals(self, lam):
         """Swap in a new dual vector (e.g. replicated from a re-solve)."""
         lam = jnp.asarray(lam)
@@ -227,6 +259,10 @@ class AllocationServer:
                                                      - 1),
                       self.max_backoff_s)
         self._next_retry_at = time.monotonic() + backoff
+        self._metrics["resolve_failures_total"] += 1
+        self.telemetry.event("resolve", outcome="reject", reason=reason,
+                             consecutive_failures=self._consec_failures,
+                             backoff_s=backoff)
         return None
 
     def warm_resolve(self, criteria: Optional[StoppingCriteria] = None,
@@ -263,7 +299,11 @@ class AllocationServer:
                 f"{tuple(obj.dual_shape)} != served "
                 f"{tuple(self.obj.dual_shape)}")
         if not force and time.monotonic() < self._next_retry_at:
+            self._metrics["resolve_skipped_total"] += 1
+            self.telemetry.event("resolve", outcome="skipped",
+                                 reason="backoff")
             return None
+        self._metrics["resolve_attempts_total"] += 1
         target = obj if obj is not None else self.obj
         cfg = config or self.config or SolveConfig()
         cfg = dataclasses.replace(cfg, gamma_init=None,
@@ -296,6 +336,11 @@ class AllocationServer:
         self._consec_failures = 0
         self._next_retry_at = 0.0
         self._last_good_update = time.monotonic()
+        self._metrics["resolve_successes_total"] += 1
+        self.telemetry.event("resolve", outcome="accept",
+                             iterations=int(res.iterations_run),
+                             stop_reason=str(res.stop_reason.name),
+                             swapped_objective=swapped)
         if swapped:
             self._build_routes()
             # the query kernels are cached per objective identity; re-warm

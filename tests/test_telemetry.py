@@ -1,0 +1,334 @@
+"""Telemetry subsystem (DESIGN.md §11): disabled-path bit-identity,
+JSONL schema round-trip, span taxonomy, server metrics, report rendering.
+
+The contract under test:
+  * attaching a Telemetry must OBSERVE, never perturb: the dual
+    trajectory with a recording Telemetry is bitwise identical to
+    `Telemetry.disabled()` (the engine default), fast path and chunked —
+    the same standard as the §9 health-guard and §10 update-rule
+    bit-identity tests;
+  * every emitted record round-trips through the schema validator;
+  * check events mirror the diagnostics stream one-to-one, and keep
+    flowing to the sink even when `max_diagnostics` bounds the in-memory
+    stream;
+  * the server's `metrics_snapshot()` counters are lifetime-monotonic
+    (reset_stats must not touch them) and count degraded-mode incidents
+    under the PR-6 fault harness;
+  * `launch/report.py` renders a compile/execute/host split per chunk;
+  * `src/repro/core/` and `src/repro/primal/` stay print()-free — all
+    operator output goes through the telemetry logger.
+"""
+import json
+import os
+import re
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (HealthConfig, InstanceSpec, MatchingObjective,
+                        Maximizer, SolveConfig, StopReason,
+                        StoppingCriteria, generate, precondition)
+from repro.core.maximizer import SolveEngine
+from repro.obs import (ListSink, SchemaError, Telemetry, load_run,
+                       validate_event, validate_run)
+from repro.testing import ChunkFaultInjector, ExplodingObjective
+
+
+@pytest.fixture(scope="module")
+def lp():
+    spec = InstanceSpec(num_sources=30, num_destinations=8,
+                        avg_nnz_per_row=10, seed=3)
+    lp = jax.tree.map(jnp.asarray, generate(spec))
+    lp, _ = precondition(lp, row_norm=True)
+    return lp
+
+
+CFG = SolveConfig(iterations=120, gamma=0.1, max_step=10.0,
+                  initial_step=1e-3)
+CRIT = StoppingCriteria(tol_grad_norm=0.0, check_every=7)
+
+
+def _recording():
+    sink = ListSink()
+    return Telemetry(sink=sink, stream=open(os.devnull, "w")), sink
+
+
+def _assert_same_result(a, b):
+    np.testing.assert_array_equal(np.asarray(a.lam), np.asarray(b.lam))
+    for x, y in zip(a.stats, b.stats):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert a.iterations_run == b.iterations_run
+    assert a.stop_reason == b.stop_reason
+
+
+class TestBitIdentity:
+    def test_fast_path_bitwise_identical(self, lp):
+        obj = MatchingObjective(lp)
+        plain = Maximizer(CFG).maximize(obj)           # engine default:
+        tel, sink = _recording()                       # Telemetry.disabled()
+        logged = Maximizer(CFG).maximize(obj, telemetry=tel)
+        _assert_same_result(plain, logged)
+        assert any(r["type"] == "solve_end" for r in sink.records)
+
+    def test_chunked_path_bitwise_identical(self, lp):
+        obj = MatchingObjective(lp)
+        plain = Maximizer(CFG).maximize(obj, criteria=CRIT)
+        tel, sink = _recording()
+        logged = Maximizer(CFG).maximize(obj, criteria=CRIT, telemetry=tel)
+        _assert_same_result(plain, logged)
+        checks = [r for r in sink.records if r["type"] == "check"]
+        assert len(checks) == len(logged.diagnostics)
+
+    def test_disabled_is_singleton_noop(self):
+        tel = Telemetry.disabled()
+        assert tel is Telemetry.disabled()
+        assert not tel.enabled
+        with tel.span("anything"):
+            pass
+        tel.event("check", it=1)
+        tel.info("dropped")
+        assert tel.counter("x") == 0
+        tel.close()
+
+
+class TestSchema:
+    def test_every_emitted_record_validates(self, lp, tmp_path):
+        path = str(tmp_path / "run.jsonl")
+        tel = Telemetry.jsonl(path, stream=open(os.devnull, "w"))
+        tel.manifest(fingerprint="f" * 8, formulation="matching",
+                     algorithm="agd")
+        res = Maximizer(CFG).maximize(MatchingObjective(lp), criteria=CRIT,
+                                      telemetry=tel)
+        tel.close()
+        run = validate_run(path)           # raises SchemaError on violation
+        assert run.manifest["fingerprint"] == "f" * 8
+        assert run.manifest["algorithm"] == "agd"
+        by = {}
+        for e in run.events:
+            by.setdefault(e["type"], []).append(e)
+        assert len(by["check"]) == len(res.diagnostics)
+        assert len(by["solve_start"]) == len(by["solve_end"]) == 1
+        assert by["solve_end"][0]["iterations_run"] == res.iterations_run
+        span_names = {s["name"] for s in by["span"]}
+        assert {"trace", "compile", "execute", "host"} <= span_names
+        assert by["counters"][-1]["counters"]["solve.iterations"] == 120
+
+    def test_validator_rejects_bad_records(self):
+        with pytest.raises(SchemaError, match="unknown event type"):
+            validate_event({"type": "nope", "t": 0.0})
+        with pytest.raises(SchemaError, match="missing numeric 't'"):
+            validate_event({"type": "check"})
+        with pytest.raises(SchemaError, match="missing required fields"):
+            validate_event({"type": "span", "t": 0.0, "name": "x"})
+
+    def test_nonfinite_floats_sanitized_to_null(self, tmp_path):
+        path = str(tmp_path / "nan.jsonl")
+        tel = Telemetry.jsonl(path)
+        tel.event("event", bad=float("nan"), worse=float("inf"), ok=1.5)
+        tel.close()
+        lines = [json.loads(l) for l in open(path) if l.strip()]
+        rec = [r for r in lines if r["type"] == "event"][0]
+        assert rec["bad"] is None and rec["worse"] is None
+        assert rec["ok"] == 1.5
+
+    def test_manifest_merge_last_wins(self, tmp_path):
+        path = str(tmp_path / "m.jsonl")
+        tel = Telemetry.jsonl(path)
+        tel.manifest(a=1)
+        tel.manifest(b=2)
+        tel.close()
+        run = load_run(path)
+        assert run.manifest["a"] == 1 and run.manifest["b"] == 2
+
+    def test_span_nesting_paths(self):
+        tel, sink = _recording()
+        with tel.span("outer"):
+            with tel.span("inner"):
+                pass
+        paths = [r["path"] for r in sink.records if r["type"] == "span"]
+        assert paths == ["outer/inner", "outer"]  # inner exits first
+
+
+class TestEngineEvents:
+    def test_health_rollbacks_emitted(self, lp):
+        obj = MatchingObjective(lp)
+        eng = SolveEngine(obj.calculate, CFG)
+        eng.chunk_fault_hook = ChunkFaultInjector(at_it=14, times=2)
+        tel, sink = _recording()
+        res = eng.solve(jnp.zeros(obj.dual_shape, jnp.float32),
+                        criteria=CRIT, health=HealthConfig(max_retries=3),
+                        telemetry=tel)
+        assert res.stop_reason == StopReason.MAX_ITERATIONS
+        health = [r for r in sink.records if r["type"] == "health"]
+        assert [(h["status"], h["action"]) for h in health] == [
+            ("nonfinite", "rollback")] * 2
+        assert tel.metrics_snapshot()["counters"]["solve.rollbacks"] == 2
+
+    def test_adaptive_gamma_moves_emitted(self, lp):
+        adapt = SolveConfig(iterations=300, gamma=0.05, gamma_init=0.8,
+                            gamma_decay_rate=0.5, max_step=20.0,
+                            initial_step=1e-3, adaptive_continuation=True)
+        tel, sink = _recording()
+        res = Maximizer(adapt).maximize(MatchingObjective(lp),
+                                        telemetry=tel)
+        gammas = np.asarray(res.stats.gamma)
+        assert gammas[0] > gammas[-1]            # decay happened
+        moves = [r for r in sink.records if r["type"] == "gamma"]
+        assert moves and all(m["reason"] == "stall_decay" for m in moves)
+        assert all(m["gamma_to"] < m["gamma_from"] for m in moves)
+
+    def test_checkpoint_flushes_emitted(self, lp):
+        obj = MatchingObjective(lp)
+        tel, sink = _recording()
+        Maximizer(CFG).maximize(obj, criteria=CRIT, telemetry=tel,
+                                checkpoint_fn=lambda it, state, meta: None)
+        cps = [r for r in sink.records if r["type"] == "checkpoint"]
+        assert cps and cps[-1]["final"] is True
+
+    def test_max_diagnostics_keeps_last(self, lp):
+        obj = MatchingObjective(lp)
+        cfg = SolveConfig(iterations=120, gamma=0.1, max_step=10.0,
+                          initial_step=1e-3, max_diagnostics=3)
+        unbounded = Maximizer(CFG).maximize(obj, criteria=CRIT)
+        tel, sink = _recording()
+        res = Maximizer(cfg).maximize(obj, criteria=CRIT, telemetry=tel)
+        assert len(res.diagnostics) == 3
+        assert [r.it for r in res.diagnostics] == [
+            r.it for r in unbounded.diagnostics[-3:]]
+        # the bound trims host memory, not the run log: every check still
+        # reached the sink
+        checks = [r for r in sink.records if r["type"] == "check"]
+        assert len(checks) == len(unbounded.diagnostics)
+        # trajectory itself is untouched by the bound
+        np.testing.assert_array_equal(np.asarray(res.lam),
+                                      np.asarray(unbounded.lam))
+
+
+class TestServerMetrics:
+    def _server(self, lp, telemetry=None):
+        from repro import primal
+        obj = MatchingObjective(lp)
+        res = Maximizer(CFG).maximize(obj, criteria=CRIT)
+        return primal.AllocationServer(obj, res.lam, CFG.gamma, config=CFG,
+                                       retry_backoff_s=30.0,
+                                       telemetry=telemetry), obj
+
+    def test_counters_monotonic_across_reset(self, lp):
+        srv, _ = self._server(lp)
+        ids = srv.source_ids()[:4].tolist()
+        srv.query(ids)
+        snap1 = srv.metrics_snapshot()
+        assert snap1["queries_total"] == 1
+        assert snap1["sources_total"] == 4
+        srv.reset_stats()                 # clears the stats() window...
+        assert srv.stats().queries == 0
+        srv.query(ids)
+        snap2 = srv.metrics_snapshot()    # ...but never the totals
+        assert snap2["queries_total"] == 2
+        assert snap2["sources_total"] == 8
+        assert snap2["warmup_kernels_total"] >= 0
+
+    def test_degraded_mode_counters_under_faults(self, lp):
+        tel, sink = _recording()
+        srv, obj = self._server(lp, telemetry=tel)
+        assert srv.warm_resolve(criteria=CRIT,
+                                obj=ExplodingObjective(obj)) is None
+        snap = srv.metrics_snapshot()
+        assert snap["resolve_attempts_total"] == 1
+        assert snap["resolve_failures_total"] == 1
+        assert snap["degraded"] == 1
+        assert snap["consecutive_failures"] == 1
+        # backoff-gated attempt counts as skipped, not a new attempt
+        assert srv.warm_resolve(criteria=CRIT) is None
+        snap = srv.metrics_snapshot()
+        assert snap["resolve_attempts_total"] == 1
+        assert snap["resolve_skipped_total"] == 1
+        # forced recovery clears the gauge, bumps the success counter
+        assert srv.warm_resolve(criteria=CRIT, force=True) is not None
+        snap = srv.metrics_snapshot()
+        assert snap["resolve_successes_total"] == 1
+        assert snap["degraded"] == 0
+        assert snap["resolve_failures_total"] == 1   # lifetime, monotonic
+        outcomes = [r["outcome"] for r in sink.records
+                    if r["type"] == "resolve"]
+        assert outcomes == ["reject", "skipped", "accept"]
+
+    def test_query_spans_emitted(self, lp):
+        tel, sink = _recording()
+        srv, _ = self._server(lp, telemetry=tel)
+        srv.query(srv.source_ids()[:2].tolist())
+        spans = [r for r in sink.records if r["type"] == "span"]
+        assert any(s["name"] == "query" and s["sources"] == 2
+                   for s in spans)
+
+
+class TestReport:
+    @pytest.fixture(scope="class")
+    def run_log(self, lp, tmp_path_factory):
+        path = str(tmp_path_factory.mktemp("runlog") / "run.jsonl")
+        tel = Telemetry.jsonl(path, stream=open(os.devnull, "w"))
+        tel.manifest(fingerprint="f" * 8, formulation="matching",
+                     algorithm="agd")
+        Maximizer(CFG).maximize(MatchingObjective(lp), criteria=CRIT,
+                                telemetry=tel)
+        tel.close()
+        return path
+
+    def test_summarize_splits_chunk_time(self, run_log):
+        from repro.launch import report
+        summary = report.summarize(load_run(run_log))
+        assert summary["chunks"], "no per-chunk rows"
+        first = summary["chunks"][min(summary["chunks"], key=int)]
+        assert "execute" in first and "compile" in first
+        assert all(v >= 0 for v in summary["span_totals"].values())
+        assert summary["trajectory"]["checks"] > 0
+
+    def test_render_and_cli(self, run_log, capsys):
+        from repro.launch import report
+        text = report.render(report.summarize(load_run(run_log)))
+        assert "per-chunk wall-clock split" in text
+        assert "execute" in text
+        assert report.main([run_log]) == 0
+        assert report.main([run_log, "--json"]) == 0
+        out = capsys.readouterr().out
+        payload = json.loads(out[out.index('{'):])
+        assert payload["manifest"]["algorithm"] == "agd"
+
+    def test_cli_rejects_missing_manifest(self, tmp_path, capsys):
+        from repro.launch import report
+        path = str(tmp_path / "nomanifest.jsonl")
+        tel = Telemetry.jsonl(path)
+        tel.event("event", note="no manifest here")
+        tel.close()
+        assert report.main([path]) == 1
+        assert "no manifest" in capsys.readouterr().err
+
+    def test_cli_rejects_schema_violation(self, tmp_path):
+        from repro.launch import report
+        path = str(tmp_path / "bad.jsonl")
+        with open(path, "w") as f:
+            f.write('{"type": "span", "t": 0.0}\n')
+        assert report.main([path]) == 1
+
+
+class TestNoBarePrint:
+    def test_core_and_primal_are_print_free(self):
+        """Operator output must go through the telemetry logger; a bare
+        print() in the solver or server would bypass the run log (and
+        corrupt --json stdout)."""
+        root = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src", "repro")
+        offenders = []
+        pat = re.compile(r"(?<![\w.])print\(")
+        for sub in ("core", "primal"):
+            for dirpath, _, files in os.walk(os.path.join(root, sub)):
+                for fn in files:
+                    if not fn.endswith(".py"):
+                        continue
+                    path = os.path.join(dirpath, fn)
+                    for ln, line in enumerate(open(path), start=1):
+                        if pat.search(line.split("#")[0]):
+                            offenders.append(f"{path}:{ln}")
+        assert not offenders, f"bare print() found: {offenders}"
