@@ -72,6 +72,17 @@ solved instance: streaming-extraction throughput in sources/sec (compile
 excluded via a warm-up pass) and microbatch query latency / sources-per-
 second through the λ-resident AllocationServer, plus the certificate the
 serve path is gated on (gap_rel, feasible).
+
+`run_load` is the served-traffic row (DESIGN.md §12): a closed-loop load
+test through the traffic-hardened ServerFrontend.  Phase 1 measures
+single-client sustained qps (the coalescing layer's per-request round
+trip); phase 2 drives 4 concurrent clients at the same deadline while a
+`warm_resolve` lands mid-run, then drains.  The row reports sustained
+qps at concurrency (must reach >= 2x the single-client rate — batches
+coalesce across clients), p50/p99 latency of admitted queries (p99
+bounded by the deadline, by classification), shed/timeout rates, and
+that every request was classified with zero ERRORs — the function
+raises on any unclassified failure rather than record a dishonest row.
 """
 from __future__ import annotations
 
@@ -524,4 +535,132 @@ def run_serve(quick: bool = False):
             "certificate_gap_rel": cert.gap_rel,
             "certificate_feasible": cert.feasible,
             "certificate_valid": cert.valid,
+        }}]
+
+
+def run_load(quick: bool = False):
+    """Closed-loop load test through the ServerFrontend (module doc)."""
+    import threading
+
+    import numpy as np
+    from repro import primal as primal_sub
+    from repro.primal import FrontendConfig, RequestStatus, ServerFrontend
+
+    I = 2_000 if quick else 10_000
+    clients = 4
+    phase_s = 2.0 if quick else 6.0
+    spec, lp_host = bench_instance(I)
+    lp = jax.tree.map(jnp.asarray, lp_host)
+    lp, _ = precondition(lp, row_norm=True)
+    cfg = SolveConfig(iterations=4000, gamma=0.01, max_step=1e-1,
+                      initial_step=1e-5)
+    crit = StoppingCriteria(tol_rel_dual=1e-6, check_every=25,
+                            max_seconds=60.0 if quick else 300.0)
+    obj = MatchingObjective(lp, proj_kind="boxcut", proj_iters=20,
+                            ax_mode="aligned")
+    res = Maximizer(cfg).maximize(obj, criteria=crit)
+    jax.block_until_ready(res.lam)
+    gamma = jnp.float32(cfg.gamma)
+    srv = primal_sub.AllocationServer(obj, res.lam, gamma, config=cfg,
+                                      max_batch=64)
+    srv.warmup()
+    ids_pool = srv.source_ids()
+    batch = 8
+    rng = np.random.default_rng(0)
+    per_query = None
+    t0 = time.perf_counter()
+    for _ in range(30):   # raw device round trip, for the deadline scale
+        srv.query(rng.choice(ids_pool, size=batch, replace=False).tolist())
+    per_query = (time.perf_counter() - t0) / 30
+    fe_cfg = FrontendConfig(max_queue=64, max_batch=64)
+    deadline = max(30.0 * per_query + fe_cfg.max_wait_s, 0.05)
+
+    def drive(n_clients, frontend, mid_run=None):
+        results = [[] for _ in range(n_clients)]
+        failures = []
+
+        def client(k):
+            rng_k = np.random.default_rng(100 + k)
+            end = time.monotonic() + phase_s
+            try:
+                while time.monotonic() < end:
+                    ids = rng_k.choice(ids_pool, size=batch,
+                                       replace=False).tolist()
+                    results[k].append(frontend.query(
+                        ids, deadline_s=deadline, timeout=120.0))
+            except Exception as e:
+                failures.append(repr(e))
+
+        threads = [threading.Thread(target=client, args=(k,))
+                   for k in range(n_clients)]
+        t_run = time.perf_counter()
+        for t in threads:
+            t.start()
+        if mid_run is not None:
+            time.sleep(phase_s / 3.0)
+            mid_run()
+        for t in threads:
+            t.join(timeout=phase_s + 300.0)
+        wall = time.perf_counter() - t_run
+        if failures or any(t.is_alive() for t in threads):
+            raise RuntimeError(f"load-test client failed: {failures}")
+        return [r for rs in results for r in rs], wall
+
+    # phase 1: single-client sustained rate through the same frontend path
+    fe1 = ServerFrontend(srv, fe_cfg)
+    flat1, wall1 = drive(1, fe1)
+    fe1.drain()
+    qps_single = len(flat1) / wall1
+
+    # phase 2: concurrency + a warm re-solve landing mid-run
+    fe = ServerFrontend(srv, fe_cfg)
+    refresh_launched = []
+    flat, wall = drive(
+        clients, fe,
+        mid_run=lambda: refresh_launched.append(
+            fe.refresh(criteria=crit, force=True)))
+    refresh_status, res_w = fe.wait_refresh(timeout=600.0)
+    snap = fe.drain()
+
+    errors = [r for r in flat if r.status is RequestStatus.ERROR]
+    if errors:
+        raise RuntimeError(
+            f"{len(errors)} unclassified failures under load "
+            f"(first: {errors[0].reason!r})")
+    classified = (snap["ok_total"] + snap["shed_total"]
+                  + snap["timeout_total"] + snap["error_total"])
+    if classified != snap["submitted_total"]:
+        raise RuntimeError("drain left unanswered requests")
+    ok = [r for r in flat if r.status is RequestStatus.OK]
+    if not ok:
+        raise RuntimeError("no request completed OK under load")
+    lat = np.asarray([r.latency_s for r in ok])
+    qps = len(flat) / wall
+    return [{
+        "name": "perf_lp/serve_load",
+        "us_per_call": float(lat.mean() * 1e6) if lat.size else 0.0,
+        "derived": {
+            "instance": f"I{I}_J1000",
+            "clients": clients,
+            "phase_seconds": phase_s,
+            "deadline_ms": deadline * 1e3,
+            "qps_single_client": qps_single,
+            "qps_concurrent": qps,
+            "concurrency_speedup": qps / max(qps_single, 1e-9),
+            "requests": len(flat),
+            "ok": len(ok),
+            "shed": int(snap["shed_total"]),
+            "timeout": int(snap["timeout_total"]),
+            "errors": 0,
+            "shed_rate": snap["shed_total"] / max(len(flat), 1),
+            "ok_p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "ok_p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "p99_within_deadline": bool(
+                np.percentile(lat, 99) <= deadline + 0.005),
+            "batches": int(snap["batches_total"]),
+            "refresh_launched": bool(refresh_launched
+                                     and refresh_launched[0]),
+            "refresh_status": refresh_status,
+            "refresh_converged": bool(res_w is not None
+                                      and res_w.converged),
         }}]

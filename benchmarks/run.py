@@ -30,6 +30,12 @@ rest of the artifact; ``--fresh`` replaces the file wholesale).
   perf_lp_serve  primal serving (DESIGN.md §8): streaming-extraction
            throughput (sources/sec) + λ-resident microbatch query
            latency, gated on a valid duality-gap certificate
+  perf_lp_load  served traffic (DESIGN.md §12): closed-loop load test
+           through the ServerFrontend — 4 concurrent clients vs a
+           single-client baseline (coalescing must scale qps >= 2x),
+           p50/p99 of admitted queries vs the deadline, shed/timeout
+           rates, a warm_resolve landing mid-run; raises instead of
+           recording a row if any request goes unclassified
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 """
@@ -138,6 +144,7 @@ def _register():
         "perf_lp_tol": lambda q: perf_lp.run_tolerance(q),
         "perf_lp_bytes": lambda q: perf_lp.run_bytes(q),
         "perf_lp_serve": lambda q: perf_lp.run_serve(q),
+        "perf_lp_load": lambda q: perf_lp.run_load(q),
     })
 
 

@@ -18,9 +18,20 @@ count/value caps):
 
 Exit code is non-zero on an invalid certificate, a serving mismatch, or a
 non-converged solve — this file doubles as the CI serving smoke (--quick).
+
+With `--load-test` the tour is replaced by the overload drill
+(DESIGN.md §12): N concurrent clients drive the traffic-hardened
+`ServerFrontend` at ~2× the measured single-thread capacity while a warm
+re-solve lands mid-run, then the frontend drains.  Exit code is non-zero
+if the server crashes (any ERROR response or dead client), if any
+request past its deadline escapes TIMEOUT/SHED classification, if an OK
+response exceeded its deadline, if the background refresh fails, or if
+the drain leaves an unanswered request — this is the CI overload smoke
+(`--load-test --quick`).
 """
 import argparse
 import sys
+import threading
 import time
 
 import numpy as np
@@ -31,11 +42,149 @@ from repro.core import (InstanceSpec, Maximizer, SolveConfig,
                         StoppingCriteria, generate)
 from repro import formulations
 from repro import primal
+from repro.primal import FrontendConfig, RequestStatus, ServerFrontend
 
 
 def fail(msg):
     print(f"FAIL: {msg}")
     sys.exit(1)
+
+
+def _solve(args, I, J):
+    spec = InstanceSpec(num_sources=I, num_destinations=J,
+                        avg_nnz_per_row=10, seed=11, num_families=2)
+    lp = jax.tree.map(jnp.asarray, generate(spec))
+    cfg = SolveConfig(iterations=2000 if args.quick else 4000, gamma=0.05,
+                      gamma_init=0.8, gamma_decay_every=25,
+                      max_step=20.0, initial_step=1e-3)
+    crit = StoppingCriteria(tol_rel_dual=1e-5 if args.quick else 1e-6,
+                            check_every=50)
+    obj = formulations.make_objective("multi_budget", lp,
+                                      ax_mode="aligned", row_norm=True)
+    t0 = time.perf_counter()
+    res = Maximizer(cfg).maximize(obj, criteria=crit)
+    jax.block_until_ready(res.lam)
+    print(f"instance: {I} sources x {J} destinations x {lp.m} families; "
+          f"solved in {res.iterations_run} iters / "
+          f"{time.perf_counter() - t0:.1f}s ({res.stop_reason.value})")
+    if not res.converged:
+        fail("solve did not converge")
+    return lp, obj, res, cfg, crit
+
+
+def load_test(args):
+    """The overload drill: concurrent clients past capacity, a refresh
+    mid-run, a graceful drain — every request classified, zero stranded."""
+    I = args.sources or (600 if args.quick else 3_000)
+    J = args.destinations or (30 if args.quick else 120)
+    duration = args.duration or (3.0 if args.quick else 10.0)
+    clients = args.clients
+    lp, obj, res, cfg, crit = _solve(args, I, J)
+    gamma = jnp.float32(cfg.gamma)
+    cert = primal.certify(obj, res.lam, gamma)
+
+    srv = primal.AllocationServer(obj, res.lam, gamma, config=cfg,
+                                  max_batch=64)
+    srv.warmup()
+    ids_pool = srv.source_ids()
+    batch = min(8, len(ids_pool))
+    rng = np.random.default_rng(0)
+
+    # measure single-thread capacity, then offer 2x that across clients
+    probes = 30
+    t0 = time.perf_counter()
+    for _ in range(probes):
+        srv.query(rng.choice(ids_pool, size=batch,
+                             replace=False).tolist())
+    per_query = (time.perf_counter() - t0) / probes
+    qps_single = 1.0 / per_query
+    deadline = max(20.0 * per_query, 0.05)
+    offered = 2.0 * qps_single
+    interval = clients / offered
+    print(f"capacity ~{qps_single:.0f} q/s single-thread; offering "
+          f"{offered:.0f} q/s across {clients} clients, "
+          f"deadline {deadline * 1e3:.0f} ms")
+
+    fe = ServerFrontend(srv, FrontendConfig(
+        max_queue=64, max_batch=64, default_deadline_s=deadline))
+    results = [[] for _ in range(clients)]
+    crashed = []
+
+    def client(k):
+        rng_k = np.random.default_rng(100 + k)
+        end = time.monotonic() + duration
+        next_t = time.monotonic()
+        try:
+            while time.monotonic() < end:
+                ids = rng_k.choice(ids_pool, size=batch,
+                                   replace=False).tolist()
+                resp = fe.query(ids, deadline_s=deadline, timeout=60.0)
+                results[k].append(resp)
+                next_t += interval
+                pause = next_t - time.monotonic()
+                if pause > 0:
+                    time.sleep(pause)
+        except Exception as e:   # a client dying IS a server crash here
+            crashed.append((k, repr(e)))
+
+    threads = [threading.Thread(target=client, args=(k,))
+               for k in range(clients)]
+    t_run = time.perf_counter()
+    for t in threads:
+        t.start()
+    # land a warm re-solve in the middle of the storm: the refresh must
+    # complete without stalling the query path
+    time.sleep(duration / 3.0)
+    tight = formulations.make_objective(
+        "multi_budget", lp,
+        params=dict(count_cap=0.9 * cert.slacks["count_cap"].used,
+                    value_cap=cert.slacks["value_cap"].limit),
+        ax_mode="aligned", row_norm=True)
+    if not fe.refresh(criteria=crit, obj=tight):
+        fail("refresh refused with no resolve in flight")
+    for t in threads:
+        t.join(timeout=duration + 120.0)
+    if any(t.is_alive() for t in threads):
+        fail("a client thread hung — unanswered request")
+    wall = time.perf_counter() - t_run
+    refresh_status, res_w = fe.wait_refresh(timeout=300.0)
+    snap = fe.drain()
+
+    if crashed:
+        fail(f"client crashed: {crashed}")
+    flat = [r for rs in results for r in rs]
+    errors = [r for r in flat if r.status is RequestStatus.ERROR]
+    if errors:
+        fail(f"{len(errors)} ERROR responses (first: "
+             f"{errors[0].reason!r}) — the server must shed or time out "
+             f"under overload, never fail")
+    ok = [r for r in flat if r.status is RequestStatus.OK]
+    late_ok = [r for r in ok if r.latency_s > deadline + 0.005]
+    if late_ok:
+        fail(f"{len(late_ok)} OK responses exceeded the deadline "
+             f"without TIMEOUT classification")
+    if not ok:
+        fail("no request completed OK under overload")
+    classified = (snap["ok_total"] + snap["shed_total"]
+                  + snap["timeout_total"] + snap["error_total"])
+    if classified != snap["submitted_total"]:
+        fail(f"drain left unanswered requests: {snap['submitted_total']}"
+             f" submitted, {classified} classified")
+    if refresh_status != "accepted" or res_w is None or not res_w.converged:
+        fail(f"mid-run warm refresh did not complete ({refresh_status})")
+
+    lat = np.asarray([r.latency_s for r in ok])
+    n = len(flat)
+    print(f"\nload test: {n} requests from {clients} clients in "
+          f"{wall:.1f}s ({n / wall:.0f} q/s offered)")
+    print(f"  OK {len(ok)} ({len(ok) / n:.0%})  p50 "
+          f"{np.percentile(lat, 50) * 1e3:.1f} ms  p99 "
+          f"{np.percentile(lat, 99) * 1e3:.1f} ms (deadline "
+          f"{deadline * 1e3:.0f} ms)")
+    print(f"  shed {snap['shed_total']:.0f}  timeout "
+          f"{snap['timeout_total']:.0f}  batches {snap['batches_total']:.0f}"
+          f"  — every request classified, refresh landed mid-run")
+    print("\noverload drill OK")
 
 
 def main():
@@ -45,7 +194,17 @@ def main():
     ap.add_argument("--sources", type=int, default=None)
     ap.add_argument("--destinations", type=int, default=None)
     ap.add_argument("--queries", type=int, default=None)
+    ap.add_argument("--load-test", action="store_true",
+                    help="overload drill: concurrent clients past "
+                         "capacity + mid-run refresh + drain")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--duration", type=float, default=None,
+                    help="load-test duration in seconds")
     args = ap.parse_args()
+
+    if args.load_test:
+        load_test(args)
+        return
 
     I = args.sources or (600 if args.quick else 5_000)
     J = args.destinations or (30 if args.quick else 200)

@@ -38,9 +38,20 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep_last: int = 3):
+    """Retention: after each save, all but the newest `keep_last`
+    committed steps are pruned (`max_to_keep` is an accepted alias for
+    the same knob — it wins when both are given).  A step a resume just
+    loaded is protected from pruning for this manager's lifetime: the
+    known-good restore point must survive even when post-resume saves
+    would otherwise rotate it out (the crash-loop guard — if the run
+    keeps dying after resume, the operator can always fall back to the
+    checkpoint that last restored cleanly)."""
+
+    def __init__(self, directory: str, keep_last: int = 3,
+                 max_to_keep: Optional[int] = None):
         self.dir = directory
-        self.keep_last = keep_last
+        self.keep_last = keep_last if max_to_keep is None else int(max_to_keep)
+        self._protected_steps: set = set()
         os.makedirs(directory, exist_ok=True)
         self._sweep_litter()
 
@@ -90,7 +101,10 @@ class CheckpointManager:
 
     def _prune(self):
         steps = self.all_steps()
-        for s in steps[:-self.keep_last]:
+        keep = set(steps[-self.keep_last:]) if self.keep_last > 0 else set()
+        for s in steps:
+            if s in keep or s in self._protected_steps:
+                continue
             shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
                           ignore_errors=True)
 
@@ -143,6 +157,9 @@ class CheckpointManager:
                 f"checkpoint step {step} at {path} holds {len(data)} "
                 f"arrays but its metadata promises {meta['n_arrays']} "
                 f"(truncated write?)")
+        # this step just restored cleanly — exempt it from retention
+        # pruning so the known-good fallback survives post-resume saves
+        self._protected_steps.add(step)
         return data, meta
 
     def restore_flat(self, step: int) -> Tuple[Dict[str, np.ndarray], Dict]:

@@ -24,6 +24,17 @@ Event taxonomy:
   checkpoint   a checkpoint flush accepted by the hook.
   resolve      an AllocationServer warm_resolve outcome
                (accept / reject / skipped).
+  shed         the serving frontend refused admission to a request
+               (queue full / estimated wait exceeds the deadline /
+               draining) — the request got an immediate SHED response
+               instead of unbounded queueing (DESIGN.md §12).
+  timeout      an admitted request missed its deadline (expired in the
+               queue or completed late) and was classified TIMEOUT.
+  queue_depth  frontend queue depth at a batch flush (dispatch-loop
+               backpressure signal; also mirrored as a gauge).
+  drain        the frontend's graceful-drain summary: admissions stopped,
+               in-flight batches flushed, `pending` requests left (0 on
+               a clean drain).
   log          one leveled console-logger line.
   counters     the aggregated counters/gauges, flushed by close().
   profile      jax.profiler start/stop markers (obs/profile.py).
@@ -50,6 +61,10 @@ EVENT_FIELDS: Dict[str, frozenset] = {
     "health": frozenset({"it", "status", "action", "retries"}),
     "checkpoint": frozenset({"it", "final"}),
     "resolve": frozenset({"outcome"}),
+    "shed": frozenset({"reason"}),
+    "timeout": frozenset({"waited_s", "deadline_s"}),
+    "queue_depth": frozenset({"depth"}),
+    "drain": frozenset({"pending"}),
     "log": frozenset({"level", "msg"}),
     "counters": frozenset({"counters", "gauges"}),
     "profile": frozenset({"action"}),

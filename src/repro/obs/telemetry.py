@@ -31,6 +31,15 @@ All records are JSON-sanitized at emission: non-finite floats become
 null (a NaN dual objective from a diverging run must not produce an
 invalid JSON line), numpy/jax scalars become Python numbers, and unknown
 objects are stringified.
+
+Thread safety (DESIGN.md §12): one Telemetry may be shared by the serving
+frontend's dispatch thread, a background warm_resolve thread, and any
+number of client threads.  Record emission, counters/gauges, and close()
+are serialized by an internal lock (a JsonlSink additionally locks its
+own write+flush, so even a sink shared across recorders never interleaves
+half-written lines), and the span stack is *thread-local*: concurrent
+spans on different threads each keep a well-formed nesting path instead
+of splicing into each other's.
 """
 from __future__ import annotations
 
@@ -38,6 +47,7 @@ import json
 import math
 import os
 import sys
+import threading
 import time
 import uuid
 from typing import Any, Dict, List, Optional, TextIO
@@ -74,24 +84,30 @@ def _json_safe(v: Any) -> Any:
 
 
 class JsonlSink:
-    """Append-only JSONL file sink; one flushed line per record."""
+    """Append-only JSONL file sink; one flushed line per record.
+
+    Thread-safe: the serialize+write+flush of each record runs under a
+    lock, so two threads can never interleave half-written lines."""
 
     def __init__(self, path: str):
         self.path = path
         parent = os.path.dirname(os.path.abspath(path))
         os.makedirs(parent, exist_ok=True)
+        self._lock = threading.Lock()
         self._f: Optional[TextIO] = open(path, "a")
 
     def write(self, record: Dict[str, Any]) -> None:
-        if self._f is None:
-            return
-        self._f.write(json.dumps(record, separators=(",", ":")) + "\n")
-        self._f.flush()
+        with self._lock:
+            if self._f is None:
+                return
+            self._f.write(json.dumps(record, separators=(",", ":")) + "\n")
+            self._f.flush()
 
     def close(self) -> None:
-        if self._f is not None:
-            self._f.close()
-            self._f = None
+        with self._lock:
+            if self._f is not None:
+                self._f.close()
+                self._f = None
 
 
 class ListSink:
@@ -99,9 +115,11 @@ class ListSink:
 
     def __init__(self):
         self.records: List[Dict[str, Any]] = []
+        self._lock = threading.Lock()
 
     def write(self, record: Dict[str, Any]) -> None:
-        self.records.append(record)
+        with self._lock:
+            self.records.append(record)
 
     def close(self) -> None:
         pass
@@ -162,7 +180,8 @@ class Telemetry:
         self._level = LEVELS.get(level, LEVELS["info"])
         self._stream = stream if stream is not None else sys.stdout
         self._t0 = time.perf_counter()
-        self._stack: List[str] = []
+        self._lock = threading.RLock()
+        self._tls = threading.local()
         self._counters: Dict[str, int] = {}
         self._gauges: Dict[str, float] = {}
         self._closed = False
@@ -195,11 +214,23 @@ class Telemetry:
         return self._manifest["run_id"]
 
     # -- record plumbing -------------------------------------------------
+    @property
+    def _stack(self) -> List[str]:
+        """Per-thread span stack: concurrent spans on different threads
+        each see their own nesting path (a shared list would splice one
+        thread's span names into another's slash path)."""
+        stack = getattr(self._tls, "stack", None)
+        if stack is None:
+            stack = self._tls.stack = []
+        return stack
+
     def _emit(self, record: Dict[str, Any]) -> None:
-        if self._sink is None or self._closed:
-            return
         record.setdefault("t", time.perf_counter() - self._t0)
-        self._sink.write(_json_safe(record))
+        safe = _json_safe(record)
+        with self._lock:
+            if self._sink is None or self._closed:
+                return
+            self._sink.write(safe)
 
     def event(self, etype: str, **fields) -> None:
         """Emit one typed record to the sink (obs/schema.py names the
@@ -215,8 +246,10 @@ class Telemetry:
         byte census.  Re-calling merges, so the latest manifest record in
         a log is always the most complete one.
         """
-        self._manifest.update(fields)
-        self._emit({"type": "manifest", **self._manifest})
+        with self._lock:
+            self._manifest.update(fields)
+            merged = dict(self._manifest)
+        self._emit({"type": "manifest", **merged})
 
     def span(self, name: str, **fields):
         """`with tel.span("compile"): ...` — nested spans join their names
@@ -225,17 +258,21 @@ class Telemetry:
 
     # -- metrics ----------------------------------------------------------
     def counter(self, name: str, n: int = 1) -> int:
-        """Bump a monotonic counter; returns the new value."""
-        v = self._counters.get(name, 0) + int(n)
-        self._counters[name] = v
+        """Bump a monotonic counter; returns the new value.  Thread-safe:
+        the read-modify-write is atomic under the recorder's lock."""
+        with self._lock:
+            v = self._counters.get(name, 0) + int(n)
+            self._counters[name] = v
         return v
 
     def gauge(self, name: str, value: float) -> None:
-        self._gauges[name] = float(value)
+        with self._lock:
+            self._gauges[name] = float(value)
 
     def metrics_snapshot(self) -> Dict[str, Any]:
-        return {"counters": dict(self._counters),
-                "gauges": dict(self._gauges)}
+        with self._lock:
+            return {"counters": dict(self._counters),
+                    "gauges": dict(self._gauges)}
 
     # -- leveled console logging -----------------------------------------
     def log(self, level: str, msg: str) -> None:
@@ -261,14 +298,17 @@ class Telemetry:
     # -- lifecycle ---------------------------------------------------------
     def close(self) -> None:
         """Flush the aggregated metrics as one `counters` record and close
-        the sink.  Idempotent."""
-        if self._closed:
-            return
-        self._emit({"type": "counters", "counters": dict(self._counters),
-                    "gauges": dict(self._gauges)})
-        self._closed = True
-        if self._sink is not None:
-            self._sink.close()
+        the sink.  Idempotent (and thread-safe: the RLock lets the nested
+        `_emit` re-enter while excluding concurrent closers)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._emit({"type": "counters",
+                        "counters": dict(self._counters),
+                        "gauges": dict(self._gauges)})
+            self._closed = True
+            if self._sink is not None:
+                self._sink.close()
 
 
 class _DisabledTelemetry(Telemetry):
@@ -282,6 +322,7 @@ class _DisabledTelemetry(Telemetry):
         self._counters = {}
         self._gauges = {}
         self._manifest = {"run_id": "disabled"}
+        self._lock = threading.RLock()  # metrics_snapshot is inherited
 
     def _emit(self, record):
         pass

@@ -12,6 +12,9 @@ serves traffic from:
              feasible-witness value, per-family slack reports
   server     the λ-resident microbatch allocation query engine with a
              warm-resolve hook for instance updates
+  frontend   the traffic-hardening layer over the server: bounded-queue
+             admission control, deadline-aware microbatch coalescing,
+             load shedding, background refresh, graceful drain
 
     from repro.primal import certify, AllocationServer, extract_primal
     cert = certify(obj, res.lam, cfg.gamma)       # checkable, not a stop reason
@@ -26,6 +29,8 @@ from .certify import (Certificate, FamilySlack, certify, family_slacks,
                       format_certificate, global_row_caps, primal_value,
                       repair_witness, x_sq_bound)
 from .server import AllocationServer, DecisionRow, QueryStats
+from .frontend import (FrontendConfig, FrontendStats, RequestStatus,
+                       Response, ServerFrontend, Ticket)
 
 __all__ = [
     "PrimalChunk", "extract_primal", "iter_primal_chunks", "primal_rows_fn",
@@ -36,4 +41,6 @@ __all__ = [
     "format_certificate", "global_row_caps", "primal_value",
     "repair_witness", "x_sq_bound",
     "AllocationServer", "DecisionRow", "QueryStats",
+    "FrontendConfig", "FrontendStats", "RequestStatus", "Response",
+    "ServerFrontend", "Ticket",
 ]

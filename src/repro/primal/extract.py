@@ -161,14 +161,56 @@ def read_shards(paths: Sequence[str], num_slabs: int,
 
     `key` selects which decision array to read ("x" or "x_round").
     Slabs with no shards come back as None (partial exports are legal).
+
+    Defensive against a damaged export (DESIGN.md §12 hardening): a
+    missing file, an unreadable/truncated `.npz`, a shard without the
+    requested key or the `slab_index`/`start` metadata, an out-of-range
+    slab index, or a width mismatch between shards of the same slab all
+    raise ValueError NAMING THE OFFENDING SHARD PATH — never a bare
+    KeyError/zipfile error from deep inside numpy, and never a silently
+    mis-assembled result.
     """
-    parts = {}
+    parts: dict = {}
     for path in paths:
-        with np.load(path) as z:
-            si, start = int(z["slab_index"]), int(z["start"])
-            parts.setdefault(si, []).append((start, z[key]))
+        if not os.path.exists(path):
+            raise ValueError(f"shard missing: {path}")
+        try:
+            z = np.load(path)
+        except Exception as e:
+            raise ValueError(
+                f"shard unreadable (corrupt or truncated): {path} "
+                f"({type(e).__name__}: {e})") from e
+        with z:
+            for field in ("slab_index", "start", key):
+                if field not in z.files:
+                    raise ValueError(
+                        f"shard missing array {field!r}: {path} "
+                        f"(has {sorted(z.files)})")
+            try:
+                si, start = int(z["slab_index"]), int(z["start"])
+                arr = z[key]
+            except Exception as e:   # a torn member inside a valid zip
+                raise ValueError(
+                    f"shard unreadable (corrupt or truncated): {path} "
+                    f"({type(e).__name__}: {e})") from e
+            if not 0 <= si < num_slabs:
+                raise ValueError(
+                    f"shard slab_index {si} out of range "
+                    f"[0, {num_slabs}): {path}")
+            if arr.ndim != 2:
+                raise ValueError(
+                    f"shard {key!r} has shape {arr.shape}, expected "
+                    f"(rows, w): {path}")
+            parts.setdefault(si, []).append((start, arr, path))
     out: List[Optional[np.ndarray]] = [None] * num_slabs
     for si, chunks in parts.items():
         chunks.sort(key=lambda t: t[0])
-        out[si] = np.concatenate([c for _, c in chunks], axis=0)
+        w = chunks[0][1].shape[1]
+        for start, arr, path in chunks[1:]:
+            if arr.shape[1] != w:
+                raise ValueError(
+                    f"shard width mismatch in slab {si}: {path} has "
+                    f"w={arr.shape[1]}, expected w={w} (from "
+                    f"{chunks[0][2]})")
+        out[si] = np.concatenate([c for _, c, _ in chunks], axis=0)
     return out

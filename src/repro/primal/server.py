@@ -29,12 +29,27 @@ tests/test_primal_serving.py and the examples/allocation_server.py smoke.
 server re-solves *from its resident λ* with γ-continuation disabled (the
 established warm-start rule: re-running the schedule from gamma_init
 would march λ away from the loaded optimum), then swaps the new λ in.
+
+Concurrency contract (DESIGN.md §12): everything a query reads — the
+objective, λ, and the routing tables derived from the objective — lives
+in ONE immutable `_Serving` snapshot tuple, and a query binds that tuple
+exactly once at entry.  `warm_resolve`/`update_duals` publish a fully
+built replacement snapshot with a single reference assignment (atomic
+under the GIL), so a query racing a swap sees either the old pair or the
+new pair, never a torn mix of the two (tested in
+tests/test_frontend.py::TestResolveRace).  Only one resolve runs at a
+time (`_resolve_lock`; a second concurrent call is classified skipped),
+and the latency window / monotonic counters are lock-protected so
+concurrent callers don't lose increments.  The single-caller query path
+is unchanged: same routing, same padding, same kernels, bitwise-equal
+decisions (tests/test_primal_serving.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Dict, NamedTuple, Optional, Sequence
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -82,6 +97,34 @@ def _pad_pow2(n: int, floor: int = 8) -> int:
     return max(floor, 1 << (max(n - 1, 1)).bit_length())
 
 
+class _Serving(NamedTuple):
+    """One coherent serving state: the objective, its duals, and the
+    routing tables derived from the objective.  Immutable — a swap builds
+    a complete replacement and publishes it with one assignment, so a
+    concurrent query never pairs a new λ with old routes (or vice versa).
+    """
+
+    obj: Any
+    lam: Any
+    route: Dict[int, Tuple[int, int]]
+    dest: List   # per-slab (n, w) dest ids, host numpy
+    mask: List   # per-slab (n, w) real-edge masks, host numpy
+
+
+def _build_serving(obj, lam) -> _Serving:
+    route: Dict[int, Tuple[int, int]] = {}
+    dest, mask = [], []
+    for si, slab in enumerate(obj.lp.slabs):
+        ids = np.asarray(slab.source_ids)
+        dest.append(np.asarray(slab.dest_idx))
+        mask.append(np.asarray(slab.mask))
+        for row, sid in enumerate(ids.tolist()):
+            if sid >= 0:        # padded rows carry source_id −1
+                route[int(sid)] = (si, row)
+    return _Serving(obj=obj, lam=jnp.asarray(lam), route=route,
+                    dest=dest, mask=mask)
+
+
 class AllocationServer:
     """Microbatch allocation server over a solved objective (module doc).
 
@@ -98,13 +141,14 @@ class AllocationServer:
                  max_batch: int = 256, retry_backoff_s: float = 1.0,
                  max_backoff_s: float = 60.0,
                  telemetry: Optional[Telemetry] = None):
-        self.obj = obj
-        self.lam = jnp.asarray(lam)
+        self._serving = _build_serving(obj, lam)
         self.gamma = jnp.asarray(gamma, jnp.float32)
         self.config = config
         self.max_batch = int(max_batch)
         self.telemetry = (telemetry if telemetry is not None
                           else Telemetry.disabled())
+        self._stats_lock = threading.Lock()
+        self._resolve_lock = threading.Lock()
         self._latencies = []
         self._sources_served = 0
         # lifetime-monotonic counters (metrics_snapshot): unlike the
@@ -125,24 +169,28 @@ class AllocationServer:
         self._last_good_update = time.monotonic()
         self._next_retry_at = 0.0
         self.last_failure_reason: Optional[str] = None
-        self._build_routes()
 
-    def _build_routes(self):
-        self._route: Dict[int, tuple] = {}
-        self._dest = []
-        self._mask = []
-        for si, slab in enumerate(self.obj.lp.slabs):
-            ids = np.asarray(slab.source_ids)
-            self._dest.append(np.asarray(slab.dest_idx))
-            self._mask.append(np.asarray(slab.mask))
-            for row, sid in enumerate(ids.tolist()):
-                if sid >= 0:        # padded rows carry source_id −1
-                    self._route[int(sid)] = (si, row)
+    # the served pair is read-only through these properties: all writes go
+    # through a whole-snapshot replacement (module doc)
+    @property
+    def obj(self):
+        return self._serving.obj
+
+    @property
+    def lam(self):
+        return self._serving.lam
 
     def source_ids(self) -> np.ndarray:
         """All servable source ids, sorted — the public routing surface
-        (callers must not depend on the private `_route` layout)."""
-        return np.asarray(sorted(self._route))
+        (callers must not depend on the private routing layout)."""
+        return np.asarray(sorted(self._serving.route))
+
+    def unknown_sources(self, source_ids: Sequence[int]) -> List[int]:
+        """The subset of `source_ids` this server cannot route — the
+        admission-time 404 check of the serving frontend (which must
+        classify unknown ids ERROR instead of letting a batch blow up)."""
+        route = self._serving.route
+        return [int(s) for s in source_ids if int(s) not in route]
 
     def warmup(self):
         """Compile every (slab, microbatch-length) query kernel up front.
@@ -154,19 +202,26 @@ class AllocationServer:
         set is small and enumerable.  Returns the number of kernels
         compiled.
         """
+        return self._warmup_serving(self._serving)
+
+    def _warmup_serving(self, srv: _Serving) -> int:
+        """Warm every query kernel of one serving snapshot (used by both
+        the public `warmup()` and the pre-publish warm in a resolve that
+        swaps objectives)."""
         compiled = 0
-        for si, slab in enumerate(self.obj.lp.slabs):
-            fn = primal_rows_fn(self.obj, si)
+        for si, slab in enumerate(srv.obj.lp.slabs):
+            fn = primal_rows_fn(srv.obj, si)
             length = _pad_pow2(1)
             cap = min(_pad_pow2(self.max_batch), _pad_pow2(slab.n))
             while True:
                 jax.block_until_ready(
-                    fn(self.lam, self.gamma, jnp.zeros(length, jnp.int32)))
+                    fn(srv.lam, self.gamma, jnp.zeros(length, jnp.int32)))
                 compiled += 1
                 if length >= cap:
                     break
                 length *= 2
-        self._metrics["warmup_kernels_total"] += compiled
+        with self._stats_lock:
+            self._metrics["warmup_kernels_total"] += compiled
         return compiled
 
     def query(self, source_ids: Sequence[int]) -> Dict[int, DecisionRow]:
@@ -175,36 +230,46 @@ class AllocationServer:
         Unknown source ids raise KeyError before any device work (a
         serving 404).  Latency of the whole batch — routing, device
         compute, readback — is recorded for `stats()`.
+
+        Safe to call concurrently with `warm_resolve`/`update_duals`: the
+        serving snapshot is bound ONCE here, so every row of this query
+        is computed from one coherent (obj, λ, routes) triple even if a
+        swap lands mid-query (module doc).
         """
         t0 = time.perf_counter()
+        srv = self._serving
         with self.telemetry.span("query", sources=len(source_ids)):
             groups: Dict[int, list] = {}
             for sid in source_ids:
-                si, row = self._route[int(sid)]  # KeyError = unknown source
+                si, row = srv.route[int(sid)]  # KeyError = unknown source
                 groups.setdefault(si, []).append((int(sid), row))
             out: Dict[int, DecisionRow] = {}
             for si, pairs in groups.items():
-                fn = primal_rows_fn(self.obj, si)
+                fn = primal_rows_fn(srv.obj, si)
                 for lo in range(0, len(pairs), self.max_batch):
                     chunk = pairs[lo:lo + self.max_batch]
                     rows = np.asarray([r for _, r in chunk], np.int32)
                     padded = np.zeros(_pad_pow2(len(rows)), np.int32)
                     padded[:len(rows)] = rows
-                    x = np.asarray(fn(self.lam, self.gamma,
+                    x = np.asarray(fn(srv.lam, self.gamma,
                                       jnp.asarray(padded)))[:len(rows)]
                     for (sid, row), xr in zip(chunk, x):
                         out[sid] = DecisionRow(
                             source_id=sid, slab_index=si, row=row,
-                            dest_idx=self._dest[si][row],
-                            mask=self._mask[si][row], x=xr)
-        self._latencies.append(time.perf_counter() - t0)
-        self._sources_served += len(out)
-        self._metrics["queries_total"] += 1
-        self._metrics["sources_total"] += len(out)
+                            dest_idx=srv.dest[si][row],
+                            mask=srv.mask[si][row], x=xr)
+        dt = time.perf_counter() - t0
+        with self._stats_lock:
+            self._latencies.append(dt)
+            self._sources_served += len(out)
+            self._metrics["queries_total"] += 1
+            self._metrics["sources_total"] += len(out)
         return out
 
     def stats(self) -> QueryStats:
-        lat = np.asarray(self._latencies)
+        with self._stats_lock:
+            lat = np.asarray(self._latencies)
+            sources = self._sources_served
         health = dict(
             resolve_failures=self._resolve_failures,
             consecutive_failures=self._consec_failures,
@@ -214,16 +279,17 @@ class AllocationServer:
             return QueryStats(0, 0, 0.0, 0.0, 0.0, 0.0, **health)
         total = float(lat.sum())
         return QueryStats(
-            queries=len(lat), sources=self._sources_served,
+            queries=len(lat), sources=sources,
             mean_ms=float(lat.mean() * 1e3),
             p50_ms=float(np.percentile(lat, 50) * 1e3),
             p95_ms=float(np.percentile(lat, 95) * 1e3),
-            sources_per_s=self._sources_served / total if total else 0.0,
+            sources_per_s=sources / total if total else 0.0,
             **health)
 
     def reset_stats(self):
-        self._latencies = []
-        self._sources_served = 0
+        with self._stats_lock:
+            self._latencies = []
+            self._sources_served = 0
 
     def metrics_snapshot(self) -> Dict[str, float]:
         """Lifetime-monotonic counters plus point-in-time gauges.
@@ -234,20 +300,23 @@ class AllocationServer:
         Gauges (`degraded`, `staleness_s`, `consecutive_failures`) carry
         the current health surface of DESIGN.md §9.
         """
-        snap: Dict[str, float] = dict(self._metrics)
+        with self._stats_lock:
+            snap: Dict[str, float] = dict(self._metrics)
         snap["degraded"] = 1 if self._consec_failures > 0 else 0
         snap["consecutive_failures"] = self._consec_failures
         snap["staleness_s"] = time.monotonic() - self._last_good_update
         return snap
 
     def update_duals(self, lam):
-        """Swap in a new dual vector (e.g. replicated from a re-solve)."""
+        """Swap in a new dual vector (e.g. replicated from a re-solve).
+        Published as a whole-snapshot replacement: a concurrent query sees
+        the old λ or the new λ, never anything in between."""
         lam = jnp.asarray(lam)
         if lam.shape != tuple(self.obj.dual_shape):
             raise ValueError(
                 f"dual shape {lam.shape} != objective's "
                 f"{tuple(self.obj.dual_shape)}")
-        self.lam = lam
+        self._serving = self._serving._replace(lam=lam)
 
     def _record_failure(self, reason: str) -> None:
         """A warm_resolve failed: count it, schedule the next retry with
@@ -259,7 +328,8 @@ class AllocationServer:
                                                      - 1),
                       self.max_backoff_s)
         self._next_retry_at = time.monotonic() + backoff
-        self._metrics["resolve_failures_total"] += 1
+        with self._stats_lock:
+            self._metrics["resolve_failures_total"] += 1
         self.telemetry.event("resolve", outcome="reject", reason=reason,
                              consecutive_failures=self._consec_failures,
                              backoff_s=backoff)
@@ -291,6 +361,12 @@ class AllocationServer:
 
         A dual-shape mismatch on `obj` still raises ValueError — that is
         a caller bug (topology change), not a transient fault.
+
+        Concurrency: at most one resolve runs at a time — a second call
+        while one is in flight is classified skipped (reason
+        `in_flight`), the circuit-breaker half of DESIGN.md §12.  The
+        query path never waits on this lock; it keeps reading the
+        published snapshot throughout.
         """
         if obj is not None and (tuple(obj.dual_shape)
                                 != tuple(self.obj.dual_shape)):
@@ -298,13 +374,30 @@ class AllocationServer:
                 f"replacement objective dual shape "
                 f"{tuple(obj.dual_shape)} != served "
                 f"{tuple(self.obj.dual_shape)}")
+        if not self._resolve_lock.acquire(blocking=False):
+            with self._stats_lock:
+                self._metrics["resolve_skipped_total"] += 1
+            self.telemetry.event("resolve", outcome="skipped",
+                                 reason="in_flight")
+            return None
+        try:
+            return self._resolve_locked(criteria, obj, config,
+                                        require_certificate, force)
+        finally:
+            self._resolve_lock.release()
+
+    def _resolve_locked(self, criteria, obj, config, require_certificate,
+                        force) -> Optional[SolveResult]:
         if not force and time.monotonic() < self._next_retry_at:
-            self._metrics["resolve_skipped_total"] += 1
+            with self._stats_lock:
+                self._metrics["resolve_skipped_total"] += 1
             self.telemetry.event("resolve", outcome="skipped",
                                  reason="backoff")
             return None
-        self._metrics["resolve_attempts_total"] += 1
-        target = obj if obj is not None else self.obj
+        with self._stats_lock:
+            self._metrics["resolve_attempts_total"] += 1
+        swapped = obj is not None
+        target = obj if swapped else self.obj
         cfg = config or self.config or SolveConfig()
         cfg = dataclasses.replace(cfg, gamma_init=None,
                                   adaptive_continuation=False)
@@ -329,22 +422,24 @@ class AllocationServer:
             if not cert.valid:
                 return self._record_failure(
                     "re-solved duals failed certification")
-        # success: swap (obj, λ) atomically and clear the failure streak
-        swapped = obj is not None
-        self.obj = target
-        self.lam = jnp.asarray(res.lam)
+        # success: build the complete replacement snapshot — routes
+        # included — then publish it with ONE assignment, so a query
+        # racing this swap binds either the old or the new (obj, λ) pair
+        serving = _build_serving(target, res.lam)
+        if swapped:
+            # the query kernels are cached per objective identity; warm
+            # the new objective's kernels in THIS thread before
+            # publishing, so post-swap queries pay neither XLA compile
+            # nor a torn route table
+            self._warmup_serving(serving)
+        self._serving = serving
         self._consec_failures = 0
         self._next_retry_at = 0.0
         self._last_good_update = time.monotonic()
-        self._metrics["resolve_successes_total"] += 1
+        with self._stats_lock:
+            self._metrics["resolve_successes_total"] += 1
         self.telemetry.event("resolve", outcome="accept",
                              iterations=int(res.iterations_run),
                              stop_reason=str(res.stop_reason.name),
                              swapped_objective=swapped)
-        if swapped:
-            self._build_routes()
-            # the query kernels are cached per objective identity; re-warm
-            # off the request path so the first post-update queries don't
-            # pay XLA compile in their latency
-            self.warmup()
         return res

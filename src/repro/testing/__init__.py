@@ -3,10 +3,10 @@
 Test-only: nothing in here is imported by production code paths.
 """
 from .faults import (ChunkFaultInjector, ExplodingObjective,
-                     NaNInjectingObjective, PreemptAfter,
+                     NaNInjectingObjective, PreemptAfter, SlowObjective,
                      corrupt_checkpoint, litter_tmp)
 
 __all__ = [
     "NaNInjectingObjective", "ChunkFaultInjector", "ExplodingObjective",
-    "PreemptAfter", "corrupt_checkpoint", "litter_tmp",
+    "PreemptAfter", "SlowObjective", "corrupt_checkpoint", "litter_tmp",
 ]

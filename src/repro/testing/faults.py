@@ -19,12 +19,15 @@ Two complementary fault models, matching where real failures live:
 
 Plus the supporting cast: `PreemptAfter` (a preempt_fn that trips after
 a set number of chunk boundaries), `ExplodingObjective` (raises inside
-`calculate` — the warm_resolve exception path), and the checkpoint
-saboteurs `corrupt_checkpoint` / `litter_tmp`.
+`calculate` — the warm_resolve exception path), `SlowObjective` (stalls
+`calculate` and/or `primal_rows` by a host-side sleep — the overload
+injector the serving frontend's shed/timeout paths are tested against),
+and the checkpoint saboteurs `corrupt_checkpoint` / `litter_tmp`.
 """
 from __future__ import annotations
 
 import os
+import time
 from typing import Optional
 
 import jax
@@ -108,6 +111,58 @@ class ExplodingObjective:
 
     def calculate(self, lam, gamma):
         raise RuntimeError(self.message)
+
+
+class SlowObjective:
+    """Stalls the objective by a fixed host-side sleep — the overload /
+    slow-dependency injector for the serving frontend (DESIGN.md §12).
+
+    The sleep runs through `jax.pure_callback` *threaded into the value
+    path* (the callback returns a zero that is added to the result), so
+    it cannot be constant-folded or dead-code-eliminated: it executes at
+    kernel run time, under jit and scan, every evaluation.  Values are
+    bitwise unchanged — only latency is injected.
+
+    slow_calculate    stall each `calculate` (a slow warm_resolve: the
+                      frontend's refresh must not stall queries);
+    slow_primal_rows  stall each `primal_rows` batch (a slow query
+                      kernel: drives queue growth → shedding, and
+                      deadline misses → TIMEOUT classification).
+    """
+
+    def __init__(self, inner, delay_s: float = 0.05,
+                 slow_calculate: bool = False,
+                 slow_primal_rows: bool = True):
+        self.inner = inner
+        self.delay_s = float(delay_s)
+        self.slow_calculate = slow_calculate
+        self.slow_primal_rows = slow_primal_rows
+        self.calls = 0   # host-side: counts actual sleeps executed
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def _stall(self):
+        """A traced f32 zero whose computation sleeps on the host."""
+        def _sleep(_):
+            self.calls += 1
+            time.sleep(self.delay_s)
+            return jnp.float32(0.0)
+        return jax.pure_callback(
+            _sleep, jax.ShapeDtypeStruct((), jnp.float32),
+            jnp.float32(0.0))
+
+    def calculate(self, lam, gamma):
+        g, grad, aux = self.inner.calculate(lam, gamma)
+        if self.slow_calculate:
+            g = g + self._stall()
+        return g, grad, aux
+
+    def primal_rows(self, lam, gamma, slab_index, rows):
+        x = self.inner.primal_rows(lam, gamma, slab_index, rows)
+        if self.slow_primal_rows:
+            x = x + self._stall().astype(x.dtype)
+        return x
 
 
 class PreemptAfter:

@@ -84,3 +84,56 @@ class TestCorruptCheckpoints:
             with pytest.raises(ValueError, match="no array"):
                 mgr.restore(5, {"a": np.zeros(4, np.float32),
                                 "zz": np.zeros(1, np.float32)})
+
+
+class TestRetention:
+    def test_max_to_keep_prunes_oldest(self):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, max_to_keep=2)
+            for step in (1, 2, 3, 4, 5):
+                mgr.save(step, _state(float(step)))
+            assert mgr.all_steps() == [4, 5]
+            # pruned dirs are gone from disk, not just unlisted
+            assert not os.path.exists(os.path.join(d, "step_0000000001"))
+
+    def test_max_to_keep_wins_over_keep_last(self):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep_last=5, max_to_keep=1)
+            mgr.save(1, _state(1.0))
+            mgr.save(2, _state(2.0))
+            assert mgr.all_steps() == [2]
+
+    def test_resume_loaded_step_survives_pruning(self):
+        """The crash-loop guard: the step a resume just restored must not
+        be rotated out by post-resume saves — if the run keeps dying, the
+        operator can always fall back to the last known-good restore
+        point."""
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, max_to_keep=2)
+            for step in (1, 2, 3):
+                mgr.save(step, _state(float(step)))
+            assert mgr.all_steps() == [2, 3]
+            mgr2 = CheckpointManager(d, max_to_keep=2)
+            flat, _ = mgr2.restore_flat(2)       # resume from step 2
+            np.testing.assert_array_equal(flat["a"], _state(2.0)["a"])
+            for step in (4, 5, 6):
+                mgr2.save(step, _state(float(step)))
+            # step 2 is protected; retention applies to the rest
+            assert mgr2.all_steps() == [2, 5, 6]
+            # still restorable — the protection is useful, not cosmetic
+            flat, _ = mgr2.restore_flat(2)
+            np.testing.assert_array_equal(flat["a"], _state(2.0)["a"])
+
+    def test_protection_is_per_manager_lifetime(self):
+        """A fresh manager over the same directory has no memory of an
+        old resume: retention reclaims the formerly protected step."""
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, max_to_keep=2)
+            for step in (1, 2, 3):
+                mgr.save(step, _state(float(step)))
+            mgr.restore_flat(2)
+            mgr.save(4, _state(4.0))
+            assert 2 in mgr.all_steps()
+            mgr3 = CheckpointManager(d, max_to_keep=2)
+            mgr3.save(5, _state(5.0))
+            assert mgr3.all_steps() == [4, 5]

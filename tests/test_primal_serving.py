@@ -188,3 +188,88 @@ class TestAllocationServer:
         other = formulations.make_objective("matching", lp, row_norm=True)
         with pytest.raises(ValueError, match="dual shape"):
             srv.warm_resolve(obj=other)
+
+
+class TestReadShardsHardening:
+    """A damaged export must fail loudly, naming the offending shard —
+    never a bare KeyError/zipfile traceback, never a silently
+    mis-assembled result (DESIGN.md §12 hardening)."""
+
+    @pytest.fixture()
+    def shards(self, solved_mb, tmp_path):
+        obj, res = solved_mb
+        paths = primal.write_shards(obj, res.lam, GAMMA, str(tmp_path),
+                                    chunk_rows=40)
+        assert len(paths) >= 2
+        return obj, paths
+
+    def test_missing_shard_named(self, shards):
+        obj, paths = shards
+        import os
+        os.remove(paths[0])
+        with pytest.raises(ValueError, match="shard missing"):
+            primal.read_shards(paths, len(obj.lp.slabs))
+        try:
+            primal.read_shards(paths, len(obj.lp.slabs))
+        except ValueError as e:
+            assert paths[0] in str(e)
+
+    def test_truncated_npz_named(self, shards):
+        obj, paths = shards
+        import os
+        size = os.path.getsize(paths[0])
+        with open(paths[0], "rb+") as f:
+            f.truncate(max(size // 2, 1))
+        with pytest.raises(ValueError, match="unreadable"):
+            primal.read_shards(paths, len(obj.lp.slabs))
+        try:
+            primal.read_shards(paths, len(obj.lp.slabs))
+        except ValueError as e:
+            assert paths[0] in str(e)
+
+    def test_garbage_bytes_named(self, shards):
+        obj, paths = shards
+        with open(paths[1], "wb") as f:
+            f.write(b"definitely not a zipfile")
+        with pytest.raises(ValueError, match="unreadable"):
+            primal.read_shards(paths, len(obj.lp.slabs))
+
+    def test_missing_key_named(self, shards):
+        obj, paths = shards
+        # shards written without a rounder have no x_round
+        with pytest.raises(ValueError, match="missing array 'x_round'"):
+            primal.read_shards(paths, len(obj.lp.slabs), key="x_round")
+
+    def test_out_of_range_slab_index_named(self, shards):
+        obj, paths = shards
+        with np.load(paths[0]) as z:
+            payload = {k: z[k] for k in z.files}
+        payload["slab_index"] = np.int64(99)
+        np.savez(paths[0], **payload)
+        with pytest.raises(ValueError, match="out of range"):
+            primal.read_shards(paths, len(obj.lp.slabs))
+
+    def test_width_mismatch_named(self, shards):
+        obj, paths = shards
+        # find two shards of the same slab and narrow one of them
+        by_slab = {}
+        for p in paths:
+            with np.load(p) as z:
+                by_slab.setdefault(int(z["slab_index"]), []).append(p)
+        slab_paths = next(v for v in by_slab.values() if len(v) >= 2)
+        bad = slab_paths[1]
+        with np.load(bad) as z:
+            payload = {k: z[k] for k in z.files}
+        payload["x"] = payload["x"][:, :-1]
+        np.savez(bad, **payload)
+        with pytest.raises(ValueError, match="width mismatch"):
+            primal.read_shards(paths, len(obj.lp.slabs))
+        try:
+            primal.read_shards(paths, len(obj.lp.slabs))
+        except ValueError as e:
+            assert bad in str(e)
+
+    def test_clean_export_still_round_trips(self, shards):
+        obj, paths = shards
+        xs = primal.read_shards(paths, len(obj.lp.slabs))
+        assert all(x is not None for x in xs)

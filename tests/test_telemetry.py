@@ -332,3 +332,69 @@ class TestNoBarePrint:
                         if pat.search(line.split("#")[0]):
                             offenders.append(f"{path}:{ln}")
         assert not offenders, f"bare print() found: {offenders}"
+
+
+class TestThreadSafety:
+    """DESIGN.md §12: one Telemetry shared by the frontend dispatch
+    thread, a resolve thread, and client threads must keep a valid run
+    log — no lost counter increments, no interleaved half-records, and
+    per-thread well-formed span paths."""
+
+    N_THREADS = 8
+    N_EACH = 200
+
+    def test_concurrent_emit_counters_and_spans(self, tmp_path):
+        import threading
+        path = str(tmp_path / "run.jsonl")
+        tel = Telemetry.jsonl(path, stream=open(os.devnull, "w"))
+        barrier = threading.Barrier(self.N_THREADS)
+
+        def worker(tid):
+            barrier.wait()   # maximize interleaving
+            for i in range(self.N_EACH):
+                tel.counter("hits")
+                tel.gauge(f"g{tid}", i)
+                with tel.span(f"outer{tid}", tid=tid):
+                    with tel.span("inner"):
+                        tel.event("event", tid=tid, i=i)
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(self.N_THREADS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert tel.metrics_snapshot()["counters"]["hits"] == (
+            self.N_THREADS * self.N_EACH)   # no lost increments
+        tel.close()
+        run = load_run(path)                # every line parses + validates
+        spans = run.by_type("span")
+        # each thread's span paths are well-formed for ITS nesting — an
+        # inner span's path is its own thread's outer/inner, never a
+        # splice of another thread's stack
+        inner = [s for s in spans if s["name"] == "inner"]
+        outer = [s for s in spans if s["name"] != "inner"]
+        assert len(inner) == len(outer) == self.N_THREADS * self.N_EACH
+        assert {s["path"] for s in inner} == {
+            f"outer{t}/inner" for t in range(self.N_THREADS)}
+        for s in outer:
+            assert s["path"] == s["name"] == f"outer{s['tid']}"
+        assert len(run.by_type("event")) == self.N_THREADS * self.N_EACH
+
+    def test_concurrent_close_is_safe(self):
+        import threading
+        sink = ListSink()
+        tel = Telemetry(sink=sink, stream=open(os.devnull, "w"))
+        tel.counter("c", 3)
+
+        def racer():
+            tel.event("event", x=1)
+            tel.close()
+
+        threads = [threading.Thread(target=racer) for _ in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        # exactly one counters flush despite six concurrent closers
+        assert sum(1 for r in sink.records if r["type"] == "counters") == 1
