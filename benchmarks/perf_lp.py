@@ -98,6 +98,25 @@ from repro.core import (MatchingObjective, Maximizer, SolveConfig,
 from .lp_common import bench_instance
 
 
+def _stamp_resources(rows):
+    """Stamp process-level resource watermarks onto every emitted row.
+
+    `peak_rss_bytes` is the host VmHWM (process lifetime — an upper bound
+    on what the suite itself needed), `peak_hbm_bytes` the accelerator
+    allocator's peak (None on CPU backends, recorded honestly rather than
+    zero).  Rows become comparable across hosts/backends in
+    bench_history.jsonl without a per-suite sampler thread.
+    """
+    from repro.obs.memory import device_memory_stats, host_peak_rss_bytes
+    dev = device_memory_stats()
+    marks = {"peak_rss_bytes": host_peak_rss_bytes(),
+             "peak_hbm_bytes": (dev.get("peak_bytes_in_use")
+                                if dev else None)}
+    for r in rows:
+        r.setdefault("derived", {}).update(marks)
+    return rows
+
+
 def _time_solve(lp, kind: str, proj_iters: int, iterations: int = 60,
                 repeats: int = 3, sorted_scatter: bool = False,
                 ax_mode=None, use_pallas: bool = False):
@@ -194,7 +213,7 @@ def run(quick: bool = False):
                              "dual_drift_rel": abs(d7 - d0) / abs(d0),
                              "dual_drift_rel_vs_aligned":
                                  abs(d7 - d5) / abs(d5)}})
-    return rows
+    return _stamp_resources(rows)
 
 
 def run_bytes(quick: bool = False):
@@ -246,8 +265,9 @@ def run_bytes(quick: bool = False):
         derived.update({f"{k}_{mode}": v for k, v in s.items()})
     derived["edge_traffic_ratio_gvals_over_xcarry"] = ratio
     derived["xcarry_materializes_gvals"] = bool(xc["gvals_em"])
-    return [{"name": "perf_lp/bytes_per_iteration", "us_per_call": 0.0,
-             "derived": derived}]
+    return _stamp_resources(
+        [{"name": "perf_lp/bytes_per_iteration", "us_per_call": 0.0,
+          "derived": derived}])
 
 
 def run_tolerance(quick: bool = False):
@@ -470,7 +490,7 @@ def run_tolerance(quick: bool = False):
             "pdhg_2x_count": sum(1 for v in pdhg_speedups.values()
                                  if v >= 2.0),
         }})
-    return rows
+    return _stamp_resources(rows)
 
 
 def run_serve(quick: bool = False):
@@ -516,7 +536,7 @@ def run_serve(quick: bool = False):
     st = srv.stats()
 
     cert = primal_sub.certify(obj, res.lam, gamma, xs=primal_sub.repair_witness(obj, xs))
-    return [{
+    return _stamp_resources([{
         "name": "perf_lp/serve",
         "us_per_call": st.mean_ms * 1e3,
         "derived": {
@@ -535,7 +555,7 @@ def run_serve(quick: bool = False):
             "certificate_gap_rel": cert.gap_rel,
             "certificate_feasible": cert.feasible,
             "certificate_valid": cert.valid,
-        }}]
+        }}])
 
 
 def run_load(quick: bool = False):
@@ -636,7 +656,7 @@ def run_load(quick: bool = False):
         raise RuntimeError("no request completed OK under load")
     lat = np.asarray([r.latency_s for r in ok])
     qps = len(flat) / wall
-    return [{
+    return _stamp_resources([{
         "name": "perf_lp/serve_load",
         "us_per_call": float(lat.mean() * 1e6) if lat.size else 0.0,
         "derived": {
@@ -663,4 +683,4 @@ def run_load(quick: bool = False):
             "refresh_status": refresh_status,
             "refresh_converged": bool(res_w is not None
                                       and res_w.converged),
-        }}]
+        }}])

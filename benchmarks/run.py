@@ -37,6 +37,14 @@ rest of the artifact; ``--fresh`` replaces the file wholesale).
            rates, a warm_resolve landing mid-run; raises instead of
            recording a row if any request goes unclassified
 
+Every invocation also appends one compact summary line per executed suite
+to benchmarks/results/bench_history.jsonl (timestamp, suite, quick flag,
+row names + us_per_call + resource watermarks) — an append-only trend log
+that survives the keyed merges of bench_results.json, so perf drift is
+diffable across invocations.  ``--no-history`` opts out; ``--list``
+enumerates the registered suites and the rows each one emits without
+running anything.
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 """
 from __future__ import annotations
@@ -171,6 +179,45 @@ def _merge_results(out_path: str, rows, fresh: bool):
         json.dump(rows, f, indent=1, default=str)
 
 
+def _append_history(history_path: str, suite: str, rows, quick: bool,
+                    seconds: float) -> None:
+    """Append one summary line for an executed suite (module doc).
+
+    The line is self-contained (timestamp, suite, row name -> us_per_call
+    + any resource watermarks) so a plain `jq`/grep over the file answers
+    "how has perf_lp/it6 moved over the last month" without loading the
+    merged artifact.  Append-only by design: history is never rewritten.
+    """
+    entry = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "suite": suite,
+        "quick": bool(quick),
+        "seconds": round(seconds, 3),
+        "rows": {
+            r["name"]: {
+                "us_per_call": r["us_per_call"],
+                **{k: r.get("derived", {}).get(k)
+                   for k in ("peak_rss_bytes", "peak_hbm_bytes")
+                   if k in r.get("derived", {})},
+            }
+            for r in rows},
+    }
+    os.makedirs(os.path.dirname(history_path), exist_ok=True)
+    with open(history_path, "a") as f:
+        f.write(json.dumps(entry, default=str, sort_keys=True) + "\n")
+
+
+def _list_suites() -> None:
+    """Print the registered suites and what each one measures (--list)."""
+    descriptions = {}
+    for line in (__doc__ or "").splitlines():
+        parts = line.split(None, 1)
+        if len(parts) == 2 and parts[0] in SUITES:
+            descriptions[parts[0]] = parts[1].strip()
+    for name in SUITES:
+        print(f"{name:16s} {descriptions.get(name, '')}".rstrip())
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -178,12 +225,23 @@ def main() -> None:
     ap.add_argument("--fresh", action="store_true",
                     help="replace bench_results.json wholesale instead of "
                          "merging this run's rows into it")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered suites and exit (runs nothing)")
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip the bench_history.jsonl append for this run")
     args = ap.parse_args()
     _register()
+    if args.list:
+        _list_suites()
+        return
     suites = {args.only: SUITES[args.only]} if args.only else SUITES
+    results_dir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                               "results")
+    history = os.path.join(results_dir, "bench_history.jsonl")
     all_rows = []
     print("name,us_per_call,derived")
     for name, fn in suites.items():
+        t0 = time.perf_counter()
         try:
             rows = fn(args.quick)
         except Exception as e:  # report, keep going
@@ -194,8 +252,10 @@ def main() -> None:
                   f"\"{json.dumps(r['derived'], default=str)}\"")
             sys.stdout.flush()
         all_rows.extend(rows)
-    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                       "results", "bench_results.json")
+        if not args.no_history:
+            _append_history(history, name, rows, args.quick,
+                            time.perf_counter() - t0)
+    out = os.path.join(results_dir, "bench_results.json")
     _merge_results(out, all_rows, args.fresh)
 
 

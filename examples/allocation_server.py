@@ -28,6 +28,13 @@ request past its deadline escapes TIMEOUT/SHED classification, if an OK
 response exceeded its deadline, if the background refresh fails, or if
 the drain leaves an unanswered request — this is the CI overload smoke
 (`--load-test --quick`).
+
+With `--metrics-port PORT` (0 = ephemeral) the load test also stands up
+the live Prometheus `/metrics` plane (DESIGN.md §13) and scrapes it over
+real HTTP *in the middle of the storm*: the exposition must parse, the
+frontend latency histogram / queue depth / shed + timeout counters and
+the host-memory gauges must be present, and the histogram's bucket
+counts must be internally consistent — otherwise the drill fails.
 """
 import argparse
 import sys
@@ -72,6 +79,46 @@ def _solve(args, I, J):
     return lp, obj, res, cfg, crit
 
 
+def _scrape_metrics(url):
+    """Mid-drill scrape of the live /metrics plane over real HTTP.
+
+    Runs while the clients are still hammering the frontend, so it also
+    exercises the exporter's thread-safety against concurrent updates.
+    Fails the drill on unparseable exposition or a missing required
+    series — the contract the CI overload smoke gates on.
+    """
+    import urllib.request
+
+    from repro.obs import ExpositionError, parse_exposition
+
+    try:
+        with urllib.request.urlopen(url, timeout=10.0) as resp:
+            text = resp.read().decode("utf-8")
+    except Exception as e:
+        fail(f"/metrics scrape failed mid-drill: {e!r}")
+    try:
+        series = parse_exposition(text)
+    except ExpositionError as e:
+        fail(f"/metrics exposition unparseable mid-drill: {e}")
+    required = [
+        'repro_frontend_latency_seconds_bucket{status="ok",le="+Inf"}',
+        "repro_frontend_queue_depth",
+        'repro_frontend_requests_total{status="shed"}',
+        'repro_frontend_requests_total{status="timeout"}',
+        "repro_memory_host_rss_bytes",
+        "repro_memory_host_peak_rss_bytes",
+        "repro_server_query_latency_seconds_count",
+    ]
+    missing = [s for s in required if s not in series]
+    if missing:
+        fail(f"/metrics missing required series mid-drill: {missing}")
+    if series["repro_memory_host_rss_bytes"] <= 0:
+        fail("/metrics host RSS gauge is not positive")
+    print(f"mid-drill /metrics scrape OK: {len(series)} series, "
+          f"rss {series['repro_memory_host_rss_bytes'] / 2**20:.0f} MiB, "
+          f"queue depth {series['repro_frontend_queue_depth']:.0f}")
+
+
 def load_test(args):
     """The overload drill: concurrent clients past capacity, a refresh
     mid-run, a graceful drain — every request classified, zero stranded."""
@@ -106,7 +153,10 @@ def load_test(args):
           f"deadline {deadline * 1e3:.0f} ms")
 
     fe = ServerFrontend(srv, FrontendConfig(
-        max_queue=64, max_batch=64, default_deadline_s=deadline))
+        max_queue=64, max_batch=64, default_deadline_s=deadline,
+        metrics_port=args.metrics_port))
+    if fe.exporter is not None:
+        print(f"live metrics plane: {fe.exporter.url}")
     results = [[] for _ in range(clients)]
     crashed = []
 
@@ -142,6 +192,8 @@ def load_test(args):
         ax_mode="aligned", row_norm=True)
     if not fe.refresh(criteria=crit, obj=tight):
         fail("refresh refused with no resolve in flight")
+    if fe.exporter is not None:
+        _scrape_metrics(fe.exporter.url)
     for t in threads:
         t.join(timeout=duration + 120.0)
     if any(t.is_alive() for t in threads):
@@ -200,6 +252,9 @@ def main():
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--duration", type=float, default=None,
                     help="load-test duration in seconds")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="with --load-test: serve live /metrics on this "
+                         "port (0 = ephemeral) and scrape it mid-drill")
     args = ap.parse_args()
 
     if args.load_test:

@@ -289,6 +289,7 @@ def solve_distributed(
     resume_meta: Optional[dict] = None,
     telemetry=None,
     profiler=None,
+    sampler=None,
 ) -> SolveResult:
     """End-to-end distributed solve: place data, build objective, maximize.
 
@@ -321,4 +322,4 @@ def solve_distributed(
                     health=health, checkpoint_fn=checkpoint_fn,
                     preempt_fn=preempt_fn, initial_state=initial_state,
                     resume_meta=resume_meta, telemetry=telemetry,
-                    profiler=profiler)
+                    profiler=profiler, sampler=sampler)

@@ -166,7 +166,8 @@ class SolveEngine:
 
     def _runner(self, length: int, gamma_override: bool, state: SolveState,
                 gamma: jax.Array,
-                tel: Telemetry = Telemetry.disabled()) -> Callable:
+                tel: Telemetry = Telemetry.disabled(),
+                sampler=None) -> Callable:
         """Return the ahead-of-time-compiled chunk executable for this
         (length, γ-mode, state-layout) key, building it on first use.
 
@@ -190,6 +191,16 @@ class SolveEngine:
                 lowered = fn.lower(state, gamma)
             with tel.span("compile", chunk_len=length):
                 run = lowered.compile()
+            if sampler is not None:
+                # per-runner static memory estimate (memory_analysis or the
+                # hlo_cost census) — folded into the run's compiled peak and
+                # surfaced as a generic event (DESIGN.md §13)
+                from repro.obs.memory import compiled_memory_estimate
+                est = compiled_memory_estimate(run)
+                if est:
+                    sampler.note_compiled(est)
+                    tel.event("event", kind="compiled_memory",
+                              chunk_len=length, **est)
             self._runners[key] = run
         return run
 
@@ -203,9 +214,9 @@ class SolveEngine:
               initial_state: Optional[SolveState] = None,
               resume_meta: Optional[dict] = None,
               telemetry: Optional[Telemetry] = None,
-              profiler=None) -> SolveResult:
+              profiler=None, sampler=None) -> SolveResult:
         """Run the solve loop (DESIGN.md §4; fault tolerance §9;
-        telemetry §11).
+        telemetry §11; resource sampling §13).
 
         Beyond the criteria/diagnostics contract:
 
@@ -238,7 +249,17 @@ class SolveEngine:
                          identical (tests/test_telemetry.py);
           profiler       a `repro.obs.ProfilerHook` tracing a window of
                          chunks via jax.profiler (stopped in a finally
-                         block, so an aborted solve still flushes).
+                         block, so an aborted solve still flushes);
+          sampler        a `repro.obs.MemorySampler`; the engine samples
+                         at every chunk boundary (one schema-validated
+                         `memory` event each: host RSS, device allocator
+                         bytes where available, watermark highs), folds
+                         per-runner compiled-memory estimates into the
+                         run peak, and stamps `sampler.watermarks()`
+                         into the manifest at solve end.  Defaults to
+                         None — zero reads, zero events, the unsampled
+                         trajectory is bitwise identical
+                         (tests/test_memory_obs.py).
 
         Any of health/checkpoint_fn/preempt_fn/initial_state forces the
         chunked path; with none of them and no criteria the fixed-length
@@ -279,13 +300,18 @@ class SolveEngine:
             # Fixed-length path: ONE scan of the full count — bit-identical
             # to the legacy engine, no host round-trips.
             t0 = time.perf_counter()
-            run = self._runner(total, False, state, gamma_dev, tel)
+            run = self._runner(total, False, state, gamma_dev, tel, sampler)
             with tel.span("execute", chunk=0, it=0, n=total):
                 state, stats = run(state, gamma_dev)
                 if tel.enabled:
                     jax.block_until_ready(stats.dual_obj)
             tel.counter("solve.chunks")
             tel.counter("solve.iterations", total)
+            if sampler is not None:
+                s = sampler.sample(where="solve", it=total)
+                tel.event("memory", it=total, chunk=0,
+                          **sampler.event_fields(s))
+                tel.manifest(**sampler.watermarks())
             tel.event("solve_end", stop_reason=StopReason.MAX_ITERATIONS.value,
                       iterations_run=total, converged=False,
                       wall_s=time.perf_counter() - t0, checks=0,
@@ -342,7 +368,8 @@ class SolveEngine:
                     break
                 n = min(check, total - it_done)
                 gamma_arr = jnp.asarray(gamma_now, jnp.float32)
-                run = self._runner(n, adaptive, state, gamma_arr, tel)
+                run = self._runner(n, adaptive, state, gamma_arr, tel,
+                                   sampler)
                 if profiler is not None:
                     profiler.chunk_start(chunk_idx, tel)
                 with tel.span("execute", chunk=chunk_idx, it=it_done, n=n):
@@ -367,6 +394,12 @@ class SolveEngine:
                 elapsed = time.perf_counter() - t0
                 if profiler is not None:
                     profiler.chunk_end(chunk_idx, tel)
+                if sampler is not None:
+                    # the chunk boundary is the host sync point — the one
+                    # place a resource read can't perturb device pipelining
+                    s = sampler.sample(where="chunk", it=it_done + n)
+                    tel.event("memory", it=it_done + n, chunk=chunk_idx,
+                              **sampler.event_fields(s))
                 chunk_idx += 1
                 tel.counter("solve.chunks")
 
@@ -488,6 +521,10 @@ class SolveEngine:
         else:
             stats = jax.tree.map(lambda *xs: jnp.concatenate(xs),
                                  *stats_chunks)
+        if sampler is not None:
+            # run-level peaks stamped into the manifest (the LAST manifest
+            # record in a log carries the complete merged view)
+            tel.manifest(**sampler.watermarks())
         tel.event("solve_end", stop_reason=stop_reason.value,
                   iterations_run=it_done, converged=converged,
                   wall_s=time.perf_counter() - t0, checks=len(diags),
@@ -519,19 +556,19 @@ def maximize(calculate: Callable, lam0: jax.Array, config: SolveConfig,
              initial_state: Optional[SolveState] = None,
              resume_meta: Optional[dict] = None,
              telemetry: Optional[Telemetry] = None,
-             profiler=None) -> SolveResult:
+             profiler=None, sampler=None) -> SolveResult:
     """Thin wrapper over SolveEngine.  With no `criteria` this runs
     `config.iterations` steps as one jitted scan (the legacy fixed-length
     behavior, bit-identical); with criteria it is tolerance-terminated.
     The fault-tolerance hooks (health guard, checkpoint/preempt/resume —
-    DESIGN.md §9) and the telemetry/profiler hooks (§11) pass straight
-    through to `SolveEngine.solve`."""
+    DESIGN.md §9) and the telemetry/profiler/sampler hooks (§11, §13)
+    pass straight through to `SolveEngine.solve`."""
     return SolveEngine(calculate, config, algorithm).solve(
         lam0, criteria=criteria, diagnostics_fn=diagnostics_fn,
         infeas_scale=infeas_scale, health=health,
         checkpoint_fn=checkpoint_fn, preempt_fn=preempt_fn,
         initial_state=initial_state, resume_meta=resume_meta,
-        telemetry=telemetry, profiler=profiler)
+        telemetry=telemetry, profiler=profiler, sampler=sampler)
 
 
 class Maximizer:
@@ -579,7 +616,7 @@ class Maximizer:
                  initial_state: Optional[SolveState] = None,
                  resume_meta: Optional[dict] = None,
                  telemetry: Optional[Telemetry] = None,
-                 profiler=None) -> SolveResult:
+                 profiler=None, sampler=None) -> SolveResult:
         if initial_value is None and initial_state is None:
             initial_value = jnp.zeros(obj.dual_shape, jnp.float32)
         criteria = self.criteria if criteria is None else criteria
@@ -588,4 +625,4 @@ class Maximizer:
             infeas_scale=_infeas_scale(obj, criteria), health=health,
             checkpoint_fn=checkpoint_fn, preempt_fn=preempt_fn,
             initial_state=initial_state, resume_meta=resume_meta,
-            telemetry=telemetry, profiler=profiler)
+            telemetry=telemetry, profiler=profiler, sampler=sampler)

@@ -78,6 +78,33 @@ def summarize(run: RunLog) -> Dict[str, Any]:
             final_infeas=last.get("infeas"),
             final_gamma=last.get("gamma"))
 
+    mem_events = by.get("memory", [])
+    memory: Dict[str, Any] = {}
+    if mem_events or any(k in run.manifest
+                         for k in ("peak_rss_bytes", "peak_hbm_bytes")):
+        memory = {
+            "samples": [
+                {k: ev.get(k) for k in ("it", "chunk", "where", "reason",
+                                        "host_rss_bytes",
+                                        "device_bytes_in_use")
+                 if ev.get(k) is not None}
+                for ev in mem_events],
+            "rss_guard_trips": sum(1 for ev in mem_events
+                                   if ev.get("reason") == "rss_guard"),
+            "peak_rss_bytes": run.manifest.get("peak_rss_bytes"),
+            "peak_hbm_bytes": run.manifest.get("peak_hbm_bytes"),
+            "compiled_peak_bytes": run.manifest.get("compiled_peak_bytes"),
+        }
+
+    # the flushed registry digest ("metrics" event): keep only histogram
+    # families' summary stats — counters/gauges already render above from
+    # the solve's own counters record, the histograms are the new signal
+    metrics_ev = (by.get("metrics") or [{}])[-1]
+    histograms: Dict[str, Any] = {}
+    for fam, body in (metrics_ev.get("series") or {}).items():
+        if isinstance(body, dict) and body.get("type") == "histogram":
+            histograms[fam] = body.get("series", {})
+
     solve_end = (by.get("solve_end") or [{}])[-1]
     counters = (by.get("counters") or [{}])[-1]
     return {
@@ -103,6 +130,8 @@ def summarize(run: RunLog) -> Dict[str, Any]:
             for ev in by.get("resolve", [])],
         "counters": counters.get("counters", {}),
         "gauges": counters.get("gauges", {}),
+        "memory": memory,
+        "histograms": histograms,
         "profile": [{k: ev.get(k) for k in ("action", "chunk", "trace_dir")
                      if k in ev}
                     for ev in by.get("profile", [])],
@@ -123,6 +152,17 @@ def _fmt(v: Any) -> str:
     if isinstance(v, float):
         return f"{v:.6g}"
     return str(v)
+
+
+def _fmt_bytes(v: Optional[float]) -> str:
+    if v is None:
+        return "-"
+    v = float(v)
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if v < 1024 or unit == "TiB":
+            return f"{v:.0f}{unit}" if unit == "B" else f"{v:.1f}{unit}"
+        v /= 1024
+    return f"{v:.1f}TiB"
 
 
 def render(summary: Dict[str, Any]) -> str:
@@ -172,6 +212,45 @@ def render(summary: Dict[str, Any]) -> str:
 
     if summary["checkpoints"]:
         out.append(f"== checkpoints: {summary['checkpoints']} flushes ==")
+
+    mem = summary.get("memory") or {}
+    if mem:
+        n = len(mem.get("samples") or [])
+        out.append(f"== memory timeline ({n} samples) ==")
+        peak = mem.get("peak_rss_bytes")
+        scale = max([peak or 0] + [s.get("host_rss_bytes") or 0
+                                   for s in mem.get("samples") or []])
+        for s in mem.get("samples") or []:
+            rss = s.get("host_rss_bytes")
+            dev = s.get("device_bytes_in_use")
+            bar = ("#" * max(1, round(30 * rss / scale))
+                   if rss and scale else "")
+            flag = " !rss-guard" if s.get("reason") == "rss_guard" else ""
+            where = s.get("where") or ("chunk" if "chunk" in s else "?")
+            out.append(
+                f"  {where:>8s} it {s.get('it', '-')!s:>8s}  "
+                f"rss {_fmt_bytes(rss):>10s}  "
+                f"dev {_fmt_bytes(dev):>10s}  {bar}{flag}")
+        for k in ("peak_rss_bytes", "peak_hbm_bytes", "compiled_peak_bytes"):
+            if mem.get(k) is not None:
+                out.append(f"  {k:24s} {_fmt_bytes(mem[k])}")
+        if mem.get("rss_guard_trips"):
+            out.append(f"  rss_guard_trips          {mem['rss_guard_trips']}")
+
+    if summary.get("histograms"):
+        out.append("== latency histograms ==")
+        for fam in sorted(summary["histograms"]):
+            out.append(f"  {fam}")
+            for labels, stats in sorted(summary["histograms"][fam].items()):
+                if not isinstance(stats, dict):
+                    continue
+                out.append(
+                    f"    {labels or '(all)':20s} "
+                    f"n={stats.get('count', 0):<8d} "
+                    f"mean={_fmt(stats.get('mean'))}s "
+                    f"p50={_fmt(stats.get('p50'))}s "
+                    f"p95={_fmt(stats.get('p95'))}s "
+                    f"p99={_fmt(stats.get('p99'))}s")
 
     if summary["counters"] or summary["gauges"]:
         out.append("== counters ==")

@@ -40,6 +40,8 @@ from repro.core.distributed import solve_distributed
 from repro.checkpoint.manager import CheckpointManager
 from repro.launch.mesh import make_mesh
 from repro.obs import JsonlSink, LEVELS, ProfilerHook, Telemetry
+from repro.obs.memory import MemorySampler
+from repro.obs.metrics import REGISTRY, MetricsExporter, MetricsRegistry
 from repro import formulations
 
 
@@ -272,6 +274,18 @@ def main():
                     help="first chunk index inside the profiler trace")
     ap.add_argument("--profile-num-chunks", type=int, default=1,
                     help="number of chunks the profiler trace spans")
+    # resource observability (DESIGN.md §13)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve live Prometheus /metrics on PORT for the "
+                         "duration of the solve (counters, histograms, "
+                         "memory gauges; 0 binds an ephemeral port)")
+    ap.add_argument("--max-host-rss-mb", type=float, default=None,
+                    metavar="MB",
+                    help="soft host-memory guard: warn (and emit a flagged "
+                         "`memory` event) when this process's RSS crosses "
+                         "MB MiB — the measurement hook for the "
+                         "larger-than-RSS out-of-core gate")
     args = ap.parse_args()
     if args.resume and not args.checkpoint_dir:
         ap.error("--resume requires --checkpoint-dir")
@@ -290,15 +304,37 @@ def main():
                              start_chunk=args.profile_start_chunk,
                              num_chunks=args.profile_num_chunks)
                 if args.profile_dir else None)
+    # the resource sampler rides along whenever anything will consume it:
+    # a JSONL run log (per-chunk `memory` events + manifest watermarks), a
+    # live /metrics plane, or the RSS soft guard.  Otherwise it stays None
+    # and the solve path does zero resource reads (bitwise identical).
+    sampler = None
+    exporter = None
+    registry = None
+    if (args.log_jsonl or args.metrics_port is not None
+            or args.max_host_rss_mb is not None):
+        registry = REGISTRY
+        sampler = MemorySampler(
+            registry=registry, telemetry=tel,
+            max_host_rss_bytes=(int(args.max_host_rss_mb * 2**20)
+                                if args.max_host_rss_mb is not None
+                                else None))
+    if args.metrics_port is not None:
+        exporter = MetricsExporter(registry, args.metrics_port)
+        tel.info(f"serving /metrics on {exporter.url}")
     try:
-        result = _run(args, tel, profiler)
+        result = _run(args, tel, profiler, sampler=sampler,
+                      registry=registry)
         if args.json:
             print(json.dumps(result, sort_keys=True))
     finally:
+        if exporter is not None:
+            exporter.close()
         tel.close()
 
 
-def _run(args, tel: Telemetry, profiler) -> dict:
+def _run(args, tel: Telemetry, profiler, sampler=None,
+         registry: "MetricsRegistry | None" = None) -> dict:
     ap_error = SystemExit  # arg combinations below here are solve errors
     spec = InstanceSpec(
         num_sources=args.sources, num_destinations=args.destinations,
@@ -478,7 +514,8 @@ def _run(args, tel: Telemetry, profiler) -> dict:
                                 preempt_fn=preempt_fn,
                                 initial_state=resume_state,
                                 resume_meta=resume_meta,
-                                telemetry=tel, profiler=profiler)
+                                telemetry=tel, profiler=profiler,
+                                sampler=sampler)
     else:
         obj = formulations.make_objective(
             args.formulation, lp,
@@ -499,7 +536,8 @@ def _run(args, tel: Telemetry, profiler) -> dict:
                                       preempt_fn=preempt_fn,
                                       initial_state=resume_state,
                                       resume_meta=resume_meta,
-                                      telemetry=tel, profiler=profiler)
+                                      telemetry=tel, profiler=profiler,
+                                      sampler=sampler)
     jax.block_until_ready(res.lam)
     dt = time.perf_counter() - t0
     d = np.asarray(res.stats.dual_obj)
@@ -580,7 +618,8 @@ def _run(args, tel: Telemetry, profiler) -> dict:
                 paths = primal_sub.write_shards(serve_obj, res.lam,
                                                 gamma_final,
                                                 args.export_primal,
-                                                chunk_rows=args.chunk_rows)
+                                                chunk_rows=args.chunk_rows,
+                                                sampler=sampler)
             dt_x = time.perf_counter() - t0
             n_src = sum(s.n for s in serve_obj.lp.slabs)
             tel.info(f"exported {len(paths)} decision shards "
@@ -591,9 +630,25 @@ def _run(args, tel: Telemetry, profiler) -> dict:
         if args.certify:
             with tel.span("certify"):
                 cert = primal_sub.certify(serve_obj, res.lam, gamma_final,
-                                          chunk_rows=args.chunk_rows)
+                                          chunk_rows=args.chunk_rows,
+                                          sampler=sampler)
             tel.info(primal_sub.format_certificate(cert))
             result["certificate_valid"] = bool(cert.valid)
+
+    if sampler is not None:
+        # fold the export/certify sampling into the run-level watermarks
+        # (the engine already stamped its own peaks mid-solve), surface
+        # them in the JSON result, and flush the registry digest so the
+        # post-mortem log carries the same series the live plane served
+        marks = sampler.watermarks()
+        tel.manifest(**marks)
+        result["peak_rss_bytes"] = marks["peak_rss_bytes"]
+        result["peak_hbm_bytes"] = marks["peak_hbm_bytes"]
+        if marks["peak_rss_bytes"]:
+            tel.info(f"peak host RSS {marks['peak_rss_bytes'] / 2**20:.0f} "
+                     f"MiB over {marks['memory_samples']} samples")
+    if registry is not None:
+        tel.event("metrics", series=registry.summary())
     return result
 
 

@@ -1,0 +1,279 @@
+"""Device/host memory observation: RSS, HBM stats, compiled estimates.
+
+DESIGN.md §13.  GPU-resident first-order LP solvers are memory-bound by
+construction, and ROADMAP item 3's out-of-core gate ("solve an instance
+larger than configured host RSS") needs a measurement seam before it
+can be a gate.  This module is that seam:
+
+  host_rss_bytes / host_peak_rss_bytes
+      parsed from /proc/self/status (VmRSS / VmHWM) — no psutil.
+      ``None`` on platforms without procfs.
+  device_memory_stats
+      ``device.memory_stats()`` where the backend provides it
+      (bytes_in_use / peak_bytes_in_use on GPU/TPU); graceful ``None``
+      on CPU, where XLA exposes no allocator stats.
+  compiled_memory_estimate
+      per-runner estimate from ``compiled.memory_analysis()`` when the
+      backend provides it, falling back to the ``launch/hlo_cost``
+      byte census over the compiled HLO text.
+  MemorySampler
+      stateful watermark tracker: ``sample()`` reads host+device,
+      updates peak-RSS/peak-HBM highs, mirrors gauges into a metrics
+      registry, emits the leveled warning + ``memory`` event when host
+      RSS crosses the configured soft bound
+      (``launch/solve.py --max-host-rss-mb``), and hands the engine
+      the fields for its per-chunk ``memory`` events.
+
+House standard: a ``sampler=None`` default everywhere means zero reads,
+zero events, zero gauges — the untelemetered solve path stays bitwise
+identical (asserted in tests/test_memory_obs.py).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, NamedTuple, Optional
+
+__all__ = ["host_rss_bytes", "host_peak_rss_bytes", "device_memory_stats",
+           "compiled_memory_estimate", "register_memory_gauges",
+           "MemorySample", "MemorySampler"]
+
+_PROC_STATUS = "/proc/self/status"
+
+
+def _proc_status_kb(key: str) -> Optional[int]:
+    try:
+        with open(_PROC_STATUS) as f:
+            for line in f:
+                if line.startswith(key + ":"):
+                    return int(line.split()[1])  # value is in kB
+    except (OSError, ValueError, IndexError):
+        return None
+    return None
+
+
+def host_rss_bytes() -> Optional[int]:
+    """Current resident set size of this process, or None off-Linux."""
+    kb = _proc_status_kb("VmRSS")
+    return kb * 1024 if kb is not None else None
+
+
+def host_peak_rss_bytes() -> Optional[int]:
+    """Process-lifetime peak RSS (VmHWM), or None off-Linux."""
+    kb = _proc_status_kb("VmHWM")
+    return kb * 1024 if kb is not None else None
+
+
+def device_memory_stats(device: Any = None) -> Optional[Dict[str, int]]:
+    """Allocator stats for one device: ``bytes_in_use`` and (when the
+    backend reports it) ``peak_bytes_in_use``/``bytes_limit``.
+
+    Returns None when the backend exposes no stats (the CPU backend
+    returns None from ``memory_stats()``) or when jax is unavailable.
+    """
+    try:
+        if device is None:
+            import jax
+            device = jax.devices()[0]
+        stats = device.memory_stats()
+    except Exception:
+        return None
+    if not stats:
+        return None
+    out = {}
+    for key in ("bytes_in_use", "peak_bytes_in_use", "bytes_limit",
+                "largest_alloc_size"):
+        v = stats.get(key)
+        if v is not None:
+            out[key] = int(v)
+    return out or None
+
+
+def compiled_memory_estimate(compiled: Any) -> Optional[Dict[str, Any]]:
+    """Static memory estimate for one AOT-compiled runner.
+
+    Prefers the backend's ``memory_analysis()`` (argument/output/temp/
+    generated-code bytes); falls back to the ``launch/hlo_cost`` census
+    over the compiled HLO text (``bytes_per_device`` of the dataflow).
+    Returns None when neither surface is available — never raises.
+    """
+    est: Dict[str, Any] = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                est[attr.replace("_in_bytes", "_bytes")
+                    .replace("_size", "")] = int(v)
+        if est:
+            est["source"] = "memory_analysis"
+    except Exception:
+        est = {}
+    if not est:
+        try:
+            from repro.launch import hlo_cost
+            census = hlo_cost.analyze(compiled.as_text())
+            est = {"bytes_accessed": int(census["bytes_per_device"]),
+                   "source": "hlo_cost"}
+        except Exception:
+            return None
+    return est
+
+
+def register_memory_gauges(registry: Any,
+                           device: Any = None) -> None:
+    """Register render-time memory gauges on `registry`.
+
+    ``repro_memory_host_rss_bytes`` / ``repro_memory_host_peak_rss_bytes``
+    read procfs at scrape time; ``repro_memory_device_bytes_in_use`` /
+    ``repro_memory_device_peak_bytes`` read the device allocator (0 when
+    the backend exposes no stats, e.g. CPU — the series still exists so
+    dashboards don't gap across platforms).
+    """
+    registry.gauge(
+        "repro_memory_host_rss_bytes",
+        "Current host RSS of the serving/solve process (VmRSS)."
+    ).set_function(lambda: float(host_rss_bytes() or 0))
+    registry.gauge(
+        "repro_memory_host_peak_rss_bytes",
+        "Process-lifetime peak host RSS (VmHWM)."
+    ).set_function(lambda: float(host_peak_rss_bytes() or 0))
+
+    def _dev(key: str) -> float:
+        stats = device_memory_stats(device)
+        return float(stats.get(key, 0)) if stats else 0.0
+
+    registry.gauge(
+        "repro_memory_device_bytes_in_use",
+        "Device allocator bytes in use (0 where the backend reports "
+        "no stats, e.g. CPU)."
+    ).set_function(lambda: _dev("bytes_in_use"))
+    registry.gauge(
+        "repro_memory_device_peak_bytes",
+        "Device allocator peak bytes in use (0 where unavailable)."
+    ).set_function(lambda: _dev("peak_bytes_in_use"))
+
+
+class MemorySample(NamedTuple):
+    """One observation: instantaneous values plus watermark highs as of
+    this sample.  Device fields are None on backends without allocator
+    stats (CPU) — consumers must treat them as nullable."""
+
+    unix_time: float
+    host_rss_bytes: Optional[int]
+    device_bytes_in_use: Optional[int]
+    device_peak_bytes: Optional[int]
+    peak_rss_bytes: Optional[int]
+    peak_hbm_bytes: Optional[int]
+    rss_guard_exceeded: bool
+
+
+class MemorySampler:
+    """Watermark-tracking resource sampler (thread-safe).
+
+    One sampler spans one logical run: the engine samples at every chunk
+    boundary, extraction/certification sample per streaming chunk, and
+    `watermarks()` yields the run-level peaks the engine stamps into the
+    manifest.  With `registry` set, each sample mirrors into
+    ``repro_memory_*`` gauges; with `telemetry` + `max_host_rss_bytes`
+    set, the first sample over the bound emits a warning log record and
+    a ``memory`` event flagged ``reason="rss_guard"`` (re-armed once RSS
+    drops 5% under the bound) — the soft guard ROADMAP item 3's
+    larger-than-RSS benchmark row will turn into a hard gate.
+    """
+
+    def __init__(self, registry: Any = None, telemetry: Any = None,
+                 max_host_rss_bytes: Optional[int] = None,
+                 device: Any = None) -> None:
+        self._lock = threading.Lock()
+        self._device = device
+        self._registry = registry
+        self._telemetry = telemetry
+        self.max_host_rss_bytes = max_host_rss_bytes
+        self._guard_armed = True
+        self._samples = 0
+        self._peak_rss: Optional[int] = None
+        self._peak_hbm: Optional[int] = None
+        self._compiled_peak: Optional[int] = None
+        if registry is not None:
+            register_memory_gauges(registry, device=device)
+
+    def sample(self, where: str = "", it: Optional[int] = None
+               ) -> MemorySample:
+        """Read host+device, update watermarks, run the RSS soft guard.
+
+        `where`/`it` only annotate the guard's emitted event; the caller
+        composes its own per-chunk ``memory`` event from the returned
+        sample (see SolveEngine).
+        """
+        rss = host_rss_bytes()
+        dev = device_memory_stats(self._device)
+        in_use = dev.get("bytes_in_use") if dev else None
+        dev_peak = dev.get("peak_bytes_in_use", in_use) if dev else None
+        with self._lock:
+            self._samples += 1
+            if rss is not None:
+                self._peak_rss = max(self._peak_rss or 0, rss)
+            hbm_high = dev_peak if dev_peak is not None else in_use
+            if hbm_high is not None:
+                self._peak_hbm = max(self._peak_hbm or 0, hbm_high)
+            exceeded = (self.max_host_rss_bytes is not None
+                        and rss is not None
+                        and rss > self.max_host_rss_bytes)
+            fire_guard = exceeded and self._guard_armed
+            if fire_guard:
+                self._guard_armed = False
+            elif (not exceeded and not self._guard_armed
+                  and self.max_host_rss_bytes is not None
+                  and rss is not None
+                  and rss < 0.95 * self.max_host_rss_bytes):
+                self._guard_armed = True
+            peak_rss, peak_hbm = self._peak_rss, self._peak_hbm
+        s = MemorySample(unix_time=time.time(), host_rss_bytes=rss,
+                         device_bytes_in_use=in_use,
+                         device_peak_bytes=dev_peak,
+                         peak_rss_bytes=peak_rss,
+                         peak_hbm_bytes=peak_hbm,
+                         rss_guard_exceeded=exceeded)
+        tel = self._telemetry
+        if fire_guard and tel is not None and getattr(tel, "enabled", False):
+            mb = rss / 2**20
+            cap = self.max_host_rss_bytes / 2**20
+            tel.warning(
+                f"host RSS {mb:.0f} MiB exceeds --max-host-rss-mb "
+                f"{cap:.0f} MiB{f' at {where}' if where else ''}")
+            tel.event("memory", reason="rss_guard", where=where, it=it,
+                      max_host_rss_bytes=self.max_host_rss_bytes,
+                      **self.event_fields(s))
+        return s
+
+    def note_compiled(self, est: Optional[Dict[str, Any]]) -> None:
+        """Fold one runner's compiled-memory estimate into the run peak
+        (`manifest.compiled_peak_bytes` = max over runners)."""
+        if not est:
+            return
+        total = sum(int(v) for k, v in est.items()
+                    if k.endswith("_bytes") and isinstance(v, (int, float)))
+        total = total or int(est.get("bytes_accessed", 0) or 0)
+        if total:
+            with self._lock:
+                self._compiled_peak = max(self._compiled_peak or 0, total)
+
+    @staticmethod
+    def event_fields(s: MemorySample) -> Dict[str, Any]:
+        """The schema-required `memory` event fields for one sample."""
+        return {"host_rss_bytes": s.host_rss_bytes,
+                "device_bytes_in_use": s.device_bytes_in_use,
+                "device_peak_bytes": s.device_peak_bytes,
+                "peak_rss_bytes": s.peak_rss_bytes,
+                "peak_hbm_bytes": s.peak_hbm_bytes}
+
+    def watermarks(self) -> Dict[str, Any]:
+        """Run-level peaks (manifest stamp + benchmark row fields)."""
+        with self._lock:
+            return {"peak_rss_bytes": self._peak_rss,
+                    "peak_hbm_bytes": self._peak_hbm,
+                    "compiled_peak_bytes": self._compiled_peak,
+                    "memory_samples": self._samples}

@@ -35,6 +35,18 @@ Event taxonomy:
   drain        the frontend's graceful-drain summary: admissions stopped,
                in-flight batches flushed, `pending` requests left (0 on
                a clean drain).
+  memory       one resource observation (obs/memory.py): host RSS and
+               run-peak watermarks, plus device allocator bytes where
+               the backend reports them (required fields are present
+               but null on CPU, which exposes no allocator stats).
+               The engine emits one per chunk boundary; extraction /
+               certification emit per streaming chunk; the RSS soft
+               guard emits one flagged `reason="rss_guard"`.
+  metrics      a registry digest (MetricsRegistry.summary()): every
+               family's type + per-series values or histogram
+               count/sum/p50/p95/p99 — flushed at solve end and at
+               frontend drain so post-mortem logs carry the same
+               numbers the /metrics plane served live.
   log          one leveled console-logger line.
   counters     the aggregated counters/gauges, flushed by close().
   profile      jax.profiler start/stop markers (obs/profile.py).
@@ -65,6 +77,10 @@ EVENT_FIELDS: Dict[str, frozenset] = {
     "timeout": frozenset({"waited_s", "deadline_s"}),
     "queue_depth": frozenset({"depth"}),
     "drain": frozenset({"pending"}),
+    "memory": frozenset({"host_rss_bytes", "peak_rss_bytes",
+                         "device_bytes_in_use", "device_peak_bytes",
+                         "peak_hbm_bytes"}),
+    "metrics": frozenset({"series"}),
     "log": frozenset({"level", "msg"}),
     "counters": frozenset({"counters", "gauges"}),
     "profile": frozenset({"action"}),

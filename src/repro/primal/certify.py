@@ -231,7 +231,8 @@ def repair_witness(obj, xs: Sequence[np.ndarray],
 
 
 def certify(obj, lam, gamma, xs: Optional[Sequence[np.ndarray]] = None,
-            tol: float = 1e-5, chunk_rows: int = 4096) -> Certificate:
+            tol: float = 1e-5, chunk_rows: int = 4096,
+            sampler=None) -> Certificate:
     """Build the duals-to-decisions certificate (module doc).
 
     `xs` is the primal witness; when omitted, it is stream-extracted from
@@ -239,6 +240,12 @@ def certify(obj, lam, gamma, xs: Optional[Sequence[np.ndarray]] = None,
     default witness).  Pass a rounded+repaired candidate to certify an
     integral serving plan instead.  `tol` bounds the per-family relative
     violation a witness may carry and still count as feasible.
+
+    `sampler` (a `repro.obs.MemorySampler`) records peak host bytes
+    across the streaming extraction and the host-numpy family
+    accumulation — the memory-bounded-certification seam of ROADMAP
+    item 3.  None (the default) reads nothing; the certificate is
+    bitwise unaffected either way.
 
     Equality blocks (simplex_eq): the shrink-based repairs break Σx = s,
     and the `blocks` family in the slack report will flag that — the
@@ -250,8 +257,12 @@ def certify(obj, lam, gamma, xs: Optional[Sequence[np.ndarray]] = None,
                             jnp.asarray(gamma, jnp.float32))[0])
     if xs is None:
         xs = repair_witness(obj, extract_primal(obj, lam, gamma,
-                                                chunk_rows=chunk_rows))
+                                                chunk_rows=chunk_rows,
+                                                sampler=sampler))
     slacks = family_slacks(obj, xs)
+    if sampler is not None:
+        # the family accumulation is the certify path's host-memory high
+        sampler.sample(where="certify")
     worst = max((s.violation_rel for s in slacks.values()), default=0.0)
     B = x_sq_bound(obj.lp)
     dereg = 0.5 * float(gamma) * B

@@ -86,8 +86,13 @@ class PrimalChunk:
 
 def iter_primal_chunks(obj, lam, gamma, chunk_rows: int = 4096,
                        slab_indices: Optional[Sequence[int]] = None,
-                       ) -> Iterator[PrimalChunk]:
-    """Yield x*(λ) chunk by chunk over source-row blocks (module doc)."""
+                       sampler=None) -> Iterator[PrimalChunk]:
+    """Yield x*(λ) chunk by chunk over source-row blocks (module doc).
+
+    `sampler` (a `repro.obs.MemorySampler`) records peak host bytes
+    across the streaming loop — the measurement seam ROADMAP item 3's
+    out-of-core gate relies on.  None (the default) reads nothing.
+    """
     lam = jnp.asarray(lam)
     gamma = jnp.asarray(gamma, jnp.float32)
     sel = range(len(obj.lp.slabs)) if slab_indices is None else slab_indices
@@ -107,21 +112,26 @@ def iter_primal_chunks(obj, lam, gamma, chunk_rows: int = 4096,
                 np.int32)
             x = np.asarray(chunk_fn(lam, gamma, jnp.asarray(idx)))[:take]
             real = idx[:take]
+            if sampler is not None:
+                sampler.sample(where="extract", it=start)
             yield PrimalChunk(slab_index=si, start=start,
                               source_ids=ids[real], dest_idx=dest[real],
                               mask=mask[real], x=x)
 
 
-def extract_primal(obj, lam, gamma, chunk_rows: int = 4096) -> List[np.ndarray]:
+def extract_primal(obj, lam, gamma, chunk_rows: int = 4096,
+                   sampler=None) -> List[np.ndarray]:
     """Assembled per-slab decision arrays from the chunked recovery.
 
     Same return shape as `obj.primal(λ)` (list of (n, w) arrays, host
     numpy) but computed without ever holding more than one chunk on
-    device — and bitwise equal to it.
+    device — and bitwise equal to it (sampled or not: the sampler only
+    reads procfs/allocator stats between chunks).
     """
     out = [np.zeros(np.asarray(s.c_vals).shape, np.asarray(s.c_vals).dtype)
            for s in obj.lp.slabs]
-    for ch in iter_primal_chunks(obj, lam, gamma, chunk_rows):
+    for ch in iter_primal_chunks(obj, lam, gamma, chunk_rows,
+                                 sampler=sampler):
         out[ch.slab_index][ch.start:ch.start + len(ch.x)] = ch.x
     return out
 
@@ -131,7 +141,7 @@ def _shard_name(slab_index: int, start: int) -> str:
 
 
 def write_shards(obj, lam, gamma, out_dir: str, chunk_rows: int = 4096,
-                 rounder=None) -> List[str]:
+                 rounder=None, sampler=None) -> List[str]:
     """Stream-extract to `.npz` shards, one per chunk (the export path).
 
     Each shard holds `slab_index`, `start`, `source_ids`, `dest_idx`,
@@ -142,7 +152,8 @@ def write_shards(obj, lam, gamma, out_dir: str, chunk_rows: int = 4096,
     """
     os.makedirs(out_dir, exist_ok=True)
     paths = []
-    for ch in iter_primal_chunks(obj, lam, gamma, chunk_rows):
+    for ch in iter_primal_chunks(obj, lam, gamma, chunk_rows,
+                                 sampler=sampler):
         payload = dict(slab_index=np.int64(ch.slab_index),
                        start=np.int64(ch.start),
                        source_ids=ch.source_ids, dest_idx=ch.dest_idx,

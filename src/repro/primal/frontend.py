@@ -50,9 +50,10 @@ import time
 from collections import deque
 from typing import Dict, List, NamedTuple, Optional, Sequence
 
-import numpy as np
-
 from repro.obs import Telemetry
+from repro.obs.memory import register_memory_gauges
+from repro.obs.metrics import (DEFAULT_LATENCY_BUCKETS, MetricsExporter,
+                               MetricsRegistry)
 
 from .server import AllocationServer, DecisionRow
 
@@ -84,7 +85,12 @@ class FrontendConfig:
     ema_alpha / initial_batch_estimate_s   the batch-execution-time EMA
                    the estimated-wait gate runs on;
     drain_timeout_s     how long `drain()` waits for the dispatch thread
-                   to flush before force-resolving leftovers as SHED.
+                   to flush before force-resolving leftovers as SHED;
+    metrics_port   when set, serve the live Prometheus `/metrics` plane
+                   (DESIGN.md §13) on this port for the frontend's
+                   registry — 0 binds an ephemeral port (read it back
+                   from `frontend.exporter.port`); None (default) runs
+                   no HTTP listener at all.
     """
 
     max_queue: int = 256
@@ -95,6 +101,7 @@ class FrontendConfig:
     ema_alpha: float = 0.2
     initial_batch_estimate_s: float = 0.002
     drain_timeout_s: float = 10.0
+    metrics_port: Optional[int] = None
 
 
 class Response(NamedTuple):
@@ -163,7 +170,8 @@ class ServerFrontend:
     def __init__(self, server: AllocationServer,
                  config: Optional[FrontendConfig] = None,
                  telemetry: Optional[Telemetry] = None,
-                 start: bool = True):
+                 start: bool = True,
+                 registry: Optional[MetricsRegistry] = None):
         self.server = server
         self.config = config or FrontendConfig()
         self.telemetry = (telemetry if telemetry is not None
@@ -175,9 +183,52 @@ class ServerFrontend:
         self._ema_batch_s = float(self.config.initial_batch_estimate_s)
         self._draining = False
         self._stopped = False
-        self._counts = {"submitted": 0, "admitted": 0, "ok": 0, "shed": 0,
-                        "timeout": 0, "error": 0, "batches": 0}
-        self._ok_latencies: List[float] = []
+        # the scrape plane (DESIGN.md §13): the frontend shares the
+        # server's registry by default, so ONE /metrics endpoint carries
+        # query latencies, admission counters, resolve staleness, and the
+        # memory gauges together
+        self.registry = registry if registry is not None else server.registry
+        self._c_requests = self.registry.counter(
+            "repro_frontend_requests_total",
+            "Classified request completions (every submitted request "
+            "terminates in exactly one class).", labels=("status",))
+        self._c_submitted = self.registry.counter(
+            "repro_frontend_submitted_total", "Requests submitted.")
+        self._c_admitted = self.registry.counter(
+            "repro_frontend_admitted_total",
+            "Requests admitted past the shed gate.")
+        self._c_batches = self.registry.counter(
+            "repro_frontend_batches_total",
+            "Coalesced microbatches dispatched.")
+        self._lat_hist = self.registry.histogram(
+            "repro_frontend_latency_seconds",
+            "End-to-end request latency (submit to classified "
+            "completion), by final status.",
+            buckets=DEFAULT_LATENCY_BUCKETS, labels=("status",))
+        # materialize every status child up front so a scrape always sees
+        # the full classification space at 0 (a counter that appears only
+        # on its first increment breaks rate() and the smoke's presence
+        # checks)
+        for st in RequestStatus:
+            self._c_requests.labels(status=st.value)
+            self._lat_hist.labels(status=st.value)
+        self.registry.gauge(
+            "repro_frontend_queue_depth",
+            "Requests waiting in the bounded admission queue."
+        ).set_function(lambda: float(len(self._queue)))
+        self.registry.gauge(
+            "repro_frontend_ema_batch_seconds",
+            "EMA of batch execution time (the shed gate's estimator)."
+        ).set_function(lambda: self._ema_batch_s)
+        self.registry.gauge(
+            "repro_frontend_draining",
+            "1 once drain() stopped admissions."
+        ).set_function(lambda: 1.0 if self._draining else 0.0)
+        register_memory_gauges(self.registry)
+        self.exporter: Optional[MetricsExporter] = None
+        if self.config.metrics_port is not None:
+            self.exporter = MetricsExporter(self.registry,
+                                            self.config.metrics_port)
         self._refresh_lock = threading.Lock()
         self._resolve_thread: Optional[threading.Thread] = None
         self.last_resolve = None   # ("accepted"|"rejected"|"error", result)
@@ -203,8 +254,7 @@ class ServerFrontend:
         deadline_s = float(deadline_s)
         ids = [int(s) for s in source_ids]
         ticket = Ticket(ids, now + deadline_s, now)
-        with self._lock:
-            self._counts["submitted"] += 1
+        self._c_submitted.inc()
         unknown = self.server.unknown_sources(ids)
         if unknown:
             self._finish(ticket, RequestStatus.ERROR,
@@ -221,7 +271,7 @@ class ServerFrontend:
                     ticket, "est_wait",
                     detail=f"{est_wait * 1e3:.1f}ms est vs "
                            f"{deadline_s * 1e3:.1f}ms deadline")
-            self._counts["admitted"] += 1
+            self._c_admitted.inc()
             self._queue.append(ticket)
             self._pending_sources += len(ids)
             self._cond.notify()
@@ -241,14 +291,16 @@ class ServerFrontend:
 
     def _shed_locked(self, ticket: Ticket, reason: str,
                      detail: str = "") -> Ticket:
-        self._counts["shed"] += 1
+        latency = time.monotonic() - ticket.t_submit
+        self._c_requests.labels(status="shed").inc()
+        self._lat_hist.labels(status="shed").observe(latency)
         self.telemetry.counter("frontend.shed")
         self.telemetry.event("shed", reason=reason, detail=detail,
                              sources=len(ticket.source_ids))
         ticket._complete(Response(
             status=RequestStatus.SHED, decisions=None,
             reason=reason if not detail else f"{reason}: {detail}",
-            latency_s=time.monotonic() - ticket.t_submit))
+            latency_s=latency))
         return ticket
 
     def _finish(self, ticket: Ticket, status: RequestStatus,
@@ -256,10 +308,8 @@ class ServerFrontend:
                 reason: str = "") -> None:
         now = time.monotonic()
         latency = now - ticket.t_submit
-        with self._lock:
-            self._counts[status.value] += 1
-            if status is RequestStatus.OK:
-                self._ok_latencies.append(latency)
+        self._c_requests.labels(status=status.value).inc()
+        self._lat_hist.labels(status=status.value).observe(latency)
         if status is RequestStatus.TIMEOUT:
             self.telemetry.counter("frontend.timeout")
             self.telemetry.event(
@@ -357,7 +407,7 @@ class ServerFrontend:
         a = self.config.ema_alpha
         with self._lock:
             self._ema_batch_s = a * dt + (1 - a) * self._ema_batch_s
-            self._counts["batches"] += 1
+        self._c_batches.inc()
         done = time.monotonic()
         for t in live:
             if done > t.deadline:   # computed, but too late: still TIMEOUT
@@ -454,19 +504,26 @@ class ServerFrontend:
         self.telemetry.event("drain", pending=len(leftovers),
                              **{k: v for k, v in snap.items()
                                 if k.endswith("_total")})
+        # post-mortem parity with the live plane: the run log carries the
+        # same registry digest /metrics was serving (DESIGN.md §13)
+        self.telemetry.event("metrics", series=self.registry.summary())
         self.telemetry.gauge("frontend.queue_depth", 0)
+        if self.exporter is not None:
+            # closed LAST: the final drained state stays scrapeable until
+            # every ticket is answered
+            self.exporter.close()
         return snap
 
     def _shed_after_drain(self, ticket: Ticket) -> None:
-        with self._lock:
-            self._counts["shed"] += 1
+        latency = time.monotonic() - ticket.t_submit
+        self._c_requests.labels(status="shed").inc()
+        self._lat_hist.labels(status="shed").observe(latency)
         self.telemetry.counter("frontend.shed")
         self.telemetry.event("shed", reason="drain_timeout", detail="",
                              sources=len(ticket.source_ids))
         ticket._complete(Response(
             status=RequestStatus.SHED, decisions=None,
-            reason="drain_timeout",
-            latency_s=time.monotonic() - ticket.t_submit))
+            reason="drain_timeout", latency_s=latency))
 
     def install_signal_handlers(self, signals=(signal.SIGTERM,)) -> None:
         """Drain gracefully on SIGTERM (call from the main thread only —
@@ -478,30 +535,41 @@ class ServerFrontend:
 
     # -- observability ----------------------------------------------------
     def stats(self) -> FrontendStats:
+        """Point-in-time stats; OK quantiles are bucket-estimated from
+        the shared `repro_frontend_latency_seconds{status="ok"}`
+        histogram (`HistogramSnapshot.quantile` — the one quantile
+        implementation, DESIGN.md §13)."""
         with self._lock:
-            counts = dict(self._counts)
             depth = len(self._queue)
             ema = self._ema_batch_s
-            lat = np.asarray(self._ok_latencies)
+        ok_snap = self._lat_hist.labels(status="ok").snapshot()
         return FrontendStats(
-            submitted=counts["submitted"], admitted=counts["admitted"],
-            ok=counts["ok"], shed=counts["shed"],
-            timeout=counts["timeout"], error=counts["error"],
-            batches=counts["batches"], queue_depth=depth,
+            submitted=int(self._c_submitted.value),
+            admitted=int(self._c_admitted.value),
+            ok=int(self._c_requests.labels(status="ok").value),
+            shed=int(self._c_requests.labels(status="shed").value),
+            timeout=int(self._c_requests.labels(status="timeout").value),
+            error=int(self._c_requests.labels(status="error").value),
+            batches=int(self._c_batches.value), queue_depth=depth,
             ema_batch_ms=ema * 1e3,
-            ok_p50_ms=float(np.percentile(lat, 50) * 1e3) if lat.size
-            else 0.0,
-            ok_p99_ms=float(np.percentile(lat, 99) * 1e3) if lat.size
-            else 0.0)
+            ok_p50_ms=ok_snap.quantile(0.50) * 1e3,
+            ok_p99_ms=ok_snap.quantile(0.99) * 1e3)
 
     def metrics_snapshot(self) -> Dict[str, float]:
         """Lifetime-monotonic counters + gauges, the same scrape contract
-        as `AllocationServer.metrics_snapshot` (counters never rewind)."""
+        as `AllocationServer.metrics_snapshot` (counters never rewind);
+        the counters are the same registry families `/metrics` serves."""
         with self._lock:
-            counts = dict(self._counts)
             depth = len(self._queue)
             ema = self._ema_batch_s
-        snap = {f"{k}_total": v for k, v in counts.items()}
+        snap: Dict[str, float] = {
+            "submitted_total": int(self._c_submitted.value),
+            "admitted_total": int(self._c_admitted.value),
+            "batches_total": int(self._c_batches.value),
+        }
+        for status in ("ok", "shed", "timeout", "error"):
+            snap[f"{status}_total"] = int(
+                self._c_requests.labels(status=status).value)
         snap["queue_depth"] = depth
         snap["ema_batch_s"] = ema
         snap["draining"] = 1 if self._draining else 0

@@ -58,6 +58,7 @@ import jax.numpy as jnp
 from repro.core import Maximizer, SolveConfig, StoppingCriteria
 from repro.core.types import SolveResult, StopReason
 from repro.obs import Telemetry
+from repro.obs.metrics import DEFAULT_LATENCY_BUCKETS, MetricsRegistry
 
 from .extract import primal_rows_fn
 
@@ -79,7 +80,12 @@ class QueryStats(NamedTuple):
     the server's lifetime, `consecutive_failures` the current streak,
     `staleness_s` how long the served λ has gone without a successful
     refresh, and `degraded` whether the server is currently answering
-    from a last-good λ after at least one failed refresh."""
+    from a last-good λ after at least one failed refresh.
+
+    Quantiles are bucket-estimated from the shared
+    `repro_server_query_latency_seconds` histogram (the one quantile
+    implementation, `HistogramSnapshot.quantile` — DESIGN.md §13), over
+    the window since construction / the last `reset_stats()`."""
 
     queries: int
     sources: int
@@ -140,7 +146,8 @@ class AllocationServer:
     def __init__(self, obj, lam, gamma, config: Optional[SolveConfig] = None,
                  max_batch: int = 256, retry_backoff_s: float = 1.0,
                  max_backoff_s: float = 60.0,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self._serving = _build_serving(obj, lam)
         self.gamma = jnp.asarray(gamma, jnp.float32)
         self.config = config
@@ -149,17 +156,46 @@ class AllocationServer:
                           else Telemetry.disabled())
         self._stats_lock = threading.Lock()
         self._resolve_lock = threading.Lock()
-        self._latencies = []
+        # the scrapeable plane (DESIGN.md §13): counters and the shared
+        # latency histogram live in a MetricsRegistry — private per server
+        # by default, so co-resident servers/tests never merge series;
+        # pass one registry explicitly to aggregate (the frontend reuses
+        # the server's so one /metrics endpoint covers both)
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._lat_hist = self.registry.histogram(
+            "repro_server_query_latency_seconds",
+            "Microbatch query wall-clock latency (routing + device "
+            "compute + readback).", buckets=DEFAULT_LATENCY_BUCKETS)
+        # `stats()` windows are snapshot deltas against this mark — the
+        # scraped series stays lifetime-monotonic across reset_stats()
+        self._lat_mark = self._lat_hist.snapshot()
         self._sources_served = 0
         # lifetime-monotonic counters (metrics_snapshot): unlike the
         # latency window, these survive reset_stats() — a scrape target
         # must never see a counter go backwards
-        self._metrics: Dict[str, int] = {
-            "queries_total": 0, "sources_total": 0,
-            "resolve_attempts_total": 0, "resolve_failures_total": 0,
-            "resolve_successes_total": 0, "resolve_skipped_total": 0,
-            "warmup_kernels_total": 0,
-        }
+        self._c_queries = self.registry.counter(
+            "repro_server_queries_total", "Microbatch queries served.")
+        self._c_sources = self.registry.counter(
+            "repro_server_sources_total", "Sources served across queries.")
+        self._c_resolves = self.registry.counter(
+            "repro_server_resolves_total",
+            "warm_resolve outcomes by class.", labels=("outcome",))
+        self._c_warmup = self.registry.counter(
+            "repro_server_warmup_kernels_total",
+            "Query kernels compiled by warmup passes.")
+        self.registry.gauge(
+            "repro_server_degraded",
+            "1 while serving a last-good λ after a failed refresh."
+        ).set_function(lambda: 1.0 if self._consec_failures > 0 else 0.0)
+        self.registry.gauge(
+            "repro_server_consecutive_failures",
+            "Current warm_resolve failure streak."
+        ).set_function(lambda: float(self._consec_failures))
+        self.registry.gauge(
+            "repro_server_resolve_staleness_seconds",
+            "Seconds since the served λ last refreshed successfully."
+        ).set_function(
+            lambda: time.monotonic() - self._last_good_update)
         # degraded-mode bookkeeping: failed warm_resolves never disturb the
         # served (obj, λ) pair; retries are gated by exponential backoff
         self.retry_backoff_s = float(retry_backoff_s)
@@ -220,8 +256,7 @@ class AllocationServer:
                 if length >= cap:
                     break
                 length *= 2
-        with self._stats_lock:
-            self._metrics["warmup_kernels_total"] += compiled
+        self._c_warmup.inc(compiled)
         return compiled
 
     def query(self, source_ids: Sequence[int]) -> Dict[int, DecisionRow]:
@@ -259,36 +294,39 @@ class AllocationServer:
                             dest_idx=srv.dest[si][row],
                             mask=srv.mask[si][row], x=xr)
         dt = time.perf_counter() - t0
+        self._lat_hist.observe(dt)
+        self._c_queries.inc()
+        self._c_sources.inc(len(out))
         with self._stats_lock:
-            self._latencies.append(dt)
             self._sources_served += len(out)
-            self._metrics["queries_total"] += 1
-            self._metrics["sources_total"] += len(out)
         return out
 
     def stats(self) -> QueryStats:
         with self._stats_lock:
-            lat = np.asarray(self._latencies)
+            window = self._lat_hist.snapshot() - self._lat_mark
             sources = self._sources_served
         health = dict(
             resolve_failures=self._resolve_failures,
             consecutive_failures=self._consec_failures,
             staleness_s=time.monotonic() - self._last_good_update,
             degraded=self._consec_failures > 0)
-        if not lat.size:
+        if not window.count:
             return QueryStats(0, 0, 0.0, 0.0, 0.0, 0.0, **health)
-        total = float(lat.sum())
+        total = window.sum
         return QueryStats(
-            queries=len(lat), sources=sources,
-            mean_ms=float(lat.mean() * 1e3),
-            p50_ms=float(np.percentile(lat, 50) * 1e3),
-            p95_ms=float(np.percentile(lat, 95) * 1e3),
+            queries=window.count, sources=sources,
+            mean_ms=window.mean * 1e3,
+            p50_ms=window.quantile(0.50) * 1e3,
+            p95_ms=window.quantile(0.95) * 1e3,
             sources_per_s=sources / total if total else 0.0,
             **health)
 
     def reset_stats(self):
+        """Start a fresh `stats()` window.  The scraped histogram series
+        is NOT reset — windows are snapshot deltas, so the /metrics plane
+        stays lifetime-monotonic (DESIGN.md §13)."""
         with self._stats_lock:
-            self._latencies = []
+            self._lat_mark = self._lat_hist.snapshot()
             self._sources_served = 0
 
     def metrics_snapshot(self) -> Dict[str, float]:
@@ -297,11 +335,19 @@ class AllocationServer:
         Unlike `stats()` (whose window `reset_stats()` clears), the
         `*_total` counters here only ever increase over the server's
         lifetime — a scrape target must never see a counter go backwards.
-        Gauges (`degraded`, `staleness_s`, `consecutive_failures`) carry
-        the current health surface of DESIGN.md §9.
+        The counters are the same registry families `/metrics` serves;
+        this dict view keeps its historical keys.  Gauges (`degraded`,
+        `staleness_s`, `consecutive_failures`) carry the current health
+        surface of DESIGN.md §9.
         """
-        with self._stats_lock:
-            snap: Dict[str, float] = dict(self._metrics)
+        snap: Dict[str, float] = {
+            "queries_total": int(self._c_queries.value),
+            "sources_total": int(self._c_sources.value),
+            "warmup_kernels_total": int(self._c_warmup.value),
+        }
+        for outcome in ("attempts", "failures", "successes", "skipped"):
+            snap[f"resolve_{outcome}_total"] = int(
+                self._c_resolves.labels(outcome=outcome).value)
         snap["degraded"] = 1 if self._consec_failures > 0 else 0
         snap["consecutive_failures"] = self._consec_failures
         snap["staleness_s"] = time.monotonic() - self._last_good_update
@@ -328,8 +374,7 @@ class AllocationServer:
                                                      - 1),
                       self.max_backoff_s)
         self._next_retry_at = time.monotonic() + backoff
-        with self._stats_lock:
-            self._metrics["resolve_failures_total"] += 1
+        self._c_resolves.labels(outcome="failures").inc()
         self.telemetry.event("resolve", outcome="reject", reason=reason,
                              consecutive_failures=self._consec_failures,
                              backoff_s=backoff)
@@ -375,8 +420,7 @@ class AllocationServer:
                 f"{tuple(obj.dual_shape)} != served "
                 f"{tuple(self.obj.dual_shape)}")
         if not self._resolve_lock.acquire(blocking=False):
-            with self._stats_lock:
-                self._metrics["resolve_skipped_total"] += 1
+            self._c_resolves.labels(outcome="skipped").inc()
             self.telemetry.event("resolve", outcome="skipped",
                                  reason="in_flight")
             return None
@@ -389,13 +433,11 @@ class AllocationServer:
     def _resolve_locked(self, criteria, obj, config, require_certificate,
                         force) -> Optional[SolveResult]:
         if not force and time.monotonic() < self._next_retry_at:
-            with self._stats_lock:
-                self._metrics["resolve_skipped_total"] += 1
+            self._c_resolves.labels(outcome="skipped").inc()
             self.telemetry.event("resolve", outcome="skipped",
                                  reason="backoff")
             return None
-        with self._stats_lock:
-            self._metrics["resolve_attempts_total"] += 1
+        self._c_resolves.labels(outcome="attempts").inc()
         swapped = obj is not None
         target = obj if swapped else self.obj
         cfg = config or self.config or SolveConfig()
@@ -436,8 +478,7 @@ class AllocationServer:
         self._consec_failures = 0
         self._next_retry_at = 0.0
         self._last_good_update = time.monotonic()
-        with self._stats_lock:
-            self._metrics["resolve_successes_total"] += 1
+        self._c_resolves.labels(outcome="successes").inc()
         self.telemetry.event("resolve", outcome="accept",
                              iterations=int(res.iterations_run),
                              stop_reason=str(res.stop_reason.name),

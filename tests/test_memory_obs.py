@@ -1,0 +1,266 @@
+"""Resource observability: the memory sampler through every layer.
+
+DESIGN.md §13.  The contract under test:
+
+  - host/device probes degrade gracefully (None, never an exception) and
+    the host RSS reads are real (positive, peak >= current);
+  - the engine emits schema-valid `memory` events at chunk boundaries
+    and stamps run-level peak watermarks into the manifest;
+  - the house standard holds: a solve with the sampler attached is
+    BITWISE identical to one without (the sampler only reads procfs and
+    allocator stats at host-sync points, it never touches the trace);
+  - the RSS soft guard fires a leveled warning plus a flagged `memory`
+    event exactly once per excursion (latched, re-armed on recovery);
+  - the streaming extract/certify paths record peak host bytes;
+  - the frontend's `metrics_port` stands up a live, scrapeable /metrics
+    plane that carries the memory gauges and closes on drain.
+"""
+from __future__ import annotations
+
+import os
+import urllib.request
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (InstanceSpec, MatchingObjective, Maximizer,
+                        SolveConfig, StoppingCriteria, generate,
+                        precondition)
+from repro.obs import (ListSink, MemorySampler, MetricsRegistry, Telemetry,
+                       compiled_memory_estimate, device_memory_stats,
+                       host_peak_rss_bytes, host_rss_bytes, parse_exposition,
+                       register_memory_gauges, validate_event)
+
+
+@pytest.fixture(scope="module")
+def lp():
+    spec = InstanceSpec(num_sources=30, num_destinations=8,
+                        avg_nnz_per_row=10, seed=3)
+    lp = jax.tree.map(jnp.asarray, generate(spec))
+    lp, _ = precondition(lp, row_norm=True)
+    return lp
+
+
+CFG = SolveConfig(iterations=120, gamma=0.1, max_step=10.0,
+                  initial_step=1e-3)
+CRIT = StoppingCriteria(tol_grad_norm=0.0, check_every=7)
+
+
+def _recording():
+    sink = ListSink()
+    return Telemetry(sink=sink, stream=open(os.devnull, "w")), sink
+
+
+def _assert_same_result(a, b):
+    np.testing.assert_array_equal(np.asarray(a.lam), np.asarray(b.lam))
+    for x, y in zip(a.stats, b.stats):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert a.iterations_run == b.iterations_run
+    assert a.stop_reason == b.stop_reason
+
+
+# --------------------------------------------------------------------------
+# probes
+# --------------------------------------------------------------------------
+
+class TestProbes:
+    def test_host_rss_positive(self):
+        rss = host_rss_bytes()
+        assert rss is not None and rss > 0
+
+    def test_host_peak_at_least_current(self):
+        assert host_peak_rss_bytes() >= host_rss_bytes()
+
+    def test_device_stats_never_raise(self):
+        stats = device_memory_stats()
+        # CPU backends report None; accelerator backends a bytes dict
+        assert stats is None or stats.get("bytes_in_use", 0) >= 0
+
+    def test_compiled_memory_estimate(self):
+        compiled = jax.jit(lambda x: x * 2 + 1).lower(
+            jnp.ones((16,))).compile()
+        est = compiled_memory_estimate(compiled)
+        assert est is not None
+        assert est["source"] in ("memory_analysis", "hlo_cost")
+
+    def test_register_memory_gauges_renders_live_rss(self):
+        r = MetricsRegistry()
+        register_memory_gauges(r)
+        series = parse_exposition(r.render())
+        assert series["repro_memory_host_rss_bytes"] > 0
+        assert (series["repro_memory_host_peak_rss_bytes"]
+                >= series["repro_memory_host_rss_bytes"])
+
+
+# --------------------------------------------------------------------------
+# sampler
+# --------------------------------------------------------------------------
+
+class TestSampler:
+    def test_sample_accumulates_watermarks(self):
+        s = MemorySampler()
+        s.sample(where="a")
+        s.sample(where="b")
+        marks = s.watermarks()
+        assert marks["memory_samples"] == 2
+        assert marks["peak_rss_bytes"] > 0
+
+    def test_event_fields_match_schema(self):
+        s = MemorySampler()
+        fields = MemorySampler.event_fields(s.sample(where="t"))
+        validate_event({"type": "memory", "t": 0.0, **fields})
+
+    def test_rss_guard_fires_once_per_excursion(self):
+        tel, sink = _recording()
+        s = MemorySampler(telemetry=tel, max_host_rss_bytes=1)
+        s.sample(where="t1")
+        s.sample(where="t2")     # latched: no second event while high
+        guard = [r for r in sink.records
+                 if r["type"] == "memory" and r.get("reason") == "rss_guard"]
+        warnings = [r for r in sink.records
+                    if r["type"] == "log" and r.get("level") == "warning"]
+        assert len(guard) == 1
+        assert len(warnings) == 1
+        assert guard[0]["where"] == "t1"
+        assert "--max-host-rss-mb" in warnings[0]["msg"]
+
+    def test_rss_guard_silent_under_bound(self):
+        tel, sink = _recording()
+        s = MemorySampler(telemetry=tel, max_host_rss_bytes=1 << 60)
+        s.sample(where="t")
+        assert not [r for r in sink.records
+                    if r.get("reason") == "rss_guard"]
+
+
+# --------------------------------------------------------------------------
+# engine integration
+# --------------------------------------------------------------------------
+
+class TestEngine:
+    def test_chunked_solve_emits_memory_events(self, lp):
+        obj = MatchingObjective(lp)
+        tel, sink = _recording()
+        sampler = MemorySampler(telemetry=tel)
+        res = Maximizer(CFG).maximize(obj, criteria=CRIT, telemetry=tel,
+                                      sampler=sampler)
+        mem = [r for r in sink.records if r["type"] == "memory"]
+        assert mem, "no memory events from the chunked engine"
+        for r in mem:
+            validate_event(r)
+            assert r["peak_rss_bytes"] > 0
+        # one event per chunk boundary, stamped with the iteration count
+        assert mem[-1]["it"] == res.iterations_run
+        manifest = [r for r in sink.records if r["type"] == "manifest"][-1]
+        for key in ("peak_rss_bytes", "peak_hbm_bytes",
+                    "compiled_peak_bytes", "memory_samples"):
+            assert key in manifest
+        assert manifest["peak_rss_bytes"] > 0
+        assert manifest["compiled_peak_bytes"] > 0
+
+    def test_fast_path_emits_memory_event(self, lp):
+        obj = MatchingObjective(lp)
+        tel, sink = _recording()
+        res = Maximizer(CFG).maximize(obj, telemetry=tel,
+                                      sampler=MemorySampler(telemetry=tel))
+        mem = [r for r in sink.records if r["type"] == "memory"]
+        assert len(mem) == 1 and mem[0]["it"] == res.iterations_run
+
+    def test_sampler_keeps_solve_bitwise_identical(self, lp):
+        obj = MatchingObjective(lp)
+        for criteria in (None, CRIT):
+            plain = Maximizer(CFG).maximize(obj, criteria=criteria)
+            tel, _ = _recording()
+            sampled = Maximizer(CFG).maximize(
+                obj, criteria=criteria, telemetry=tel,
+                sampler=MemorySampler(telemetry=tel))
+            _assert_same_result(plain, sampled)
+
+
+# --------------------------------------------------------------------------
+# streaming extract / certify
+# --------------------------------------------------------------------------
+
+class TestStreaming:
+    def test_extract_samples_and_stays_bitwise(self, lp):
+        from repro import primal
+        obj = MatchingObjective(lp)
+        res = Maximizer(CFG).maximize(obj)
+        gamma = jnp.float32(CFG.gamma)
+        plain = primal.extract_primal(obj, res.lam, gamma, chunk_rows=8)
+        sampler = MemorySampler()
+        sampled = primal.extract_primal(obj, res.lam, gamma, chunk_rows=8,
+                                        sampler=sampler)
+        for a, b in zip(plain, sampled):
+            np.testing.assert_array_equal(a, b)
+        marks = sampler.watermarks()
+        assert marks["memory_samples"] > 1    # one per chunk
+        assert marks["peak_rss_bytes"] > 0
+
+    def test_certify_samples(self, lp):
+        from repro import primal
+        obj = MatchingObjective(lp)
+        res = Maximizer(CFG).maximize(obj)
+        sampler = MemorySampler()
+        cert = primal.certify(obj, res.lam, jnp.float32(CFG.gamma),
+                              chunk_rows=8, sampler=sampler)
+        assert cert.gap is not None
+        assert sampler.watermarks()["memory_samples"] > 1
+
+
+# --------------------------------------------------------------------------
+# frontend live plane
+# --------------------------------------------------------------------------
+
+class TestFrontendMetricsPlane:
+    def test_metrics_port_serves_and_closes_on_drain(self, lp):
+        from repro import primal
+        from repro.primal import FrontendConfig, ServerFrontend
+        obj = MatchingObjective(lp)
+        res = Maximizer(CFG).maximize(obj)
+        srv = primal.AllocationServer(obj, res.lam, jnp.float32(CFG.gamma),
+                                      max_batch=8)
+        fe = ServerFrontend(srv, FrontendConfig(metrics_port=0))
+        try:
+            assert fe.exporter is not None and fe.exporter.port != 0
+            # generous deadline: the first batch pays the compile
+            fe.query(srv.source_ids()[:4].tolist(), deadline_s=60.0,
+                     timeout=60.0)
+            with urllib.request.urlopen(fe.exporter.url,
+                                        timeout=10.0) as resp:
+                series = parse_exposition(resp.read().decode("utf-8"))
+            for name in (
+                    'repro_frontend_requests_total{status="ok"}',
+                    'repro_frontend_requests_total{status="shed"}',
+                    "repro_frontend_queue_depth",
+                    "repro_memory_host_rss_bytes",
+                    "repro_server_query_latency_seconds_count",
+                    'repro_frontend_latency_seconds_bucket'
+                    '{status="ok",le="+Inf"}'):
+                assert name in series, f"missing series {name}"
+            assert series['repro_frontend_requests_total{status="ok"}'] == 1
+            assert series["repro_memory_host_rss_bytes"] > 0
+            url = fe.exporter.url
+        finally:
+            fe.drain()
+        with pytest.raises(Exception):
+            urllib.request.urlopen(url, timeout=2.0)
+
+    def test_drain_flushes_metrics_digest(self, lp):
+        from repro import primal
+        from repro.primal import FrontendConfig, ServerFrontend
+        obj = MatchingObjective(lp)
+        res = Maximizer(CFG).maximize(obj)
+        srv = primal.AllocationServer(obj, res.lam, jnp.float32(CFG.gamma),
+                                      max_batch=8)
+        tel, sink = _recording()
+        fe = ServerFrontend(srv, FrontendConfig(), telemetry=tel)
+        fe.query(srv.source_ids()[:4].tolist(), deadline_s=60.0,
+                 timeout=60.0)
+        fe.drain()
+        digests = [r for r in sink.records if r["type"] == "metrics"]
+        assert len(digests) == 1
+        series = digests[0]["series"]
+        assert "repro_frontend_requests_total" in series
+        assert "repro_server_query_latency_seconds" in series

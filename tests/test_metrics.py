@@ -1,0 +1,302 @@
+"""The metrics plane: registry semantics, Prometheus exposition, exporter.
+
+DESIGN.md §13.  The contract under test:
+
+  - one quantile implementation: `HistogramSnapshot.quantile` is the
+    repo's ONLY percentile math (server/frontend stats both ride on it),
+    so its estimates are pinned here against known distributions;
+  - golden exposition: render() output is byte-exact for a fixed
+    registry — HELP/TYPE lines, label-value escaping, cumulative `le`
+    buckets ending at +Inf, `_sum`/`_count`;
+  - `parse_exposition` is strict: it rejects the malformed expositions a
+    sloppy renderer could emit (duplicate series, non-monotone buckets,
+    +Inf != _count, samples without HELP/TYPE) — it is the CI smoke's
+    gate, so its own teeth are tested;
+  - the exporter serves the live registry over real HTTP while writer
+    threads are mid-update (the scrape-during-update race, in the style
+    of test_telemetry.py::TestThreadSafety).
+"""
+from __future__ import annotations
+
+import math
+import threading
+import urllib.request
+
+import pytest
+
+from repro.obs import (DEFAULT_LATENCY_BUCKETS, ExpositionError,
+                       MetricsExporter, MetricsRegistry, parse_exposition)
+
+
+# --------------------------------------------------------------------------
+# registry semantics
+# --------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_counter_accumulates_and_rejects_negative(self):
+        r = MetricsRegistry()
+        c = r.counter("c_total", "help")
+        c.inc()
+        c.inc(2.5)
+        assert c.value == 3.5
+        with pytest.raises(ValueError):
+            c.inc(-1)
+
+    def test_get_or_create_returns_same_family(self):
+        r = MetricsRegistry()
+        a = r.counter("x_total", "help")
+        b = r.counter("x_total", "different help is fine")
+        assert a is b
+
+    def test_kind_mismatch_raises(self):
+        r = MetricsRegistry()
+        r.counter("x_total", "help")
+        with pytest.raises(ValueError):
+            r.gauge("x_total", "help")
+
+    def test_label_mismatch_raises(self):
+        r = MetricsRegistry()
+        r.counter("x_total", "help", labels=("a",))
+        with pytest.raises(ValueError):
+            r.counter("x_total", "help", labels=("b",))
+
+    def test_gauge_set_function_evaluated_at_render(self):
+        r = MetricsRegistry()
+        box = {"v": 1.0}
+        r.gauge("g", "help").set_function(lambda: box["v"])
+        assert 'g 1' in r.render()
+        box["v"] = 7.5
+        assert 'g 7.5' in r.render()
+
+    def test_labeled_children_are_distinct(self):
+        r = MetricsRegistry()
+        c = r.counter("c_total", "help", labels=("status",))
+        c.labels(status="ok").inc(2)
+        c.labels(status="shed").inc()
+        assert c.labels(status="ok").value == 2
+        assert c.labels(status="shed").value == 1
+
+
+# --------------------------------------------------------------------------
+# histogram + quantile math (the repo's single percentile implementation)
+# --------------------------------------------------------------------------
+
+class TestHistogram:
+    def test_bucket_assignment_inclusive_le(self):
+        r = MetricsRegistry()
+        h = r.histogram("h", "help", buckets=(1.0, 2.0))
+        h.observe(1.0)       # le="1" is inclusive
+        snap = h.snapshot()
+        assert snap.counts[0] == 1 and snap.counts[1] == 0
+
+    def test_sum_count_mean(self):
+        r = MetricsRegistry()
+        h = r.histogram("h", "help", buckets=(1.0, 10.0))
+        for v in (0.5, 2.0, 20.0):
+            h.observe(v)
+        snap = h.snapshot()
+        assert snap.count == 3
+        assert snap.sum == pytest.approx(22.5)
+        assert snap.mean == pytest.approx(7.5)
+
+    def test_quantile_uniform(self):
+        # 1000 uniform samples over [0, 1): every estimated percentile
+        # must land within one bucket width of the true value
+        r = MetricsRegistry()
+        h = r.histogram("h", "help",
+                        buckets=tuple(i / 20 for i in range(1, 20)))
+        for i in range(1000):
+            h.observe((i + 0.5) / 1000)
+        snap = h.snapshot()
+        for q in (0.25, 0.5, 0.9, 0.95, 0.99):
+            assert snap.quantile(q) == pytest.approx(q, abs=0.05)
+
+    def test_quantile_clamps_to_last_finite_bound(self):
+        r = MetricsRegistry()
+        h = r.histogram("h", "help", buckets=(1.0,))
+        h.observe(100.0)     # lands in +Inf
+        assert h.snapshot().quantile(0.99) == 1.0
+
+    def test_quantile_empty_is_zero(self):
+        # documented: an empty window reports 0.0 (matching the serving
+        # stats' historical behavior), never NaN into a dashboard
+        r = MetricsRegistry()
+        h = r.histogram("h", "help", buckets=(1.0,))
+        assert h.snapshot().quantile(0.5) == 0.0
+
+    def test_snapshot_delta_windows(self):
+        # stats windows subtract snapshots; the scraped series itself
+        # stays lifetime-monotonic
+        r = MetricsRegistry()
+        h = r.histogram("h", "help", buckets=(1.0, 2.0))
+        h.observe(0.5)
+        mark = h.snapshot()
+        h.observe(1.5)
+        window = h.snapshot() - mark
+        assert window.count == 1
+        assert window.sum == pytest.approx(1.5)
+        assert h.snapshot().count == 2
+
+    def test_default_latency_buckets_sorted(self):
+        assert list(DEFAULT_LATENCY_BUCKETS) == sorted(
+            DEFAULT_LATENCY_BUCKETS)
+
+
+# --------------------------------------------------------------------------
+# exposition: golden render + strict parser
+# --------------------------------------------------------------------------
+
+GOLDEN = """\
+# HELP req_total Requests, by status.
+# TYPE req_total counter
+req_total{status="ok"} 3
+req_total{status="she\\"d\\\\"} 1
+# HELP temp Current temperature.
+# TYPE temp gauge
+temp 21.5
+# HELP lat_seconds Latency.
+# TYPE lat_seconds histogram
+lat_seconds_bucket{le="0.1"} 2
+lat_seconds_bucket{le="1"} 3
+lat_seconds_bucket{le="+Inf"} 4
+lat_seconds_sum 3.65
+lat_seconds_count 4
+"""
+
+
+def golden_registry() -> MetricsRegistry:
+    r = MetricsRegistry()
+    c = r.counter("req_total", "Requests, by status.", labels=("status",))
+    c.labels(status="ok").inc(3)
+    c.labels(status='she"d\\').inc()     # exercises label-value escaping
+    r.gauge("temp", "Current temperature.").set(21.5)
+    h = r.histogram("lat_seconds", "Latency.", buckets=(0.1, 1.0))
+    for v in (0.05, 0.1, 0.5, 3.0):
+        h.observe(v)
+    return r
+
+
+class TestExposition:
+    def test_golden_render(self):
+        assert golden_registry().render() == GOLDEN
+
+    def test_golden_parses_back(self):
+        series = parse_exposition(GOLDEN)
+        assert series['req_total{status="ok"}'] == 3
+        assert series['lat_seconds_bucket{le="+Inf"}'] == 4
+        assert series["lat_seconds_sum"] == pytest.approx(3.65)
+
+    def test_help_escaping(self):
+        r = MetricsRegistry()
+        r.counter("c_total", "line\none \\ two")
+        text = r.render()
+        assert "# HELP c_total line\\none \\\\ two" in text
+        parse_exposition(text)
+
+    def test_parser_rejects_duplicate_series(self):
+        with pytest.raises(ExpositionError):
+            parse_exposition("# HELP a h\n# TYPE a counter\na 1\na 2\n")
+
+    def test_parser_rejects_nonmonotone_buckets(self):
+        bad = ("# HELP h x\n# TYPE h histogram\n"
+               'h_bucket{le="1"} 5\nh_bucket{le="+Inf"} 3\n'
+               "h_sum 1\nh_count 3\n")
+        with pytest.raises(ExpositionError):
+            parse_exposition(bad)
+
+    def test_parser_rejects_inf_bucket_count_mismatch(self):
+        bad = ("# HELP h x\n# TYPE h histogram\n"
+               'h_bucket{le="1"} 1\nh_bucket{le="+Inf"} 2\n'
+               "h_sum 1\nh_count 3\n")
+        with pytest.raises(ExpositionError):
+            parse_exposition(bad)
+
+    def test_parser_rejects_sample_without_metadata(self):
+        with pytest.raises(ExpositionError):
+            parse_exposition("orphan 1\n")
+
+    def test_render_parses_under_every_family_kind(self):
+        # any registry this repo builds must round-trip its own parser
+        series = parse_exposition(golden_registry().render())
+        assert len(series) == 8
+
+    def test_summary_digest_matches_series(self):
+        r = golden_registry()
+        digest = r.summary()
+        assert digest["req_total"]["type"] == "counter"
+        assert digest["req_total"]["series"]["status=ok"] == 3
+        hist = digest["lat_seconds"]["series"][""]
+        assert hist["count"] == 4
+        assert hist["sum"] == pytest.approx(3.65)
+
+
+# --------------------------------------------------------------------------
+# exporter: live HTTP + the scrape-during-update race
+# --------------------------------------------------------------------------
+
+class TestExporter:
+    def test_http_round_trip_on_ephemeral_port(self):
+        r = golden_registry()
+        with MetricsExporter(r, port=0) as exp:
+            assert exp.port != 0
+            with urllib.request.urlopen(exp.url, timeout=10.0) as resp:
+                body = resp.read().decode("utf-8")
+        assert body == GOLDEN
+
+    def test_404_off_path(self):
+        with MetricsExporter(MetricsRegistry(), port=0) as exp:
+            url = exp.url.replace("/metrics", "/nope")
+            with pytest.raises(urllib.error.HTTPError):
+                urllib.request.urlopen(url, timeout=10.0)
+
+    def test_close_is_idempotent(self):
+        exp = MetricsExporter(MetricsRegistry(), port=0)
+        exp.close()
+        exp.close()
+
+    def test_scrape_during_update_race(self):
+        """8 writer threads hammer counters + a histogram while scrapes
+        stream through the live HTTP endpoint: every scrape must parse
+        strictly (no torn lines, monotone buckets, +Inf == _count), and
+        the final totals must show zero lost increments."""
+        n_threads, n_each = 8, 200
+        r = MetricsRegistry()
+        c = r.counter("race_total", "increments", labels=("worker",))
+        h = r.histogram("race_seconds", "latencies", buckets=(0.25, 0.5,
+                                                              0.75))
+        start = threading.Barrier(n_threads + 1)
+        failures = []
+
+        def writer(k):
+            start.wait()
+            child = c.labels(worker=str(k))
+            for i in range(n_each):
+                child.inc()
+                h.observe((i % 100) / 100.0)
+
+        with MetricsExporter(r, port=0) as exp:
+            threads = [threading.Thread(target=writer, args=(k,))
+                       for k in range(n_threads)]
+            for t in threads:
+                t.start()
+            start.wait()
+            scrapes = 0
+            while any(t.is_alive() for t in threads):
+                try:
+                    with urllib.request.urlopen(exp.url,
+                                                timeout=10.0) as resp:
+                        parse_exposition(resp.read().decode("utf-8"))
+                    scrapes += 1
+                except ExpositionError as e:
+                    failures.append(str(e))
+                    break
+            for t in threads:
+                t.join(timeout=60.0)
+            with urllib.request.urlopen(exp.url, timeout=10.0) as resp:
+                final = parse_exposition(resp.read().decode("utf-8"))
+        assert not failures, f"mid-update scrape unparseable: {failures[0]}"
+        assert scrapes > 0
+        total = sum(v for k, v in final.items()
+                    if k.startswith("race_total{"))
+        assert total == n_threads * n_each
+        assert final["race_seconds_count"] == n_threads * n_each
